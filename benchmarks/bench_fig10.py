@@ -1,0 +1,46 @@
+"""Fig. 10 reproduction: execution time, AlexNet + VGG16 on Lightator.
+
+The electronic baselines (Eyeriss/YodaNN/AppCip/ENVISION) are represented by
+the paper's published speedup factors (we have no RTL for them); our numbers
+are the Lightator execution times computed from the OC schedule, and the
+derived baseline times they imply.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.power_model import PowerModel
+from repro.core.quant import W4A4
+from repro.models.vision import alexnet_ir, vgg16_ir, vision_schedules
+
+PAPER_SPEEDUPS_ALEXNET = {"Eyeriss": 10.7, "YodaNN": 20.4, "AppCip": 18.1,
+                          "ENVISION": 8.8}
+
+
+def run(csv=True):
+    pm = PowerModel()
+    out = []
+    results = {}
+    for name, ir, hw in (("alexnet", alexnet_ir(), 227),
+                         ("vgg16", vgg16_ir(), 224)):
+        t0 = time.perf_counter()
+        scheds = vision_schedules(ir, hw)
+        r = pm.model_report(scheds, W4A4)
+        us = (time.perf_counter() - t0) * 1e6
+        results[name] = r
+        total_cycles = sum(l.cycles + l.remap_cycles for l in r.layers)
+        out.append(f"bench_fig10.lightator.{name},{us:.1f},"
+                   f"exec_ms={r.exec_time_s*1e3:.3f};cycles={total_cycles};"
+                   f"fps={r.fps:.0f}")
+    for base, ratio in PAPER_SPEEDUPS_ALEXNET.items():
+        t = results["alexnet"].exec_time_s * ratio
+        out.append(f"bench_fig10.derived.{base},0.0,"
+                   f"alexnet_exec_ms={t*1e3:.3f};paper_speedup={ratio}x")
+    if csv:
+        print("\n".join(out))
+    return results
+
+
+if __name__ == "__main__":
+    run()

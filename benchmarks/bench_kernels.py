@@ -1,0 +1,73 @@
+"""Kernel micro-benchmarks: photonic_mvm / ca_pool / conv_bank vs oracles.
+
+Absolute times on this CPU container are interpret-mode (not TPU) — the
+meaningful outputs are correctness deltas and the MAC counts / arithmetic
+intensities recorded for the §Perf analysis.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quant import W4A4
+from repro.kernels.ca_pool.ops import ca_pool
+from repro.kernels.ca_pool.ref import ca_pool_ref
+from repro.kernels.conv_bank.ops import conv_bank
+from repro.kernels.conv_bank.ref import conv_bank_quant_ref
+from repro.kernels.photonic_mvm.ops import photonic_mvm
+from repro.kernels.photonic_mvm.ref import photonic_mvm_ref
+
+
+def _time(f, *args, reps=3):
+    f(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(csv=True):
+    out = []
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+
+    # photonic_mvm: a VGG9-fc1-shaped MVM
+    x = jax.random.normal(k1, (256, 1024))
+    w = jax.random.normal(k2, (1024, 512)) * 0.1
+    us_k = _time(lambda a, b: photonic_mvm(a, b, W4A4), x, w)
+    us_r = _time(lambda a, b: photonic_mvm_ref(a, b, W4A4), x, w)
+    err = float(jnp.max(jnp.abs(photonic_mvm(x, w, W4A4)
+                                - photonic_mvm_ref(x, w, W4A4))))
+    macs = 256 * 1024 * 512
+    out.append(f"bench_kernels.photonic_mvm,{us_k:.1f},"
+               f"ref_us={us_r:.1f};macs={macs};err={err:.1e}")
+
+    # ca_pool on a full sensor frame (256x256 RGB, the paper's imager)
+    img = jax.random.uniform(k1, (1, 256, 256, 3))
+    us_k = _time(lambda i: ca_pool(i, 2), img)
+    us_r = _time(lambda i: ca_pool_ref(i, 2), img)
+    err = float(jnp.max(jnp.abs(ca_pool(img, 2) - ca_pool_ref(img, 2))))
+    out.append(f"bench_kernels.ca_pool,{us_k:.1f},"
+               f"ref_us={us_r:.1f};taps={2*2*3};err={err:.1e}")
+
+    # conv_bank 3x3 (the OC's native kernel size)
+    xc = jax.random.uniform(k1, (4, 32, 32, 64))
+    wc = jax.random.normal(k2, (3, 3, 64, 64)) * 0.1
+    us_k = _time(lambda a, b: conv_bank(a, b, W4A4), xc, wc)
+    us_r = _time(lambda a, b: conv_bank_quant_ref(a, b, W4A4), xc, wc)
+    err = float(jnp.max(jnp.abs(conv_bank(xc, wc, W4A4)
+                                - conv_bank_quant_ref(xc, wc, W4A4))))
+    macs = 4 * 32 * 32 * 64 * 9 * 64
+    out.append(f"bench_kernels.conv_bank3x3,{us_k:.1f},"
+               f"ref_us={us_r:.1f};macs={macs};err={err:.1e}")
+    if csv:
+        print("\n".join(out))
+    return out
+
+
+if __name__ == "__main__":
+    run()

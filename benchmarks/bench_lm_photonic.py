@@ -1,0 +1,72 @@
+"""Beyond-paper: the Lightator OC cost model applied to the assigned LMs.
+
+The paper's architecture-level simulator prices any MVM in optical cycles
+(core.optical_core.schedule_matmul). This bench asks: what would one decode
+step of each (edge-scale) assigned LM cost on the 96-bank OC, and how does
+the [W:A] configuration trade power for accuracy headroom — the paper's
+Table-1 axes transplanted onto the LM architectures the framework serves.
+
+(The OC is a 5184-MAC edge device: only the sub-2B archs are edge-plausible;
+big archs are included as "cycles scale" reference rows.)
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.configs import get_config
+from repro.core import optical_core as ocore
+from repro.core.power_model import PowerModel
+from repro.core.quant import W4A4, W3A4, W2A4
+
+ARCHS = ["smollm-360m", "tinyllama-1.1b", "mamba2-1.3b", "hymba-1.5b",
+         "stablelm-3b", "yi-34b"]
+
+
+def decode_schedules(cfg):
+    """OC schedules for every projection touched by ONE decoded token."""
+    s = []
+    d = cfg.d_model
+    if cfg.family in ("dense", "moe", "encoder", "vlm", "hybrid"):
+        s.append(ocore.schedule_matmul("wq", 1, d, cfg.attn_dim))
+        s.append(ocore.schedule_matmul("wk", 1, d, cfg.kv_dim))
+        s.append(ocore.schedule_matmul("wv", 1, d, cfg.kv_dim))
+        s.append(ocore.schedule_matmul("wo", 1, cfg.attn_dim, d))
+    if cfg.family in ("ssm", "hybrid"):
+        gn = cfg.ssm_groups * cfg.ssm_state
+        s.append(ocore.schedule_matmul(
+            "ssm_in", 1, d, 2 * cfg.d_inner + 2 * gn + cfg.ssm_heads))
+        s.append(ocore.schedule_matmul("ssm_out", 1, cfg.d_inner, d))
+    if cfg.family != "ssm":
+        n_mats = 3 if cfg.ffn == "swiglu" else 2
+        for i in range(n_mats):
+            a, b = (d, cfg.d_ff) if i < n_mats - 1 else (cfg.d_ff, d)
+            s.append(ocore.schedule_matmul(f"ffn{i}", 1, a, b))
+    # one layer's schedules x n_layers: replicate by scaling cycles
+    return s
+
+
+def run(csv=True):
+    pm = PowerModel()
+    out = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        t0 = time.perf_counter()
+        per_layer = decode_schedules(cfg)
+        layer_cycles = sum(s.cycles + s.weight_remaps * 128 for s in per_layer)
+        total_cycles = layer_cycles * cfg.n_layers
+        us = (time.perf_counter() - t0) * 1e6
+        for spec, nm in ((W4A4, "4:4"), (W3A4, "3:4"), (W2A4, "2:4")):
+            rep = pm.model_report(per_layer * cfg.n_layers, spec)
+            out.append(
+                f"bench_lm_photonic.{arch}.[{nm}],{us:.0f},"
+                f"cycles_per_token={total_cycles};"
+                f"tok_per_s={rep.fps:.1f};avg_W={rep.avg_power_w:.2f};"
+                f"tok_per_J={rep.fps / max(rep.avg_power_w, 1e-9):.1f}")
+    if csv:
+        print("\n".join(out))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,67 @@
+"""Table 1 reproduction: power + kFPS/W for every Lightator [W:A] variant.
+
+Competitor rows are the published numbers from the paper (constants, marked
+"published") — our contribution is the Lightator rows, computed end-to-end
+from the OC scheduler + circuit power model on VGG9/CIFAR100 with CA.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.power_model import PowerModel
+from repro.core.quant import W4A4, W3A4, W2A4, MX_43, MX_42
+from repro.models.vision import vgg9_ir, vision_schedules
+
+PAPER = {   # scheme name -> (paper max power W, paper kFPS/W)
+    "Lightator [4:4]": (5.28, 61.61),
+    "Lightator [3:4]": (2.71, 117.65),
+    "Lightator [2:4]": (1.46, 188.24),
+    "Lightator-MX [4:4][3:4]": (3.64, 84.4),
+    "Lightator-MX [4:4][2:4]": (1.97, 126.6),
+}
+
+PUBLISHED_BASELINES = [
+    # name, process nm, max power W, kFPS/W  (Table 1 of the paper)
+    ("LightBulb [1:1]", 32, 68.3, 57.75),
+    ("HolyLight [4:4]", 32, 66.9, 3.3),
+    ("HQNNA", 45, None, 34.6),
+    ("Robin [1:4]", 45, 106.0, 46.5),
+    ("CrossLight [4:4]", 45, 390.0, 52.59),
+]
+
+
+def run(csv=True):
+    scheds = vision_schedules(vgg9_ir(use_ca=True, n_classes=100), 32)
+    pm = PowerModel()
+    rows = []
+    schemes = [("Lightator [4:4]", W4A4), ("Lightator [3:4]", W3A4),
+               ("Lightator [2:4]", W2A4),
+               ("Lightator-MX [4:4][3:4]", MX_43),
+               ("Lightator-MX [4:4][2:4]", MX_42)]
+    out_lines = []
+    for name, scheme in schemes:
+        t0 = time.perf_counter()
+        r = pm.model_report(scheds, scheme)
+        us = (time.perf_counter() - t0) * 1e6
+        p_ref, k_ref = PAPER[name]
+        p_err = abs(r.max_power_w - p_ref) / p_ref * 100
+        k_err = abs(r.kfps_per_w - k_ref) / k_ref * 100
+        rows.append((name, r.max_power_w, r.avg_power_w, r.kfps_per_w,
+                     p_ref, k_ref, p_err, k_err))
+        out_lines.append(
+            f"bench_table1.{name.replace(' ', '_')},{us:.1f},"
+            f"max_W={r.max_power_w:.2f};kfpsW={r.kfps_per_w:.1f};"
+            f"paper_W={p_ref};paper_kfpsW={k_ref};"
+            f"errW%={p_err:.1f};errK%={k_err:.1f}")
+    for name, nm, pw, kfps in PUBLISHED_BASELINES:
+        out_lines.append(
+            f"bench_table1.published.{name.replace(' ', '_')},0.0,"
+            f"max_W={pw};kfpsW={kfps};source=paper")
+    if csv:
+        print("\n".join(out_lines))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+#
+#   bench_table1    Table 1 (power + kFPS/W per [W:A] + published baselines)
+#   bench_fig8      Fig. 8  (LeNet layer-wise power breakdown)
+#   bench_fig9      Fig. 9  (VGG9 breakdown, DAC share, CA L1 reduction)
+#   bench_fig10     Fig. 10 (execution time, AlexNet/VGG16)
+#   bench_accuracy  Table 1 accuracy axis (QAT trend on synthetic digits)
+#   bench_kernels   Pallas kernels vs oracles
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (bench_table1, bench_fig8, bench_fig9,
+                            bench_fig10, bench_accuracy, bench_kernels,
+                            bench_lm_photonic)
+    bench_table1.run()
+    bench_fig8.run()
+    bench_fig9.run()
+    bench_fig10.run()
+    quick = "--quick" in sys.argv
+    bench_accuracy.run(steps=30 if quick else 40)
+    bench_kernels.run()
+    bench_lm_photonic.run()
+
+
+if __name__ == '__main__':
+    main()

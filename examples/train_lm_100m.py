@@ -1,0 +1,44 @@
+"""Train a ~100M-param LM for a few hundred steps (deliverable b: the
+end-to-end training driver at example scale).
+
+    PYTHONPATH=src python examples/train_lm_100m.py [--steps 300]
+
+Uses a 100M-ish slice of the smollm-360m family (12 layers, d=768) on the
+planted-bigram synthetic stream; checkpoints + straggler monitoring +
+failure-drill flags come from the same RestartableLoop the production
+driver uses. Expect a clear CE drop as the model learns the bigram rule.
+"""
+
+import argparse
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm100m")
+    args = ap.parse_args()
+    # a ~100M config: register a custom variant through the train driver
+    import dataclasses
+    import repro.configs.base as base
+    from repro.configs import get_config
+    cfg100 = dataclasses.replace(
+        get_config("smollm-360m"), name="smollm-100m", n_layers=12,
+        d_model=768, n_heads=12, n_kv_heads=4, head_dim=64, d_ff=2048,
+        vocab=8192, remat="none", max_seq=512)
+    smoke = dataclasses.replace(cfg100, name="smollm-100m-smoke")
+    base.register(cfg100, smoke)
+
+    # batch 4 x seq 128 keeps a CPU step ~20s; on a real mesh raise both.
+    losses = train_main([
+        "--arch", "smollm-100m", "--steps", str(args.steps),
+        "--batch", "4", "--seq", "128", "--lr", "1e-3",
+        "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "100",
+    ])
+    print(f"[example] first-10 mean CE {sum(losses[:10]) / 10:.3f} -> "
+          f"last-10 mean CE {sum(losses[-10:]) / 10:.3f}")
+
+
+if __name__ == "__main__":
+    main()

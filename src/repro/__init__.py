@@ -1,0 +1,15 @@
+"""repro — Lightator: optical near-sensor acceleration, reproduced as a JAX framework.
+
+Layers:
+  core/         the paper's contribution (photonic device models, quantization,
+                optical-core mapping, compressive acquisition, power model)
+  nn/, models/  model substrate (pure-functional JAX modules)
+  kernels/      Pallas TPU kernels for the perf-critical compute (photonic MVM,
+                compressive acquisition, bank-mapped convolution)
+  distributed/  sharding rules, collectives, fault tolerance, elastic scaling
+  optim/, checkpoint/, data/   training substrate
+  configs/      assigned architectures + the paper's own CNNs
+  launch/       production mesh, multi-pod dry-run, roofline, train/serve drivers
+"""
+
+__version__ = "1.0.0"

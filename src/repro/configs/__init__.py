@@ -1,0 +1,18 @@
+"""configs — assigned architectures (+ the paper's own CNNs).
+
+``get_config(name)`` resolves any registered architecture id, e.g.
+``get_config("yi-34b")`` or ``get_config("kimi-k2-1t-a32b")``.
+"""
+
+from repro.configs.base import (ModelConfig, register, get_config,
+                                list_configs, smoke_variant)
+
+# importing the modules registers their configs
+from repro.configs import (  # noqa: F401
+    hubert_xlarge, mamba2_1p3b, yi_34b, smollm_360m, tinyllama_1p1b,
+    stablelm_3b, hymba_1p5b, grok1_314b, kimi_k2, internvl2_26b,
+    vision_cnns,
+)
+
+__all__ = ["ModelConfig", "register", "get_config", "list_configs",
+           "smoke_variant"]

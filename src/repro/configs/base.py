@@ -1,0 +1,109 @@
+"""ModelConfig — the single config schema every architecture instantiates.
+
+Exact assigned configs live in sibling modules (one file per arch). Each
+registers itself plus a ``smoke`` variant (same family, tiny dims) used by
+the per-arch CPU smoke tests; the FULL configs are only ever lowered via
+ShapeDtypeStructs in the dry-run (never allocated).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | encoder | vlm
+    n_layers: int
+    d_model: int
+    vocab: int
+    # attention
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0
+    rope_theta: float = 10000.0
+    sliding_window: Optional[int] = None
+    causal: bool = True
+    # ffn
+    d_ff: int = 0
+    ffn: str = "swiglu"         # swiglu | gelu
+    norm: str = "rms"           # rms | layer
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    moe_dispatch: str = "sorted"     # sorted | grouped  (§Perf)
+    moe_combine_dtype: str = "none"  # none | float8_e4m3fn | bfloat16
+    # SSM (mamba2 / hybrid)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_groups: int = 1
+    conv_kernel: int = 4
+    ssd_chunk: int = 128
+    # embeddings / head
+    tie_embeddings: bool = True
+    # modality frontend (STUB: input_specs provides precomputed embeddings)
+    frontend: str = "none"      # none | audio | vision
+    frontend_dim: int = 0
+    n_patches: int = 0          # vlm: image patches at the sequence front
+    ca_factor: int = 1          # compressive acquisition (1 = off)
+    # photonic quantization (the paper's technique as a framework feature)
+    quant_scheme: str = "none"  # none | w4a4 | w3a4 | w2a4
+    # numerics / scale
+    dtype: str = "bfloat16"
+    remat: str = "none"         # none | full | dots
+    max_seq: int = 4096
+    # sharding hints (per-arch overrides consumed by distributed.sharding)
+    fsdp: bool = False          # shard the non-model param dim over "data"
+
+    @property
+    def attn_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def d_inner(self) -> int:   # ssm inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.ssm_groups * self.ssm_state
+
+    def quant_spec(self):
+        from repro.core.quant import W4A4, W3A4, W2A4
+        return {"none": None, "w4a4": W4A4, "w3a4": W3A4,
+                "w2a4": W2A4}[self.quant_scheme]
+
+
+_REGISTRY: Dict[str, ModelConfig] = {}
+_SMOKE: Dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig, smoke: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    _SMOKE[cfg.name] = smoke
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def smoke_variant(name: str) -> ModelConfig:
+    return _SMOKE[name]
+
+
+def list_configs() -> list[str]:
+    return sorted(_REGISTRY)

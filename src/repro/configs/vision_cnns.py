@@ -1,0 +1,11 @@
+"""The paper's own CNN configurations (LeNet / VGG9 / VGG16 / AlexNet).
+
+These are not ModelConfig LMs — they are Lightator layer-IR builders (see
+``models.vision``), exposed here so ``--arch lenet`` etc. resolve from the
+same place as the assigned architectures.
+"""
+
+from repro.models.vision import (VISION_MODELS, lenet_ir, vgg9_ir, vgg16_ir,
+                                 alexnet_ir)
+
+__all__ = ["VISION_MODELS", "lenet_ir", "vgg9_ir", "vgg16_ir", "alexnet_ir"]

@@ -1,0 +1,55 @@
+"""core — the Lightator paper's contribution as composable JAX modules.
+
+- quant:          CRC ADC-less uint4 activation quantization, int{2,3,4} weight
+                  quantization, QAT straight-through estimators, [W:A] schemes,
+                  Lightator-MX mixed precision.
+- optical_core:   OC geometry (9 MRs/arm, 6 arms/bank, 96 banks) and the
+                  hardware-mapping methodology (3x3/5x5/7x7/FC) + cycle scheduler.
+- compressive:    Compressive Acquisitor — fused RGB->gray + avg-pool weighted MAC.
+- photonics:      MR transmission / VCSEL / BPD device models + noise.
+- power_model:    device-to-architecture power/latency/FPS-per-W simulator.
+- accelerator:    LightatorDevice — layer-by-layer execution of a mapped model.
+"""
+
+from repro.core.quant import (
+    WASpec,
+    MixedPrecisionScheme,
+    crc_quantize_act,
+    fake_quant_act,
+    fake_quant_weight,
+    quantize_weight,
+    weight_scale,
+)
+from repro.core.optical_core import (
+    OCConfig,
+    ConvMapping,
+    conv_mapping,
+    fc_mapping,
+    schedule_conv,
+    schedule_fc,
+    schedule_matmul,
+)
+from repro.core.compressive import (
+    ca_coefficients,
+    compressive_acquire,
+    sequence_ca,
+)
+from repro.core.photonics import (
+    MRDevice,
+    mr_through_transmission,
+    weight_to_detuning,
+    vcsel_intensity,
+)
+from repro.core.power_model import PowerModel, LayerSchedule
+
+__all__ = [
+    "WASpec", "MixedPrecisionScheme",
+    "crc_quantize_act", "fake_quant_act", "fake_quant_weight",
+    "quantize_weight", "weight_scale",
+    "OCConfig", "ConvMapping", "conv_mapping", "fc_mapping",
+    "schedule_conv", "schedule_fc", "schedule_matmul",
+    "ca_coefficients", "compressive_acquire", "sequence_ca",
+    "MRDevice", "mr_through_transmission", "weight_to_detuning",
+    "vcsel_intensity",
+    "PowerModel", "LayerSchedule",
+]

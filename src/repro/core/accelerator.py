@@ -1,0 +1,210 @@
+"""LightatorDevice — the paper's "custom in-house simulator" (Sec. 5).
+
+Executes a vision model layer-by-layer exactly the way the hardware would:
+
+  step 1  frame captured; CRC quantizes pixels to uint4 (ADC-less imager)
+  step 2  optional Compressive Acquisitor (fused RGB->gray + pooling)
+  step 3  All-in-One Convolver runs the layer's MACs on the OC banks
+  step 4  electronic activation (Sign/ReLU/tanh) + CRC requantization feeds
+          the DMVA for the next layer (activation banks eliminated)
+  step 5  repeat 3<->4 until the classifier output
+
+It returns both the numerical output (integer-exact quantized semantics,
+identical to what the photonic core computes) and the architecture report
+(optical cycles, power breakdown, FPS/W) from the power model.
+
+The model is described by a small layer IR (``ConvSpec``/``DenseSpec``/...)
+emitted by ``models.vision``; weights are plain pytrees from QAT training.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import optical_core as ocore
+from repro.core import power_model as pmod
+from repro.core.compressive import compressive_acquire
+from repro.core.quant import (WASpec, MixedPrecisionScheme, ACT_BITS,
+                              quantize_weight, resolve_layer_specs)
+
+
+# ---------------------------------------------------------------------------
+# Layer IR
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CASpec:
+    pool: int = 2
+    rgb_to_gray: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    name: str
+    c_in: int
+    c_out: int
+    kernel: int = 3
+    stride: int = 1
+    padding: str = "SAME"
+    act: str = "relu"               # relu | sign | tanh | none
+    pool: Optional[Tuple[str, int]] = None   # ("avg"|"max", size)
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseSpec:
+    name: str
+    fan_in: int
+    fan_out: int
+    act: str = "relu"
+
+
+@dataclasses.dataclass(frozen=True)
+class FlattenSpec:
+    pass
+
+
+LayerIR = CASpec | ConvSpec | DenseSpec | FlattenSpec
+
+
+def _activation(x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "relu":
+        return jax.nn.relu(x)
+    if kind == "sign":
+        return jnp.sign(x)
+    if kind == "tanh":
+        return jnp.tanh(x)
+    if kind == "none":
+        return x
+    raise ValueError(f"unknown activation {kind}")
+
+
+def _crc_requant(x: jnp.ndarray, a_bits: int = ACT_BITS):
+    """Electronic output -> CRC codes for the next layer's DMVA.
+
+    Returns (codes uint, scale). Unsigned: activations are light intensity.
+    Scale calibrated per-tensor to the observed max (the reference-voltage
+    ladder spans the pixel/previous-layer output range).
+    """
+    qmax = (1 << a_bits) - 1
+    x = jnp.maximum(x, 0.0)
+    scale = jnp.maximum(jnp.max(x), 1e-8) / qmax
+    codes = jnp.clip(jnp.round(x / scale), 0, qmax)
+    return codes, scale
+
+
+class LightatorDevice:
+    """Execute a layer-IR model with photonic quantized semantics + report."""
+
+    def __init__(self, oc: ocore.OCConfig = ocore.DEFAULT_OC,
+                 circuit: pmod.CircuitConstants = pmod.DEFAULT_CIRCUIT,
+                 profile: pmod.AcceleratorProfile = pmod.LIGHTATOR_PROFILE):
+        self.oc = oc
+        self.power = pmod.PowerModel(oc, circuit, profile)
+
+    # -- numerics ---------------------------------------------------------
+    def _conv(self, codes: jnp.ndarray, act_scale: jnp.ndarray,
+              w: jnp.ndarray, b: jnp.ndarray | None, spec: ConvSpec,
+              wa: WASpec) -> jnp.ndarray:
+        """Integer-exact quantized conv. codes: [B,H,W,Cin] uint codes."""
+        wq, ws = quantize_weight(w, wa, axis=-1)   # w: [k,k,cin,cout]
+        acc = jax.lax.conv_general_dilated(
+            codes.astype(jnp.float32), wq.astype(jnp.float32),
+            window_strides=(spec.stride, spec.stride), padding=spec.padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        out = acc * (act_scale * ws.reshape(1, 1, 1, -1))
+        if b is not None:
+            out = out + b
+        return out
+
+    def _dense(self, codes: jnp.ndarray, act_scale: jnp.ndarray,
+               w: jnp.ndarray, b: jnp.ndarray | None, wa: WASpec):
+        wq, ws = quantize_weight(w, wa, axis=-1)
+        acc = codes.astype(jnp.float32) @ wq.astype(jnp.float32)
+        out = acc * (act_scale * ws.reshape(1, -1))
+        if b is not None:
+            out = out + b
+        return out
+
+    # -- the device -------------------------------------------------------
+    def run(self, layers: Sequence[LayerIR], params: Dict[str, Dict],
+            image: jnp.ndarray,
+            scheme: WASpec | MixedPrecisionScheme) -> Tuple[jnp.ndarray, pmod.ModelReport]:
+        """image: [B,H,W,C] float in [0,1]. Returns (logits, report)."""
+        compute_layers = [l for l in layers
+                          if isinstance(l, (ConvSpec, DenseSpec))]
+        specs = resolve_layer_specs(len(compute_layers), scheme)
+        spec_iter = iter(specs)
+
+        schedules: List[ocore.OCSchedule] = []
+        spec_list: List[WASpec] = []
+
+        # step 1: ADC-less imager — CRC on raw pixels
+        codes, act_scale = _crc_requant(image)
+        x = codes
+
+        for layer in layers:
+            if isinstance(layer, CASpec):
+                # step 2: compressive acquisition on *dequantized* intensities
+                intens = x * act_scale
+                g = compressive_acquire(intens, layer.pool, layer.rgb_to_gray)
+                if g.ndim == 3:
+                    g = g[..., None]
+                h, w_ = g.shape[1:3]
+                schedules.append(ocore.schedule_ca(
+                    "CA", h, w_, layer.pool,
+                    channels=image.shape[-1], oc=self.oc))
+                spec_list.append(WASpec(4, 4))
+                x, act_scale = _crc_requant(g)
+            elif isinstance(layer, ConvSpec):
+                wa = next(spec_iter)
+                p = params[layer.name]
+                y = self._conv(x, act_scale, p["w"], p.get("b"), layer, wa)
+                y = _activation(y, layer.act)
+                if layer.pool is not None:
+                    kind, size = layer.pool
+                    b_, h_, w_, c_ = y.shape
+                    yr = y.reshape(b_, h_ // size, size, w_ // size, size, c_)
+                    y = yr.max(axis=(2, 4)) if kind == "max" else yr.mean(axis=(2, 4))
+                    if kind == "avg":
+                        # avg pooling runs on CA banks with pre-set weights
+                        schedules.append(ocore.schedule_ca(
+                            f"{layer.name}.pool", y.shape[1], y.shape[2],
+                            size, channels=1, oc=self.oc))
+                        spec_list.append(WASpec(4, 4))
+                h_out, w_out = y.shape[1:3]
+                schedules.append(ocore.schedule_conv(
+                    layer.name, h_out, w_out, layer.c_in, layer.c_out,
+                    layer.kernel, oc=self.oc))
+                spec_list.append(wa)
+                x, act_scale = _crc_requant(y)        # step 4: DMVA reuse
+            elif isinstance(layer, FlattenSpec):
+                intens = x * act_scale
+                flat = intens.reshape(intens.shape[0], -1)
+                x, act_scale = _crc_requant(flat)
+            elif isinstance(layer, DenseSpec):
+                wa = next(spec_iter)
+                p = params[layer.name]
+                y = self._dense(x, act_scale, p["w"], p.get("b"), wa)
+                schedules.append(ocore.schedule_fc(
+                    layer.name, layer.fan_in, layer.fan_out,
+                    batch=1, oc=self.oc))
+                spec_list.append(wa)
+                if layer.act != "none":
+                    y = _activation(y, layer.act)
+                    x, act_scale = _crc_requant(y)
+                else:
+                    # classifier head: logits leave the device (transmitter)
+                    x, act_scale = y, jnp.asarray(1.0)
+            else:
+                raise TypeError(f"unknown layer IR {layer!r}")
+
+        logits = x * act_scale if act_scale.ndim == 0 else x
+        # architecture report with the per-layer specs actually used
+        lps = [self.power.layer_power(pmod.LayerSchedule(s, sp))
+               for s, sp in zip(schedules, spec_list)]
+        report = self.power.finalize_report(lps, schedules, scheme)
+        return logits, report

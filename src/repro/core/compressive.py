@@ -1,0 +1,95 @@
+"""Compressive Acquisitor (CA) — paper Sec. 3.2.
+
+The CA fuses RGB->grayscale conversion and kxk average pooling into a single
+weighted-sum MAC executed in ONE optical cycle, by pre-setting the MR weights
+to the product coefficients (paper eq. (1)):
+
+    P_AvgGray = sum_{i in pool} sum_{j in {R,G,B}} (1/k^2) * c_j * P_ij
+    c = (0.299, 0.587, 0.114)
+
+Two realizations:
+  * ``compressive_acquire`` — the pure-jnp reference (ref for the ca_pool
+    Pallas kernel).
+  * ``sequence_ca`` — generalization used for LM-family frontends: strided
+    mean-pooling of frame/patch embeddings with a fused channel mix. This is
+    the "compressive acquisition as a first-class feature" hook for the
+    assigned [audio]/[vlm] architectures.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+RGB_COEFFS = (0.299, 0.587, 0.114)
+
+
+def ca_coefficients(pool: int, channels: int = 3) -> jnp.ndarray:
+    """The pre-set MR weights for one CA stride: shape [pool, pool, channels].
+
+    channels==3 -> RGB->gray fused with mean pooling; channels==1 -> pure
+    mean pooling (the paper's 'pooling layers implemented within CA banks').
+    """
+    if channels == 3:
+        chan = jnp.asarray(RGB_COEFFS, jnp.float32)
+    else:
+        chan = jnp.full((channels,), 1.0 / channels, jnp.float32)
+    w = jnp.ones((pool, pool, channels), jnp.float32) / float(pool * pool)
+    return w * chan[None, None, :]
+
+
+def compressive_acquire(img: jnp.ndarray, pool: int = 2,
+                        rgb_to_gray: bool | None = None) -> jnp.ndarray:
+    """Fused RGB->gray + pool x pool average pooling (single weighted MAC).
+
+    img: [..., H, W, C] with H, W divisible by pool.
+    Returns [..., H/pool, W/pool] (gray) or [..., H/pool, W/pool, C]
+    (per-channel pooling when rgb_to_gray=False).
+    """
+    *lead, h, w, c = img.shape
+    if h % pool or w % pool:
+        raise ValueError(f"H({h}), W({w}) must be divisible by pool={pool}")
+    if rgb_to_gray is None:
+        rgb_to_gray = (c == 3)
+    x = img.reshape(*lead, h // pool, pool, w // pool, pool, c)
+    if rgb_to_gray:
+        coeffs = ca_coefficients(pool, c)            # [pool, pool, c]
+        return jnp.einsum("...hpwqc,pqc->...hw", x, coeffs)
+    return x.mean(axis=(-4, -2))
+
+
+def strided_conv_acquire(img: jnp.ndarray, weights: jnp.ndarray,
+                         stride: int) -> jnp.ndarray:
+    """The CA's other mode: configurable strided convolution at acquisition.
+
+    img: [..., H, W, C]; weights: [k, k, C]; returns [..., H', W'].
+    Implemented as patch extraction + the same weighted-sum MAC (one optical
+    cycle per strides_per_cycle outputs).
+    """
+    k = weights.shape[0]
+    *lead, h, w, c = img.shape
+    h_out = (h - k) // stride + 1
+    w_out = (w - k) // stride + 1
+    # gather patches [..., h_out, w_out, k, k, c]
+    rows = jnp.arange(h_out) * stride
+    cols = jnp.arange(w_out) * stride
+    patches = img[..., rows[:, None] + jnp.arange(k)[None, :], :, :]
+    patches = patches[..., :, :, cols[:, None] + jnp.arange(k)[None, :], :]
+    # patches: [..., h_out, k, w_out, k, c] -> weighted sum
+    return jnp.einsum("...hpwqc,pqc->...hw", patches, weights)
+
+
+def sequence_ca(embeds: jnp.ndarray, factor: int,
+                channel_mix: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Compressive acquisition for token/frame/patch embedding streams.
+
+    embeds: [..., T, D]; returns [..., T/factor, D]. Mean-pools ``factor``
+    consecutive embeddings (the CA's mean pooling) with an optional fused
+    per-feature mix (the RGB->gray analogue). Used by the audio/VLM frontends.
+    """
+    *lead, t, d = embeds.shape
+    if t % factor:
+        raise ValueError(f"T({t}) must be divisible by factor={factor}")
+    x = embeds.reshape(*lead, t // factor, factor, d).mean(axis=-2)
+    if channel_mix is not None:
+        x = x * channel_mix
+    return x

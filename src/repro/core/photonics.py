@@ -1,0 +1,116 @@
+"""Device-level photonic models: microring resonators, VCSELs, photodetectors.
+
+These are the "device layer" of the paper's bottom-up evaluation framework
+(Fig. 7). They serve two purposes in the reproduction:
+
+1. Physics-grounded *weight transfer*: how a target weight value becomes an MR
+   detuning, and what transmission error a thermal drift causes. This feeds
+   the optional noise model in ``core.quant.fake_quant_weight``.
+2. Energy bookkeeping inputs to ``core.power_model`` (tuning power scales with
+   detuning; VCSEL power scales with driver level).
+
+The resonant wavelength is ``lambda_res = n_eff * L / m`` (paper Sec. 2); the
+through-port transmission of an all-pass ring near resonance is Lorentzian in
+the detuning, parameterized directly by FWHM so device Q factors map cleanly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MRDevice:
+    """An MR with the parameters the paper's device layer reports."""
+
+    lambda_res_nm: float = 1550.0       # resonant wavelength
+    fwhm_nm: float = 0.10               # full width at half maximum of the notch
+    n_eff: float = 2.37                 # effective refractive index (SOI ring)
+    circumference_um: float = 65.4      # L
+    mode_order: int = 100               # m
+    tuning_nm_per_mw: float = 0.25      # microheater tuning efficiency
+    max_detuning_nm: float = 0.4        # tuning range
+
+    @property
+    def q_factor(self) -> float:
+        return self.lambda_res_nm / self.fwhm_nm
+
+
+def mr_through_transmission(detuning_nm: jnp.ndarray, fwhm_nm: float = 0.10):
+    """Through-port power transmission vs detuning (Lorentzian notch).
+
+    T(delta) = delta^2 / (delta^2 + (FWHM/2)^2)
+
+    At resonance (delta=0) all power drops into the ring (T=0); far off
+    resonance T -> 1. Monotone in |delta|, which is what makes the ring a
+    programmable attenuator: *imprinting a parameter in the transmitted
+    signal* (paper Fig. 1).
+    """
+    half = fwhm_nm / 2.0
+    d2 = jnp.square(detuning_nm)
+    return d2 / (d2 + half * half)
+
+
+def weight_to_detuning(t_target: jnp.ndarray, fwhm_nm: float = 0.10):
+    """Invert the Lorentzian: detuning that realizes transmission ``t_target``.
+
+    t in [0, 1) -> delta = (FWHM/2) * sqrt(t / (1 - t)).
+    """
+    half = fwhm_nm / 2.0
+    t = jnp.clip(t_target, 0.0, 1.0 - 1e-6)
+    return half * jnp.sqrt(t / (1.0 - t))
+
+
+def detuning_tuning_power_mw(detuning_nm: jnp.ndarray,
+                             dev: MRDevice = MRDevice()) -> jnp.ndarray:
+    """Microheater power needed to hold a detuning (linear tuning model)."""
+    return jnp.abs(detuning_nm) / dev.tuning_nm_per_mw
+
+
+def transmission_with_drift(t_target: jnp.ndarray, drift_nm: jnp.ndarray,
+                            fwhm_nm: float = 0.10) -> jnp.ndarray:
+    """Realized transmission when the ring drifts by ``drift_nm`` (thermal)."""
+    delta = weight_to_detuning(t_target, fwhm_nm)
+    return mr_through_transmission(delta + drift_nm, fwhm_nm)
+
+
+def photonic_noise(key: jax.Array, t_target: jnp.ndarray,
+                   drift_std_nm: float = 0.0, fwhm_nm: float = 0.10):
+    """Sample realized transmissions under Gaussian thermal drift."""
+    if drift_std_nm <= 0.0:
+        return t_target
+    drift = drift_std_nm * jax.random.normal(key, t_target.shape, jnp.float32)
+    return transmission_with_drift(t_target, drift, fwhm_nm)
+
+
+# ---------------------------------------------------------------------------
+# VCSEL / DMVA
+# ---------------------------------------------------------------------------
+
+def vcsel_intensity(code: jnp.ndarray, i_unit_ma: float = 0.125,
+                    slope_mw_per_ma: float = 0.3, i_threshold_ma: float = 0.2):
+    """Optical output power of a directly-modulated VCSEL.
+
+    ``code`` is the number of ON driver transistors (0..15, thermometer code
+    from the CRC / previous-layer output). Driving current = code * i_unit,
+    emitted power follows the L-I curve above threshold.
+    """
+    current = code.astype(jnp.float32) * i_unit_ma
+    return jnp.maximum(current - i_threshold_ma, 0.0) * slope_mw_per_ma
+
+
+def bpd_differential(pos_mw: jnp.ndarray, neg_mw: jnp.ndarray,
+                     responsivity_a_per_w: float = 1.1) -> jnp.ndarray:
+    """Balanced photodetector: signed accumulate of two optical rails."""
+    return (pos_mw - neg_mw) * 1e-3 * responsivity_a_per_w
+
+
+def shot_noise_current(key: jax.Array, photocurrent_a: jnp.ndarray,
+                       bandwidth_hz: float = 5e9) -> jnp.ndarray:
+    """Shot noise: sigma_i = sqrt(2 q I B). Returns noisy photocurrent."""
+    q = 1.602e-19
+    sigma = jnp.sqrt(2.0 * q * jnp.abs(photocurrent_a) * bandwidth_hz)
+    return photocurrent_a + sigma * jax.random.normal(key, photocurrent_a.shape)

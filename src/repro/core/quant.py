@@ -1,0 +1,209 @@
+"""Lightator quantization: ADC-less CRC activations + MR weight imprinting.
+
+The paper's compute model (Sec. 3):
+
+* Activations are captured / regenerated through the Comparator-based Reading
+  Circuit (CRC): 15 voltage comparators -> 16 levels -> **unsigned 4-bit**
+  activations, thermometer-coded onto the VCSEL driver transistors. There is
+  never a DAC or ADC in the activation path, so activation precision is fixed
+  at 4 bits throughout ([W:4] for every configuration in Table 1).
+
+* Weights are imprinted on microring resonators (MRs). Balanced photodetection
+  (BPD) at the arm output gives a *signed* accumulate, so weights are
+  symmetric signed integers with ``2^(b-1)-1`` magnitude levels per rail:
+  [4] -> [-7, 7], [3] -> [-3, 3], [2] -> [-1, 1].
+
+* Lightator-MX keeps the first layer at [4:4] and drops the remaining layers
+  to [3:4] or [2:4] (Table 1, MX rows).
+
+QAT uses straight-through estimators (STE): the forward pass sees the exact
+quantized values the optical core would compute with, the backward pass sees
+identity. The paper fine-tunes 6 epochs quantization-aware; our training
+drivers do the same.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# [W:A] specification
+# ---------------------------------------------------------------------------
+
+CRC_LEVELS = 16          # 15 comparators -> 16 output codes
+CRC_COMPARATORS = 15
+ACT_BITS = 4             # fixed by the DMVA hardware
+
+
+@dataclasses.dataclass(frozen=True)
+class WASpec:
+    """A [W:A] configuration, e.g. WASpec(4, 4) == "[4:4]"."""
+
+    w_bits: int = 4
+    a_bits: int = ACT_BITS
+    per_channel: bool = True        # per-output-channel weight scales
+    # Optional photonic non-ideality: std of Gaussian noise applied to the
+    # dequantized weight transmission (fraction of one quant step).
+    mr_noise_std: float = 0.0
+
+    def __post_init__(self):
+        if self.w_bits not in (1, 2, 3, 4, 8):
+            raise ValueError(f"unsupported weight bit-width {self.w_bits}")
+        if self.a_bits != ACT_BITS:
+            # The CRC/DMVA fix activations at 4 bits; other widths are allowed
+            # for ablation but flagged.
+            if self.a_bits not in (2, 3, 8):
+                raise ValueError(f"unsupported activation bit-width {self.a_bits}")
+
+    @property
+    def w_qmax(self) -> int:
+        return (1 << (self.w_bits - 1)) - 1  # symmetric signed
+
+    @property
+    def a_qmax(self) -> int:
+        return (1 << self.a_bits) - 1        # unsigned (light intensity)
+
+    @property
+    def name(self) -> str:
+        return f"[{self.w_bits}:{self.a_bits}]"
+
+
+@dataclasses.dataclass(frozen=True)
+class MixedPrecisionScheme:
+    """Lightator-MX: first layer [4:4], remaining layers at ``rest``."""
+
+    first: WASpec = WASpec(4, 4)
+    rest: WASpec = WASpec(3, 4)
+
+    def spec_for_layer(self, layer_idx: int) -> WASpec:
+        return self.first if layer_idx == 0 else self.rest
+
+    @property
+    def name(self) -> str:
+        return f"MX {self.first.name}{self.rest.name}"
+
+
+W4A4 = WASpec(4, 4)
+W3A4 = WASpec(3, 4)
+W2A4 = WASpec(2, 4)
+MX_43 = MixedPrecisionScheme(W4A4, W3A4)
+MX_42 = MixedPrecisionScheme(W4A4, W2A4)
+
+
+# ---------------------------------------------------------------------------
+# Straight-through rounding
+# ---------------------------------------------------------------------------
+
+def _ste_round(x: jnp.ndarray) -> jnp.ndarray:
+    """round(x) in the forward pass, identity gradient in the backward pass."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+# ---------------------------------------------------------------------------
+# Activation quantization (CRC / VCSEL path)
+# ---------------------------------------------------------------------------
+
+def crc_quantize_act(x: jnp.ndarray, scale: jnp.ndarray, a_bits: int = ACT_BITS):
+    """The CRC: compare against 15 reference levels -> integer code 0..15.
+
+    ``scale`` maps one quant step to physical units; the reference voltages
+    are ``scale * (i + 0.5)`` i.e. mid-rise uniform. Returns the integer code
+    (int8 carrier) — what the VCSEL driver transistor count encodes.
+    """
+    qmax = (1 << a_bits) - 1
+    code = jnp.clip(jnp.round(x / scale), 0, qmax)
+    return code.astype(jnp.int8)
+
+
+def fake_quant_act(x: jnp.ndarray, scale: jnp.ndarray, a_bits: int = ACT_BITS,
+                   train: bool = True) -> jnp.ndarray:
+    """Fake-quantized activation: value the optical core actually streams.
+
+    Unsigned (light intensity cannot be negative): inputs are expected
+    post-ReLU / post-shift. STE when ``train``.
+    """
+    qmax = (1 << a_bits) - 1
+    xs = x / scale
+    xs = jnp.clip(xs, 0.0, float(qmax))
+    q = _ste_round(xs) if train else jnp.round(xs)
+    return q * scale
+
+
+def act_scale_for_range(max_val: float | jnp.ndarray, a_bits: int = ACT_BITS):
+    """Scale that maps [0, max_val] onto the CRC's levels."""
+    qmax = (1 << a_bits) - 1
+    return jnp.asarray(max_val, jnp.float32) / qmax
+
+
+# ---------------------------------------------------------------------------
+# Weight quantization (MR imprinting path)
+# ---------------------------------------------------------------------------
+
+def weight_scale(w: jnp.ndarray, w_bits: int, per_channel: bool = True,
+                 axis: int = -1) -> jnp.ndarray:
+    """Symmetric scale. Per-channel = per output feature (axis=-1 for [in,out])."""
+    qmax = (1 << (w_bits - 1)) - 1
+    if per_channel:
+        reduce_axes = tuple(i for i in range(w.ndim) if i != (axis % w.ndim))
+        amax = jnp.max(jnp.abs(w), axis=reduce_axes, keepdims=True)
+    else:
+        amax = jnp.max(jnp.abs(w))
+    return jnp.maximum(amax, 1e-8) / qmax
+
+
+def quantize_weight(w: jnp.ndarray, spec: WASpec, axis: int = -1):
+    """-> (q_int8, scale). q in [-w_qmax, w_qmax]; dequant = q * scale."""
+    s = weight_scale(w, spec.w_bits, spec.per_channel, axis)
+    q = jnp.clip(jnp.round(w / s), -spec.w_qmax, spec.w_qmax).astype(jnp.int8)
+    return q, s
+
+
+def fake_quant_weight(w: jnp.ndarray, spec: WASpec, axis: int = -1,
+                      noise_key: Optional[jax.Array] = None) -> jnp.ndarray:
+    """Fake-quantized weight with STE; optional MR transmission noise.
+
+    The noise models thermal drift of the ring resonance: a Gaussian
+    perturbation of the *dequantized* transmission, std expressed in quant
+    steps (spec.mr_noise_std).
+    """
+    s = weight_scale(w, spec.w_bits, spec.per_channel, axis)
+    ws = jnp.clip(w / s, -float(spec.w_qmax), float(spec.w_qmax))
+    q = _ste_round(ws)
+    if spec.mr_noise_std > 0.0 and noise_key is not None:
+        q = q + spec.mr_noise_std * jax.random.normal(noise_key, q.shape, q.dtype)
+    return q * s
+
+
+# ---------------------------------------------------------------------------
+# Quantized matmul semantics (the reference the kernels must match)
+# ---------------------------------------------------------------------------
+
+def qmatmul_reference(x: jnp.ndarray, w: jnp.ndarray, spec: WASpec,
+                      act_scale: jnp.ndarray | float = 1.0) -> jnp.ndarray:
+    """Integer-exact photonic MVM semantics on float carriers.
+
+    x: [..., K] non-negative activations; w: [K, N].
+    1. CRC-quantize x to codes 0..15.
+    2. MR-quantize w per output channel.
+    3. Integer MAC (what the arm/BPD/summation tree computes).
+    4. Dequantize with act_scale * w_scale.
+    """
+    a_codes = jnp.clip(jnp.round(x / act_scale), 0, spec.a_qmax)
+    wq, ws = quantize_weight(w, spec, axis=-1)
+    acc = jnp.matmul(a_codes.astype(jnp.float32), wq.astype(jnp.float32))
+    return acc * (jnp.asarray(act_scale, jnp.float32) * jnp.squeeze(ws))
+
+
+# ---------------------------------------------------------------------------
+# Per-layer scheme resolution
+# ---------------------------------------------------------------------------
+
+def resolve_layer_specs(n_layers: int,
+                        scheme: WASpec | MixedPrecisionScheme) -> Sequence[WASpec]:
+    if isinstance(scheme, MixedPrecisionScheme):
+        return [scheme.spec_for_layer(i) for i in range(n_layers)]
+    return [scheme] * n_layers

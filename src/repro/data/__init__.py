@@ -1,0 +1,4 @@
+from repro.data.synthetic import (SyntheticTextConfig, synthetic_lm_batches,
+                                  synthetic_digits, synthetic_textures,
+                                  modality_batch)
+from repro.data.pipeline import DataPipeline

@@ -1,0 +1,1 @@
+"""distributed — sharding rules, collectives, fault tolerance, elasticity."""

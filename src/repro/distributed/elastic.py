@@ -1,0 +1,42 @@
+"""Elastic scaling: resume the same logical job on a different mesh.
+
+Protocol (tested in tests/test_distributed.py):
+  1. checkpoints are mesh-agnostic (full arrays + manifest — checkpoint/ckpt)
+  2. on restart with a different device count, rebuild mesh + rules via
+     ``launch.shardings`` and ``restore_checkpoint(..., shardings=new)``
+  3. the data pipeline is a pure function of step, so the global batch is
+     identical regardless of how many hosts slice it
+
+``elastic_remesh`` is the one-call wrapper: given a checkpoint dir, a config
+and a new mesh, it returns (step, params, opt_state) sharded for that mesh.
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Optional, Tuple
+
+import jax
+
+from repro.checkpoint.ckpt import latest_step, restore_checkpoint
+from repro.configs.base import ModelConfig
+from repro.launch import shardings as sh
+
+
+def elastic_remesh(ckpt_dir: str | Path, cfg: ModelConfig, mesh,
+                   params_shape, opt_shape=None,
+                   step: Optional[int] = None) -> Tuple:
+    """Restore a checkpoint onto ``mesh`` (any shape/device count)."""
+    rules = sh.build_rules(cfg, mesh)
+    p_shard = sh.tree_shardings(params_shape, cfg, mesh, rules)
+    target = {"params": params_shape}
+    shard_tree = {"params": p_shard}
+    if opt_shape is not None:
+        target["opt"] = opt_shape
+        shard_tree["opt"] = sh.tree_shardings(opt_shape, cfg, mesh, rules)
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    restored = restore_checkpoint(ckpt_dir, target, step, shard_tree)
+    return (step, restored["params"],
+            restored.get("opt") if opt_shape is not None else None)

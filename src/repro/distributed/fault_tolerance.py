@@ -1,0 +1,138 @@
+"""Fault tolerance: restartable training, straggler detection, preemption.
+
+What "runs on thousands of nodes" requires and what this module provides:
+
+  * **checkpoint/restart** — ``RestartableLoop`` drives train steps with a
+    CheckpointManager; any crash resumes from the last complete step (the
+    failure-injection test kills the loop mid-run and verifies bit-exact
+    continuation thanks to deterministic batch(step)).
+  * **preemption handling** — SIGTERM triggers a forced save before exit
+    (maintenance events on TPU pods send an eviction signal).
+  * **straggler mitigation** — ``StragglerMonitor`` keeps an EWMA of step
+    times; steps slower than ``threshold x`` EWMA are flagged, and a
+    configurable callback fires (log / re-shard / exclude host). On real
+    fleets this hooks the health service; here the policy logic + tests.
+  * **failure simulation** — ``FailureInjector`` deterministically raises at
+    step k for tests/drills.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, Dict, Optional
+
+from repro.checkpoint.ckpt import CheckpointManager
+
+
+class FailureInjector:
+    """Raise RuntimeError at a chosen step (deterministic drills)."""
+
+    def __init__(self, fail_at_step: Optional[int] = None):
+        self.fail_at_step = fail_at_step
+        self.fired = False
+
+    def maybe_fail(self, step: int):
+        if self.fail_at_step is not None and step == self.fail_at_step \
+                and not self.fired:
+            self.fired = True
+            raise RuntimeError(f"injected failure at step {step}")
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    step_time: float
+    ewma: float
+    ratio: float
+
+
+class StragglerMonitor:
+    """EWMA step-time tracker; flags outliers (straggling hosts/steps)."""
+
+    def __init__(self, threshold: float = 2.0, alpha: float = 0.1,
+                 warmup_steps: int = 3,
+                 on_straggler: Optional[Callable[[StragglerEvent], None]] = None):
+        self.threshold = threshold
+        self.alpha = alpha
+        self.warmup = warmup_steps
+        self.on_straggler = on_straggler
+        self.ewma: Optional[float] = None
+        self.events: list[StragglerEvent] = []
+        self._n = 0
+
+    def record(self, step: int, step_time: float) -> Optional[StragglerEvent]:
+        self._n += 1
+        if self.ewma is None:
+            self.ewma = step_time
+            return None
+        ev = None
+        if self._n > self.warmup and step_time > self.threshold * self.ewma:
+            ev = StragglerEvent(step, step_time, self.ewma,
+                                step_time / self.ewma)
+            self.events.append(ev)
+            if self.on_straggler:
+                self.on_straggler(ev)
+            # don't poison the EWMA with the outlier
+            return ev
+        self.ewma = (1 - self.alpha) * self.ewma + self.alpha * step_time
+        return ev
+
+
+class RestartableLoop:
+    """Drives (state, batch) -> state steps with checkpoint/restart.
+
+    ``state`` is any pytree (params, opt state, step counter inside).
+    ``batch_fn(step)`` must be deterministic — restart replays the exact
+    stream.
+    """
+
+    def __init__(self, step_fn: Callable[[Any, Dict], Any],
+                 batch_fn: Callable[[int], Dict],
+                 ckpt: CheckpointManager,
+                 injector: Optional[FailureInjector] = None,
+                 monitor: Optional[StragglerMonitor] = None,
+                 handle_sigterm: bool = False):
+        self.step_fn = step_fn
+        self.batch_fn = batch_fn
+        self.ckpt = ckpt
+        self.injector = injector
+        self.monitor = monitor or StragglerMonitor()
+        self._preempted = False
+        if handle_sigterm:
+            signal.signal(signal.SIGTERM, self._on_sigterm)
+
+    def _on_sigterm(self, signum, frame):
+        self._preempted = True
+
+    def run(self, state: Any, start_step: int, num_steps: int,
+            shardings: Any = None):
+        """Returns (final_state, last_step, metrics_history)."""
+        restored = self.ckpt.restore_latest(
+            jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                         state) if shardings else state,
+            shardings)
+        if restored[0] is not None:
+            start_step, state = restored
+        history = []
+        step = start_step
+        while step < num_steps:
+            if self.injector:
+                self.injector.maybe_fail(step)
+            t0 = time.time()
+            batch = self.batch_fn(step)
+            state, metrics = self.step_fn(state, batch)
+            dt = time.time() - t0
+            self.monitor.record(step, dt)
+            history.append(metrics)
+            step += 1
+            if self._preempted:
+                self.ckpt.save(step, state, force=True)
+                raise SystemExit(143)
+            self.ckpt.save(step, state)
+        self.ckpt.save(step, state, force=True)
+        return state, step, history
+
+
+import jax  # noqa: E402  (bottom import keeps module load light)

@@ -1,0 +1,6 @@
+# Pallas TPU kernels for the Lightator compute hot-spots:
+#   photonic_mvm — the Optical Core's quantized MVM (arm/bank -> MXU tiles)
+#   ca_pool      — Compressive Acquisitor (fused RGB->gray + mean pool)
+#   conv_bank    — Fig. 6 conv mapping (tap-position dots = arms)
+# Each package: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper),
+# ref.py (pure-jnp oracle). Validated on CPU with interpret=True.

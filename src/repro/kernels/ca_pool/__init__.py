@@ -1,0 +1,1 @@
+from repro.kernels.ca_pool.ops import ca_pool

@@ -1,0 +1,62 @@
+"""Pallas kernel for the Compressive Acquisitor (paper Sec. 3.2, eq. (1)).
+
+One CA bank computes, in a single optical cycle per output pixel group,
+    P_out[i,j] = sum_{di,dj,c} coeff[di,dj,c] * P_in[p*i+di, p*j+dj, c]
+with pre-set coefficients (RGB->gray x mean-pool). On TPU this is a fused
+strided weighted reduction: each grid step loads a [th*p, W, C] input strip
+into VMEM and emits the [th, W/p] compressed strip — input pixels are read
+exactly once (the "acquisition" pass), never materializing an intermediate
+grayscale or pooled tensor in HBM.
+
+Grid: (B, H_out / th). The p*p*C coefficient loop is static (<= 48 taps for
+p=4, C=3), unrolled into shifted strided loads — the TPU analogue of the
+CA bank's parallel wavelength taps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ca_kernel(img_ref, coef_ref, out_ref, *, pool: int, c: int, th: int,
+               w_out: int):
+    """img_ref: [1, th*p, w_out*p, C]; coef_ref: [p, p, C] (SMEM-ish small);
+    out_ref: [1, th, w_out]."""
+    img = img_ref[0]                                    # [th*p, w*p, C]
+    acc = jnp.zeros((th, w_out), jnp.float32)
+    for di in range(pool):
+        for dj in range(pool):
+            for ch in range(c):
+                tap = jax.lax.slice(img, (di, dj, ch),
+                                    (img.shape[0], img.shape[1], ch + 1),
+                                    (pool, pool, 1))[..., 0]
+                acc = acc + tap.astype(jnp.float32) * coef_ref[di, dj, ch]
+    out_ref[0] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("pool", "th", "interpret"))
+def ca_pool_kernel(img: jnp.ndarray, coeffs: jnp.ndarray, pool: int = 2,
+                   th: int = 8, interpret: bool = True) -> jnp.ndarray:
+    """img [B, H, W, C] -> [B, H/pool, W/pool] fused weighted acquisition."""
+    b, h, w, c = img.shape
+    assert h % pool == 0 and w % pool == 0
+    h_out, w_out = h // pool, w // pool
+    th = min(th, h_out)
+    while h_out % th:
+        th -= 1
+    grid = (b, h_out // th)
+    return pl.pallas_call(
+        functools.partial(_ca_kernel, pool=pool, c=c, th=th, w_out=w_out),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, th * pool, w, c), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((pool, pool, c), lambda i, j: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, th, w_out), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h_out, w_out), img.dtype),
+        interpret=interpret,
+    )(img, coeffs)

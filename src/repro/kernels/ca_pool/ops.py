@@ -1,0 +1,30 @@
+"""Public wrapper for the Compressive Acquisitor kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compressive import ca_coefficients
+from repro.kernels.ca_pool import kernel as K
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def ca_pool(img: jnp.ndarray, pool: int = 2,
+            rgb_to_gray: bool | None = None,
+            coeffs: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Fused RGB->gray + pool x pool mean pooling. img [B,H,W,C] -> [B,H',W'].
+
+    ``coeffs`` overrides the pre-set CA weights (the paper's "configurable"
+    compression: any strided weighted acquisition).
+    """
+    c = img.shape[-1]
+    if coeffs is None:
+        if rgb_to_gray is None:
+            rgb_to_gray = (c == 3)
+        coeffs = ca_coefficients(pool, c if rgb_to_gray else c)
+        if not rgb_to_gray:
+            coeffs = jnp.ones((pool, pool, c), jnp.float32) / (pool * pool * c)
+    return K.ca_pool_kernel(img, coeffs.astype(jnp.float32), pool=pool,
+                            interpret=_INTERPRET)

@@ -1,0 +1,24 @@
+"""Oracle for ca_pool: core.compressive.compressive_acquire is the reference."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.compressive import ca_coefficients, compressive_acquire
+
+
+def ca_pool_ref(img: jnp.ndarray, pool: int = 2,
+                rgb_to_gray: bool | None = None) -> jnp.ndarray:
+    out = compressive_acquire(img, pool, rgb_to_gray)
+    if out.ndim == 4:                       # per-channel pooling: reduce too
+        raise ValueError("ca_pool kernel covers the fused gray path; "
+                         "use rgb_to_gray semantics")
+    return out
+
+
+def ca_pool_ref_generic(img: jnp.ndarray, coeffs: jnp.ndarray,
+                        pool: int) -> jnp.ndarray:
+    """Arbitrary pre-set coefficients (pure einsum oracle)."""
+    *lead, h, w, c = img.shape
+    x = img.reshape(*lead, h // pool, pool, w // pool, pool, c)
+    return jnp.einsum("...hpwqc,pqc->...hw", x, coeffs)

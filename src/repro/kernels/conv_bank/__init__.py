@@ -1,0 +1,1 @@
+from repro.kernels.conv_bank.ops import conv_bank

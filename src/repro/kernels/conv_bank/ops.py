@@ -1,0 +1,40 @@
+"""Public wrapper for the bank-mapped convolution kernel."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import WASpec, quantize_weight
+from repro.kernels.conv_bank import kernel as K
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def conv_bank(x: jnp.ndarray, w: jnp.ndarray,
+              spec: Optional[WASpec] = None,
+              act_scale: float = 1.0 / 15.0,
+              padding: str = "SAME", bn: int = 64) -> jnp.ndarray:
+    """kxk conv through the OC mapping. x [B,H,W,Cin]; w [k,k,Cin,Cout].
+
+    With ``spec`` the integer photonic path runs (uint4 codes x int-w
+    weights); without it, a float conv with the same tap-dot structure.
+    """
+    kk = w.shape[0]
+    pad = kk // 2 if padding == "SAME" else 0
+    if spec is not None:
+        codes = jnp.clip(jnp.round(x.astype(jnp.float32) / act_scale), 0,
+                         spec.a_qmax)
+        wq, ws = quantize_weight(w.astype(jnp.float32), spec, axis=-1)
+        xin = jnp.pad(codes, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+        return K.conv_bank_kernel(xin, wq.astype(jnp.float32),
+                                  ws.reshape(-1), kk=kk, bn=bn,
+                                  act_scale=act_scale, quantized=True,
+                                  interpret=_INTERPRET)
+    xin = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    ws_dummy = jnp.ones((w.shape[-1],), jnp.float32)
+    return K.conv_bank_kernel(xin.astype(jnp.float32),
+                              w.astype(jnp.float32), ws_dummy, kk=kk, bn=bn,
+                              quantized=False, interpret=_INTERPRET)

@@ -1,0 +1,29 @@
+"""Oracle for conv_bank: XLA's conv_general_dilated on the same operands."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import WASpec, quantize_weight
+
+
+def conv_bank_ref(x: jnp.ndarray, w: jnp.ndarray, padding: str = "SAME"
+                  ) -> jnp.ndarray:
+    """Float conv oracle. x [B,H,W,Cin]; w [k,k,Cin,Cout]."""
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32), (1, 1), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def conv_bank_quant_ref(x: jnp.ndarray, w: jnp.ndarray, spec: WASpec,
+                        act_scale: float = 1.0 / 15.0,
+                        padding: str = "SAME") -> jnp.ndarray:
+    """Quantized conv oracle — the LightatorDevice integer semantics."""
+    codes = jnp.clip(jnp.round(x.astype(jnp.float32) / act_scale), 0,
+                     spec.a_qmax)
+    wq, ws = quantize_weight(w.astype(jnp.float32), spec, axis=-1)
+    acc = jax.lax.conv_general_dilated(
+        codes, wq.astype(jnp.float32), (1, 1), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return acc * act_scale * ws.reshape(1, 1, 1, -1)

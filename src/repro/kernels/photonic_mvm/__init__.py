@@ -1,0 +1,1 @@
+from repro.kernels.photonic_mvm.ops import photonic_mvm, photonic_mvm_prequant

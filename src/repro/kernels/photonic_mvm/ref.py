@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the photonic MVM kernel.
+
+Must match the integer semantics of the optical core exactly:
+CRC-coded uint4 activations x MR-held signed w-bit weights, integer
+accumulate, dequant by act_scale * per-channel weight scale.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.quant import WASpec, quantize_weight
+
+
+def mvm_int_ref(a_codes: jnp.ndarray, wq: jnp.ndarray, ws: jnp.ndarray,
+                act_scale: float = 1.0, out_dtype=jnp.float32) -> jnp.ndarray:
+    """Same contract as kernel.mvm_int_kernel, computed with one jnp matmul."""
+    acc = jnp.matmul(a_codes.astype(jnp.int32), wq.astype(jnp.int32))
+    return (acc.astype(jnp.float32) * act_scale
+            * ws.reshape(1, -1).astype(jnp.float32)).astype(out_dtype)
+
+
+def photonic_mvm_ref(x: jnp.ndarray, w: jnp.ndarray, spec: WASpec,
+                     act_scale: float = 1.0 / 15.0) -> jnp.ndarray:
+    """Float-in/float-out oracle incl. quantization of both operands.
+
+    Signed activations are carried on two rails (BPD differential): the
+    magnitude is CRC-quantized, the sign reapplied — identical semantics to
+    nn.layers.dense(mode="fake") at inference (round, no STE needed).
+    """
+    *lead, kdim = x.shape
+    xf = x.reshape(-1, kdim).astype(jnp.float32)
+    sgn = jnp.sign(xf)
+    codes = jnp.clip(jnp.round(jnp.abs(xf) / act_scale), 0, spec.a_qmax)
+    wq, ws = quantize_weight(w.astype(jnp.float32), spec, axis=-1)
+    acc = jnp.matmul(sgn * codes, wq.astype(jnp.float32))
+    y = acc * act_scale * ws.reshape(1, -1)
+    return y.reshape(*lead, w.shape[-1]).astype(x.dtype)

@@ -1,0 +1,215 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: 512 placeholder host devices form the production meshes; every
+cell's step function must `.lower().compile()` under GSPMD, and the compiled
+artifact yields memory_analysis (fits?) + cost_analysis (FLOPs/bytes) +
+the collective schedule (parsed from HLO) for the roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-34b --shape train_4k [--multipod]
+  python -m repro.launch.dryrun --all [--multipod] [--out experiments/dryrun]
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, list_configs
+from repro.distributed.sharding import use_rules
+from repro.launch import mesh as mesh_mod
+from repro.launch import shardings as sh
+from repro.launch import specs as specs_mod
+from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step
+from repro.optim.adamw import AdamWConfig, adamw_init
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    nbytes = _DTYPE_BYTES.get(dt, 4)
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nbytes
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in the SPMD module.
+
+    HLO lines look like:  %all-reduce.5 = f32[512,1024] all-reduce(...)
+    (tuple results: f32[..], f32[..]) all-gather(...). Bytes are per-device
+    (post-partitioning shapes).
+    """
+    totals = {k: 0 for k in COLLECTIVE_OPS}
+    counts = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+([a-z\-]+)(?:-(start|done))?\(",
+                     line)
+        if not m:
+            continue
+        shape_part, opname = m.group(1), m.group(2)
+        if m.group(3) == "done":
+            continue                      # avoid double-counting async pairs
+        if opname not in COLLECTIVE_OPS:
+            continue
+        # shape_part may be "(f32[2,3]{...}, f32[4]{...})" for tuples
+        bytes_ = sum(_shape_bytes(s) for s in
+                     re.findall(r"[a-z0-9]+\[[0-9,]*\]", shape_part))
+        totals[opname] += bytes_
+        counts[opname] += 1
+    totals["total"] = sum(totals[k] for k in COLLECTIVE_OPS)
+    counts["total"] = sum(counts[k] for k in COLLECTIVE_OPS)
+    return {"bytes": totals, "counts": counts}
+
+
+def lower_cell(arch: str, shape: str, multi_pod: bool,
+               donate: bool = True):
+    """Build + lower + compile one cell. Returns (compiled, lowered, meta)."""
+    cfg = get_config(arch)
+    cell = specs_mod.SHAPES[shape]
+    skip = specs_mod.cell_status(arch, shape, cfg)
+    if skip:
+        return None, None, {"status": skip}
+
+    mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    rules = sh.build_rules(cfg, mesh, serve=(cell.kind == "decode"))
+
+    params_s = specs_mod.params_shape(cfg)
+    p_shard = sh.tree_shardings(params_s, cfg, mesh, rules)
+    inputs = specs_mod.input_specs(cfg, cell)
+
+    with use_rules(mesh, rules):
+        if cell.kind == "train":
+            opt_cfg = AdamWConfig()
+            opt_s = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), params_s)
+            o_shard = sh.tree_shardings(opt_s, cfg, mesh, rules)
+            b_shard = sh.batch_shardings(inputs, cfg, mesh, rules)
+            step = make_train_step(cfg, opt_cfg, cell.seq,
+                                   grad_shardings=p_shard)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, o_shard, b_shard),
+                out_shardings=(p_shard, o_shard, None),
+                donate_argnums=(0, 1) if donate else ())
+            lowered = jitted.lower(params_s, opt_s, inputs)
+        elif cell.kind == "prefill":
+            b_shard = sh.batch_shardings(inputs, cfg, mesh, rules)
+            step = make_prefill_step(cfg)
+            jitted = jax.jit(step, in_shardings=(p_shard, b_shard),
+                             out_shardings=None)
+            lowered = jitted.lower(params_s, inputs)
+        else:  # decode
+            c_shard = sh.cache_shardings(inputs["cache"], cfg, mesh, rules)
+            t_shard = sh.batch_shardings({"token": inputs["token"]}, cfg,
+                                         mesh, rules)["token"]
+            step = make_serve_step(cfg)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, c_shard, t_shard),
+                out_shardings=(None, c_shard),
+                donate_argnums=(1,) if donate else ())
+            lowered = jitted.lower(params_s, inputs["cache"], inputs["token"])
+        compiled = lowered.compile()
+    return compiled, lowered, {"status": "ok", "mesh": tuple(mesh.shape.values())}
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: Path) -> dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name}
+    try:
+        compiled, lowered, meta = lower_cell(arch, shape, multi_pod)
+        rec.update(meta)
+        if compiled is not None:
+            mem = compiled.memory_analysis()
+            rec["memory"] = {
+                "argument_size_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+                "output_size_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+                "temp_size_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+                "alias_size_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+                "generated_code_size_bytes": int(getattr(mem, "generated_code_size_in_bytes", 0)),
+            }
+            cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):
+                cost = cost[0]
+            rec["cost"] = {k: float(v) for k, v in cost.items()
+                           if isinstance(v, (int, float)) and (
+                               k in ("flops", "transcendentals")
+                               or k.startswith("bytes accessed"))}
+            hlo = compiled.as_text()
+            rec["collectives"] = collective_bytes_from_hlo(hlo)
+            from repro.launch.hlo_analysis import weighted_collectives
+            rec["collectives_weighted"] = weighted_collectives(hlo)
+            rec["hlo_lines"] = hlo.count("\n")
+    except Exception as e:  # noqa: BLE001 — record compile failures
+        rec["status"] = f"error: {type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["wall_s"] = round(time.time() - t0, 1)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / f"{arch}__{shape}__{mesh_name}.json"
+    path.write_text(json.dumps(rec, indent=1))
+    status = rec.get("status", "?")
+    print(f"[dryrun] {arch} x {shape} x {mesh_name}: {status} "
+          f"({rec['wall_s']}s)", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None,
+                    choices=list(specs_mod.SHAPES) + [None])
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", type=str, default="experiments/dryrun")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    archs = list_configs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(specs_mod.SHAPES) if (args.all or not args.shape) else [args.shape]
+
+    ok = skipped = failed = 0
+    for arch in archs:
+        for shape in shapes:
+            rec = run_cell(arch, shape, args.multipod, out_dir)
+            s = rec.get("status", "")
+            if s == "ok":
+                ok += 1
+            elif s.startswith("skip"):
+                skipped += 1
+            else:
+                failed += 1
+    print(f"[dryrun] done: {ok} ok, {skipped} skipped, {failed} failed")
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,271 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Perf hillclimbing harness (§Perf): lower a cell under a named variant,
+report the three roofline terms, log hypothesis -> change -> before/after.
+
+    python -m repro.launch.hillclimb --cell yi-decode --variant serve_tp
+    python -m repro.launch.hillclimb --cell kimi-train --all-variants
+
+Variants change ONE lever each (sharding rules, dispatch algorithm, carrier
+dtypes) so deltas are attributable; results append to
+experiments/hillclimb/<cell>.json.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.distributed.sharding import use_rules
+from repro.launch import mesh as mesh_mod
+from repro.launch import shardings as sh
+from repro.launch import specs as specs_mod
+from repro.launch.hlo_analysis import weighted_collectives
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.launch.roofline import analytic_flops, analytic_hbm_bytes
+from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step
+from repro.models import lm as lm_mod
+from repro.optim.adamw import AdamWConfig, adamw_init
+
+
+@dataclasses.dataclass
+class Variant:
+    name: str
+    hypothesis: str
+    cfg_patch: Dict = dataclasses.field(default_factory=dict)
+    rules_patch: Dict = dataclasses.field(default_factory=dict)
+    quant_serving: Optional[str] = None      # "w4a4" etc -> wq/ws params
+    cache_dtype: Optional[str] = None        # e.g. "float8_e4m3fn"
+    # analytic memory-term adjustments (bytes factors vs baseline model)
+    param_bytes: float = 2.0                 # bytes per weight read
+    cache_elem_bytes: float = 2.0
+
+
+def lower_variant(arch: str, shape: str, v: Variant, multi_pod=False):
+    cfg = dataclasses.replace(get_config(arch), **v.cfg_patch)
+    cell = specs_mod.SHAPES[shape]
+    mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    rules = sh.build_rules(cfg, mesh)
+    rules.update(v.rules_patch)
+
+    if v.quant_serving:
+        from repro.core import quant as Q
+        spec = {"w4a4": Q.W4A4, "w3a4": Q.W3A4, "w2a4": Q.W2A4}[v.quant_serving]
+        params_s = jax.eval_shape(
+            lambda k: lm_mod.quantize_lm_params(
+                lm_mod.init_lm(k, cfg), cfg, spec),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    else:
+        params_s = specs_mod.params_shape(cfg)
+    p_shard = sh.tree_shardings(params_s, cfg, mesh, rules)
+    inputs = specs_mod.input_specs(cfg, cell)
+    if v.cache_dtype and "cache" in inputs:
+        cdt = jnp.dtype(v.cache_dtype)
+        inputs["cache"] = jax.tree.map(
+            lambda x: (jax.ShapeDtypeStruct(x.shape, cdt)
+                       if x.dtype == jnp.bfloat16 else x), inputs["cache"])
+
+    with use_rules(mesh, rules):
+        if cell.kind == "train":
+            opt_cfg = AdamWConfig()
+            opt_s = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), params_s)
+            o_shard = sh.tree_shardings(opt_s, cfg, mesh, rules)
+            b_shard = sh.batch_shardings(inputs, cfg, mesh, rules)
+            step = make_train_step(cfg, opt_cfg, cell.seq,
+                                   grad_shardings=p_shard)
+            lowered = jax.jit(step, in_shardings=(p_shard, o_shard, b_shard),
+                              out_shardings=(p_shard, o_shard, None),
+                              donate_argnums=(0, 1)).lower(
+                params_s, opt_s, inputs)
+        elif cell.kind == "prefill":
+            b_shard = sh.batch_shardings(inputs, cfg, mesh, rules)
+            lowered = jax.jit(make_prefill_step(cfg),
+                              in_shardings=(p_shard, b_shard)).lower(
+                params_s, inputs)
+        else:
+            c_shard = sh.cache_shardings(inputs["cache"], cfg, mesh, rules)
+            t_shard = sh.batch_shardings({"token": inputs["token"]}, cfg,
+                                         mesh, rules)["token"]
+            lowered = jax.jit(make_serve_step(cfg),
+                              in_shardings=(p_shard, c_shard, t_shard),
+                              out_shardings=(None, c_shard),
+                              donate_argnums=(1,)).lower(
+                params_s, inputs["cache"], inputs["token"])
+        compiled = lowered.compile()
+    return compiled, cfg
+
+
+def measure(arch: str, shape: str, v: Variant, multi_pod=False) -> Dict:
+    chips = 512 if multi_pod else 256
+    t0 = time.time()
+    compiled, cfg = lower_variant(arch, shape, v, multi_pod)
+    wall = time.time() - t0
+    hlo = compiled.as_text()
+    cw = weighted_collectives(hlo)["bytes"]
+    coll = cw["total"] + cw["all-reduce"]        # ring AR ~ 2x payload
+    flops = analytic_flops(arch, shape)
+    hbm = analytic_hbm_bytes(arch, shape)
+    # dtype adjustments to the analytic memory model
+    hbm *= 1.0
+    if v.param_bytes != 2.0 or v.cache_elem_bytes != 2.0:
+        hbm = analytic_hbm_bytes_adjusted(arch, shape, v)
+    mem = compiled.memory_analysis()
+    terms = {
+        "t_compute_s": flops / (chips * PEAK_FLOPS_BF16),
+        "t_memory_s": hbm / (chips * HBM_BW),
+        "t_collective_s": coll / ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    return {
+        "arch": arch, "shape": shape, "variant": v.name,
+        "hypothesis": v.hypothesis, **terms,
+        "dominant": dominant.replace("t_", "").replace("_s", ""),
+        "roofline_fraction": terms["t_compute_s"] / max(terms.values()),
+        "collective_bytes_per_dev": int(coll),
+        "collectives": cw,
+        "temp_gib_per_dev": mem.temp_size_in_bytes / 2**30,
+        "args_gib_per_dev": mem.argument_size_in_bytes / 2**30,
+        "compile_wall_s": round(wall, 1),
+    }
+
+
+def analytic_hbm_bytes_adjusted(arch: str, shape: str, v: Variant) -> float:
+    """Re-derive the decode memory model with variant carrier widths."""
+    from repro.launch.roofline import _cache_bytes
+    from repro.models.lm import active_params, count_params
+    cfg = dataclasses.replace(get_config(arch), **v.cfg_patch)
+    cell = specs_mod.SHAPES[shape]
+    if cell.kind != "decode":
+        return analytic_hbm_bytes(arch, shape)
+    if cfg.family == "moe":
+        frac = min(1.0, cell.global_batch * cfg.top_k / cfg.n_experts)
+        expert_n = (count_params(cfg) - active_params(cfg)) \
+            / max(cfg.n_experts - cfg.top_k, 1) * cfg.n_experts
+        nonexpert_n = count_params(cfg) - expert_n
+        traffic = (nonexpert_n + expert_n * frac) * v.param_bytes
+    else:
+        traffic = count_params(cfg) * v.param_bytes
+    traffic += _cache_bytes(cfg, cell.global_batch, cell.seq) \
+        * (v.cache_elem_bytes / 2.0)
+    return float(traffic)
+
+
+# ---------------------------------------------------------------------------
+# Experiment registry — one cell per assigned hillclimb target
+# ---------------------------------------------------------------------------
+
+CELLS = {
+    "yi-decode": ("yi-34b", "decode_32k"),
+    "kimi-train": ("kimi-k2-1t-a32b", "train_4k"),
+    "grok-train": ("grok-1-314b", "train_4k"),
+}
+
+VARIANTS: Dict[str, list] = {
+    "yi-decode": [
+        Variant("base", "baseline: FSDP rules at inference"),
+        Variant("serve_tp",
+                "FSDP all-gathers dominate decode (params re-gathered per "
+                "layer). Pure-TP serving rules (params replicated over data) "
+                "eliminate them: collective term should drop ~100x to the "
+                "level of attention psums",
+                rules_patch={"embed": None, "expert_embed": None}),
+        Variant("serve_tp_w4",
+                "int4 MR carriers (the paper's storage) cut param bytes 4x "
+                "-> expect memory term ~4x down. REFUTED: at batch=128 x "
+                "32k the KV cache (1.03 TB) dominates params (69 GB) 15:1; "
+                "memory moved only 5%. Lesson: weight quantization is the "
+                "lever for SMALL-batch decode; here the cache is the wall",
+                rules_patch={"embed": None, "expert_embed": None},
+                quant_serving="w4a4", param_bytes=0.5),
+        Variant("serve_tp_kv8",
+                "narrow the dominant stream instead: f8 KV cache (the CRC "
+                "4-bit-activation idea applied to cache storage) halves "
+                "cache reads -> memory term ~1.9x down",
+                rules_patch={"embed": None, "expert_embed": None},
+                cache_dtype="float8_e4m3fn", cache_elem_bytes=1.0),
+        Variant("serve_tp_kv8_w4",
+                "stack both narrow carriers: memory -> ~0.5x cache + 0.25x "
+                "params; collective term (TP layer all-reduces, 2.6 ms) "
+                "should now be within ~2x of memory",
+                rules_patch={"embed": None, "expert_embed": None},
+                quant_serving="w4a4", param_bytes=0.5,
+                cache_dtype="float8_e4m3fn", cache_elem_bytes=1.0),
+    ],
+    "kimi-train": [
+        Variant("base", "baseline: sorted global dispatch"),
+        Variant("grouped",
+                "the [E*C,d] dispatch buffer scatter lowers to a ~32 GB "
+                "all-reduce over data PER LAYER (2.5 TB/step). group-local "
+                "dispatch scatters within each batch row -> that AR "
+                "disappears; remaining comm = combine gather over model",
+                cfg_patch={"moe_dispatch": "grouped"}),
+        Variant("grouped_cf1",
+                "capacity_factor 1.25 -> 1.0 cuts buffer/combine payload "
+                "20% with the same drop semantics at batch scale",
+                cfg_patch={"moe_dispatch": "grouped",
+                           "capacity_factor": 1.0}),
+        Variant("grouped_f8",
+                "combine payload in f8 (CRC-style narrow carriers across "
+                "the wire) halves the remaining all-gather",
+                cfg_patch={"moe_dispatch": "grouped",
+                           "capacity_factor": 1.0,
+                           "moe_combine_dtype": "float8_e4m3fn"}),
+    ],
+    "grok-train": [
+        Variant("base", "baseline: sorted global dispatch"),
+        Variant("grouped",
+                "same dispatch-buffer AR pathology as kimi (32 GB/layer "
+                "over data); group-local dispatch removes it. Experts (8) "
+                "can't shard on the 16-way model axis -> per-expert FFN "
+                "shards on model (Megatron-style partial-sum AR of the "
+                "expert outputs expected instead)",
+                cfg_patch={"moe_dispatch": "grouped"}),
+        Variant("grouped_cf1_f8",
+                "stack capacity 1.0 + f8 combine on top",
+                cfg_patch={"moe_dispatch": "grouped",
+                           "capacity_factor": 1.0,
+                           "moe_combine_dtype": "float8_e4m3fn"}),
+    ],
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, choices=list(CELLS))
+    ap.add_argument("--variant", default=None)
+    ap.add_argument("--all-variants", action="store_true")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--out", default="experiments/hillclimb")
+    args = ap.parse_args()
+
+    arch, shape = CELLS[args.cell]
+    variants = VARIANTS[args.cell]
+    if args.variant:
+        variants = [v for v in variants if v.name == args.variant]
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    log_path = out_dir / f"{args.cell}.json"
+    log = json.loads(log_path.read_text()) if log_path.exists() else []
+
+    for v in variants:
+        rec = measure(arch, shape, v, args.multipod)
+        log = [r for r in log if r["variant"] != v.name] + [rec]
+        log_path.write_text(json.dumps(log, indent=1))
+        print(f"[{args.cell}/{v.name}] compute={rec['t_compute_s']:.4g}s "
+              f"memory={rec['t_memory_s']:.4g}s "
+              f"collective={rec['t_collective_s']:.4g}s "
+              f"dominant={rec['dominant']} "
+              f"frac={rec['roofline_fraction']:.3f} "
+              f"(compile {rec['compile_wall_s']}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,167 @@
+"""Loop-aware HLO analysis: collective bytes weighted by while-loop trips.
+
+``compiled.as_text()`` contains each while body ONCE, but a scan over 60
+layers executes it 60 times — raw op counts undercount collective traffic by
+the trip count. This parser:
+
+  1. splits the module into computations,
+  2. finds ``while`` instructions and reads the trip count out of the
+     condition computation (the ``s32[] constant(N)`` the induction variable
+     is compared against),
+  3. propagates multipliers ENTRY -> while bodies (nested loops multiply),
+  4. sums result-shape bytes of every collective op weighted by its
+     computation's multiplier.
+
+Bytes are per-device (shapes in the SPMD module are post-partitioning).
+``all-reduce`` moves ~2x its shape bytes on a ring (reduce-scatter +
+all-gather); we report raw shape bytes and apply the ring factor in the
+roofline, where the algorithm term lives.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_TOKEN = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1}
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_WHILE_RE = re.compile(
+    r"while\(.*?\)(?:,|\s).*?condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CALL_RE = re.compile(r"(?:call|fusion)\(.*?to_apply=%?([\w.\-]+)")
+_COND_RE = re.compile(r"branches=\{([^}]*)\}")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_TOKEN.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_computations(hlo: str) -> Dict[str, List[str]]:
+    """Split the module by column-0 structure: headers are unindented lines
+    ending in '{'; bodies are indented; '}' at column 0 closes. (Header
+    param lists can contain nested parens — tuple-typed params — so no
+    attempt is made to parse them.)"""
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        if not line:
+            continue
+        unindented = not line[0].isspace()
+        stripped = line.strip()
+        if cur is None or unindented:
+            if unindented and stripped.endswith("{"):
+                m = _COMP_HEADER.match(stripped)
+                if m:
+                    cur = m.group(1)
+                    comps[cur] = []
+                    if stripped.startswith("ENTRY"):
+                        comps["__entry__"] = comps[cur]
+                    continue
+            if unindented and stripped.startswith("}"):
+                cur = None
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        comps[cur].append(stripped)
+    return comps
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Trip count heuristic: the largest s32 constant compared in the cond.
+
+    jax.lax.scan lowers to a while whose condition is `iter < N`; N shows up
+    as an s32[] constant. Falls back to 1 when nothing is found.
+    """
+    consts = []
+    for line in cond_lines:
+        consts += [int(c) for c in _CONST_RE.findall(line)]
+    return max(consts) if consts else 1
+
+
+def computation_multipliers(comps: Dict[str, List[str]]) -> Dict[str, float]:
+    """ENTRY has multiplier 1; while bodies inherit parent x trip count."""
+    edges: Dict[str, List[Tuple[str, float]]] = {}
+    for name, lines in comps.items():
+        if name == "__entry__":
+            continue
+        for line in lines:
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                trips = _trip_count(comps.get(cond, []))
+                edges.setdefault(name, []).append((body, float(trips)))
+                edges.setdefault(name, []).append((cond, float(trips)))
+                continue
+            cm = _CALL_RE.search(line)
+            if cm:
+                edges.setdefault(name, []).append((cm.group(1), 1.0))
+            bm = _COND_RE.search(line)
+            if bm:
+                for br in bm.group(1).split(","):
+                    edges.setdefault(name, []).append(
+                        (br.strip().lstrip("%"), 1.0))
+
+    entry = None
+    for name, lines in comps.items():
+        if name != "__entry__" and comps.get("__entry__") is lines:
+            entry = name
+    mult: Dict[str, float] = {}
+    if entry is None:
+        return {name: 1.0 for name in comps}
+    # BFS propagate (computations form a DAG)
+    stack = [(entry, 1.0)]
+    while stack:
+        name, m = stack.pop()
+        mult[name] = mult.get(name, 0.0) + m
+        for child, w in edges.get(name, []):
+            stack.append((child, m * w))
+    return mult
+
+
+def weighted_collectives(hlo: str) -> Dict:
+    """-> {"bytes": {op: weighted}, "counts": {...}, "raw_bytes": {...}}."""
+    comps = parse_computations(hlo)
+    mult = computation_multipliers(comps)
+    w_bytes = {k: 0.0 for k in COLLECTIVE_OPS}
+    r_bytes = {k: 0 for k in COLLECTIVE_OPS}
+    counts = {k: 0 for k in COLLECTIVE_OPS}
+    op_re = re.compile(
+        r"=\s*(.+?)\s+(" + "|".join(COLLECTIVE_OPS) + r")(-start)?\(")
+    for name, lines in comps.items():
+        if name == "__entry__":
+            continue
+        m = mult.get(name, 1.0)
+        for line in lines:
+            om = op_re.search(line)
+            if not om:
+                continue
+            if f"{om.group(2)}-done" in line:
+                continue
+            shape_part, op = om.group(1), om.group(2)
+            b = _shape_bytes(shape_part)
+            w_bytes[op] += b * m
+            r_bytes[op] += b
+            counts[op] += 1
+    w_bytes["total"] = sum(w_bytes[k] for k in COLLECTIVE_OPS)
+    r_bytes["total"] = sum(r_bytes[k] for k in COLLECTIVE_OPS)
+    counts["total"] = sum(counts[k] for k in COLLECTIVE_OPS)
+    return {"bytes": {k: int(v) for k, v in w_bytes.items()},
+            "raw_bytes": r_bytes, "counts": counts,
+            "n_computations": len(comps) - 1}

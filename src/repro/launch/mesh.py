@@ -1,0 +1,40 @@
+"""Production meshes.
+
+Single pod: 16 x 16 = 256 chips, axes ("data", "model").
+Multi-pod:  2 x 16 x 16 = 512 chips, axes ("pod", "data", "model") — the
+"pod" axis carries pure data parallelism across ICI domains (DCN in real
+deployments); gradient cross-pod traffic is the target of
+optim.compression.
+
+Functions, not module constants: importing this module must never touch jax
+device state (the dry-run sets XLA_FLAGS before first jax init; smoke tests
+run on 1 CPU device).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_devices: int | None = None):
+    """A (1, N) or (d, m) mesh over whatever devices exist (tests)."""
+    n = n_devices or len(jax.devices())
+    d = 1
+    for cand in (4, 2, 1):
+        if n % cand == 0 and cand <= n:
+            d = cand
+            break
+    return jax.make_mesh((d, n // d), ("data", "model"))
+
+
+# TPU v5e hardware constants (roofline denominators)
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link (~per-chip effective)
+HBM_PER_CHIP = 16 * 1024**3      # v5e: 16 GiB

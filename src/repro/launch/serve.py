@@ -1,0 +1,74 @@
+"""Batched serving driver: prefill + decode with the photonic-quantized path.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
+        --batch 4 --prompt-len 32 --gen 16 --quant w4a4
+
+Serving runs weights in photonic storage (int-carrier wq + scales) when
+--quant is set — the Lightator deployment mode: weights live at w_bits
+(4x smaller HBM footprint at w4), activations quantize through the CRC path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_variant
+from repro.models import lm as lm_mod
+
+
+def generate(params, cfg, prompt: jnp.ndarray, steps: int):
+    """Greedy decode. prompt: [B, T0] -> tokens [B, T0+steps]."""
+    b, t0 = prompt.shape
+    cache = lm_mod.init_cache(cfg, b, t0 + steps + 1)
+    step_fn = jax.jit(lambda p, c, t: lm_mod.decode_step(p, c, t, cfg))
+    toks = prompt
+    # prefill by stepping (simple; a production path uses batched prefill)
+    logits = None
+    for i in range(t0):
+        logits, cache = step_fn(params, cache, toks[:, i:i + 1])
+    for _ in range(steps):
+        nxt = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        toks = jnp.concatenate([toks, nxt], axis=1)
+        logits, cache = step_fn(params, cache, nxt)
+    return toks
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--quant", default="none",
+                    choices=["none", "w4a4", "w3a4", "w2a4"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = smoke_variant(args.arch) if args.smoke else get_config(args.arch)
+    cfg = dataclasses.replace(cfg, quant_scheme=args.quant)
+    key = jax.random.PRNGKey(args.seed)
+    params = lm_mod.init_lm(key, cfg)
+    rng = np.random.default_rng(args.seed)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab,
+                                      (args.batch, args.prompt_len)),
+                         jnp.int32)
+    t0 = time.time()
+    toks = generate(params, cfg, prompt, args.gen)
+    dt = time.time() - t0
+    n_new = args.batch * args.gen
+    print(f"[serve] arch={cfg.name} quant={cfg.quant_scheme} "
+          f"generated {toks.shape} in {dt:.2f}s "
+          f"({n_new/dt:.1f} tok/s incl. prefill+compile)")
+    assert bool(jnp.all(toks >= 0)) and bool(jnp.all(toks < cfg.vocab))
+    return toks
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,192 @@
+"""Param / optimizer / input / cache sharding rules per (arch x mesh).
+
+Name-based rules over the param tree paths (every projection is a ".../w"
+leaf; stacked layer params carry a leading [L] axis mapped to None).
+
+Key decisions (see DESIGN.md §5):
+  * batch        -> ("pod","data"); model axis carries TP everywhere
+  * attn heads / kv heads / d_ff / vocab -> "model" (GSPMD pads uneven dims,
+    e.g. yi's 56 heads; flagged in roofline notes)
+  * FSDP (cfg.fsdp): the non-model param dim ("embed") -> "data"
+  * MoE: experts -> "model" when n_experts >= model-axis size (kimi: 384),
+    otherwise the per-expert FFN dim -> "model" (grok: 8 experts x 32768 ffn)
+  * SSM: params replicated over model; activations shard on ssm heads
+  * decode caches: batch -> ("pod","data"), cache seq -> "model"
+    (sequence-sharded KV avoids padding 8 kv heads onto 16 shards)
+  * optimizer moments/master mirror the param specs exactly (ZeRO)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import base_rules
+
+PyTree = Any
+
+
+def build_rules(cfg: ModelConfig, mesh: Mesh, serve: bool = False) -> Dict:
+    multi_pod = "pod" in mesh.axis_names
+    model_size = mesh.shape["model"]
+    fsdp = cfg.fsdp
+    if serve and fsdp:
+        # serving profile (§Perf yi-decode): FSDP re-gathers every layer's
+        # weights per decoded token — pure TP is strictly better whenever
+        # the TP-sharded params fit HBM (<= 8 GiB/chip leaves room for cache)
+        from repro.models.lm import count_params
+        per_chip = count_params(cfg) * 2 / model_size
+        if per_chip <= 8 * 2**30:
+            fsdp = False
+    rules = base_rules(multi_pod=multi_pod, fsdp=fsdp)
+    rules["experts"] = ("model",) if cfg.n_experts >= model_size else None
+    rules["moe_ffn"] = None if rules["experts"] else ("model",)
+    rules["ssm_inner"] = None
+    # GQA kv heads that don't divide the model axis force padded resharding
+    # between q (heads-sharded) and k/v — XLA emits "involuntary full
+    # rematerialization" copies plus per-block all-gathers (§Perf, kimi
+    # iter 4). Replicating the kv ACTIVATIONS over model is cheaper: wk/wv
+    # params still shard on their flattened output dim.
+    if cfg.n_kv_heads and cfg.n_kv_heads % model_size != 0:
+        rules["kv"] = None
+    if cfg.n_heads and cfg.n_heads % model_size != 0:
+        rules["heads"] = None
+    return rules
+
+
+def _ax(rules, name):
+    ax = rules.get(name)
+    if ax is None:
+        return None
+    return ax if len(ax) > 1 else ax[0]
+
+
+def param_spec(path: str, ndim: int, cfg: ModelConfig, rules: Dict) -> P:
+    """PartitionSpec for one param leaf identified by its tree path."""
+    a = lambda name: _ax(rules, name)
+    stacked = path.startswith("layers/")
+    lead = (None,) if stacked else ()
+    # photonic serving storage: the int carrier shards like the fp weight;
+    # per-channel scales are tiny -> replicate
+    if path.endswith("/ws"):
+        return P(*([None] * ndim))
+    if path.endswith("/wq"):
+        path = path[:-3] + "/w"
+
+    def spec(*axes):
+        return P(*(lead + axes))
+
+    if path.endswith("embed/table"):
+        return P(a("vocab"), a("embed"))
+    if path.startswith("lm_head"):
+        return P(a("embed"), a("vocab"))
+    if path.startswith("frontend"):
+        return P() if ndim == 1 else P(None, None)
+    if "/attn/" in path:
+        if "/wo/" in path:
+            return spec(a("heads"), a("embed"))
+        return spec(a("embed"), a("heads"))          # wq/wk/wv
+    if "/mlp/" in path:
+        if "/w_down/" in path:
+            return spec(a("ffn"), a("embed"))
+        return spec(a("embed"), a("ffn"))
+    if "/moe/" in path:
+        if path.endswith("router"):
+            return spec(a("embed"), None)
+        if "w_down" in path:
+            return spec(a("experts"), a("moe_ffn"), a("expert_embed"))
+        return spec(a("experts"), a("expert_embed"), a("moe_ffn"))
+    if "/ssm/" in path:
+        if "/in_proj/" in path:
+            return spec(a("embed"), a("ssm_inner"))
+        if "/out_proj/" in path:
+            return spec(a("ssm_inner"), a("embed"))
+        # conv/dt/a_log/d_skip/norm: replicate
+        return spec(*([None] * (ndim - 1)))
+    # norms, biases, everything else: replicated
+    if stacked:
+        return spec(*([None] * (ndim - 1)))
+    return P(*([None] * ndim))
+
+
+def _sanitize(spec: P, shape, mesh: Mesh) -> P:
+    """Drop spec axes that don't divide the dimension (pjit arg shardings
+    must divide evenly; advisory constraints inside the program may pad,
+    explicit argument shardings may not)."""
+    entries = []
+    for i, ax in enumerate(spec):
+        if ax is None:
+            entries.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        entries.append(ax if shape[i] % size == 0 else None)
+    return P(*entries)
+
+
+def tree_shardings(tree: PyTree, cfg: ModelConfig, mesh: Mesh,
+                   rules: Dict) -> PyTree:
+    """NamedSharding tree matching ``tree`` (params or optimizer state)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+
+    def leaf_sharding(pathkeys, leaf):
+        parts = []
+        for pk in pathkeys:
+            if hasattr(pk, "key"):
+                parts.append(str(pk.key))
+            elif hasattr(pk, "name"):
+                parts.append(str(pk.name))
+        path = "/".join(parts)
+        # optimizer wrappers: mu/nu/master mirror the param below them
+        for prefix in ("mu/", "nu/", "master/", "error/"):
+            if path.startswith(prefix):
+                path = path[len(prefix):]
+        if path == "step" or leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        spec = param_spec(path, leaf.ndim, cfg, rules)
+        return NamedSharding(mesh, _sanitize(spec, leaf.shape, mesh))
+
+    shardings = [leaf_sharding(pk, leaf) for pk, leaf in flat]
+    return treedef.unflatten(shardings)
+
+
+def batch_shardings(batch: Dict, cfg: ModelConfig, mesh: Mesh,
+                    rules: Dict) -> Dict:
+    b = _ax(rules, "batch")
+    out = {}
+    for k, v in batch.items():
+        spec = _sanitize(P(*((b,) + (None,) * (v.ndim - 1))), v.shape, mesh)
+        out[k] = NamedSharding(mesh, spec)
+    return out
+
+
+def cache_shardings(cache: PyTree, cfg: ModelConfig, mesh: Mesh,
+                    rules: Dict) -> PyTree:
+    """Decode caches: [L, B, S, K, D] -> (None, batch, model-on-seq, .., ..)."""
+    b = _ax(rules, "batch")
+
+    def one(pathkeys, leaf):
+        parts = [str(getattr(pk, "key", "")) for pk in pathkeys]
+        path = "/".join(parts)
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        if "/kv/" in path or path.endswith("/k") or path.endswith("/v"):
+            # [L, B, S, K, D]: sequence-sharded KV cache
+            spec = P(None, b, "model", None, None)
+        elif path.endswith("/ssm"):
+            # [L, B, H, P, N]: shard SSM state over heads
+            spec = P(None, b, "model", None, None)
+        elif path.endswith("/conv"):
+            spec = P(None, b, None, None)
+        else:
+            spec = P(*((None,) * leaf.ndim))
+        return NamedSharding(mesh, _sanitize(spec, leaf.shape, mesh))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    return treedef.unflatten([one(pk, leaf) for pk, leaf in flat])

@@ -1,0 +1,92 @@
+"""Shape cells and input ShapeDtypeStructs for every (arch x shape) pair.
+
+The four LM shape cells (assigned):
+    train_4k     seq=4096,   global_batch=256   -> train_step
+    prefill_32k  seq=32768,  global_batch=32    -> prefill_step (forward)
+    decode_32k   seq=32768,  global_batch=128   -> serve_step (1 tok + cache)
+    long_500k    seq=524288, global_batch=1     -> serve_step (SSM/hybrid/SWA)
+
+Skips (DESIGN.md §Arch-applicability):
+    encoder-only (hubert)            -> no decode_32k / long_500k
+    pure full-attention archs        -> no long_500k
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm as lm_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq: int
+    global_batch: int
+    kind: str                   # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+FULL_ATTENTION_ARCHS = {
+    "yi-34b", "smollm-360m", "tinyllama-1.1b", "stablelm-3b",
+    "grok-1-314b", "kimi-k2-1t-a32b", "internvl2-26b",
+}
+
+
+def cell_status(arch: str, shape: str, cfg: ModelConfig) -> Optional[str]:
+    """None if runnable, else the skip reason recorded in the tables."""
+    if cfg.family == "encoder" and shape in ("decode_32k", "long_500k"):
+        return "skip: encoder-only, no autoregressive step"
+    if shape == "long_500k" and arch in FULL_ATTENTION_ARCHS:
+        return "skip: pure full attention (system directive: sub-quadratic only)"
+    return None
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for the step inputs (no allocation)."""
+    b, t = cell.global_batch, cell.seq
+    act_dtype = jnp.dtype(cfg.dtype)
+    if cell.kind in ("train", "prefill"):
+        batch: Dict[str, jax.ShapeDtypeStruct] = {}
+        if cfg.frontend == "audio":
+            batch["frames"] = _sds((b, t, cfg.frontend_dim), act_dtype)
+            if cell.kind == "train":
+                batch["labels"] = _sds((b, t), jnp.int32)
+        elif cfg.frontend == "vision":
+            t_text = t - cfg.n_patches
+            batch["patches"] = _sds((b, cfg.n_patches, cfg.frontend_dim),
+                                    act_dtype)
+            batch["tokens"] = _sds((b, t_text), jnp.int32)
+            if cell.kind == "train":
+                batch["labels"] = _sds((b, t_text), jnp.int32)
+        else:
+            batch["tokens"] = _sds((b, t), jnp.int32)
+            if cell.kind == "train":
+                batch["labels"] = _sds((b, t), jnp.int32)
+        return batch
+    # decode: one token + cache
+    token = _sds((b, 1), jnp.int32)
+    cache = jax.eval_shape(
+        lambda: lm_mod.init_cache(cfg, b, t, dtype=act_dtype))
+    return {"token": token, "cache": cache}
+
+
+def params_shape(cfg: ModelConfig):
+    """Param tree as ShapeDtypeStructs via eval_shape (no allocation)."""
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(lambda k: lm_mod.init_lm(k, cfg), key)

@@ -1,0 +1,65 @@
+"""Step builders: train / prefill / serve as pure jit-able functions."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm as lm_mod
+from repro.optim.adamw import AdamWConfig, adamw_update
+
+PyTree = Any
+
+
+def vocab_chunk_for(cfg: ModelConfig, seq: int) -> int:
+    """Chunk the CE loss when the [B,T,V] logits tensor would be monstrous."""
+    if cfg.vocab * seq >= 32768 * 4096:
+        return 512
+    if cfg.vocab >= 64000 and seq >= 4096:
+        return 1024
+    return 0
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamWConfig, seq: int,
+                    grad_shardings: PyTree = None):
+    """``grad_shardings`` (a tree of NamedShardings mirroring the params)
+    pins gradients to the param layout BEFORE the global-norm reduction.
+    Without the pin, SPMD satisfies the two consumers (scalar norm + sharded
+    moment update) by ALL-REDUCING full weight gradients instead of
+    reduce-scattering them (~770 GiB/step on grok-1 — §Perf iter 3)."""
+    vc = vocab_chunk_for(cfg, seq)
+
+    def train_step(params: PyTree, opt_state: PyTree,
+                   batch: Dict[str, jnp.ndarray]
+                   ) -> Tuple[PyTree, PyTree, Dict[str, jnp.ndarray]]:
+        def loss_fn(p):
+            return lm_mod.lm_loss(p, batch, cfg, vocab_chunk=vc)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        if grad_shardings is not None:
+            grads = jax.lax.with_sharding_constraint(grads, grad_shardings)
+        new_params, new_opt, om = adamw_update(params, grads, opt_state, opt)
+        return new_params, new_opt, {"loss": loss, **metrics, **om}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params: PyTree, batch: Dict[str, jnp.ndarray]):
+        logits, aux = lm_mod.lm_forward(params, batch, cfg)
+        # serving returns the last-position logits (next-token distribution)
+        return logits[:, -1, :]
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params: PyTree, cache: PyTree, token: jnp.ndarray):
+        return lm_mod.decode_step(params, cache, token, cfg)
+
+    return serve_step

@@ -1,0 +1,4 @@
+"""models — unified LM (all assigned families) + the paper's vision CNNs."""
+
+from repro.models.lm import (init_lm, lm_forward, lm_loss, init_cache,
+                             decode_step, count_params, model_flops)

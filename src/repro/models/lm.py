@@ -1,0 +1,550 @@
+"""Unified LM covering every assigned family with one scan-over-layers core.
+
+families:
+  dense    — llama-style GQA decoder (yi-34b, smollm, tinyllama, stablelm)
+  moe      — GQA decoder with MoE FFN (grok-1, kimi-k2)
+  ssm      — mamba2 SSD blocks, attention-free (mamba2-1.3b)
+  hybrid   — parallel attention + SSM heads per layer (hymba-1.5b)
+  encoder  — bidirectional encoder (hubert-xlarge; no decode path)
+  vlm      — decoder with a patch-embedding prefix (internvl2-26b)
+
+Compile-time discipline: layer params are stacked on a leading [L] axis and
+the layer body runs under ``jax.lax.scan`` — one layer body is compiled no
+matter the depth, which keeps the 512-device dry-run tractable. ``remat``
+wraps the body in ``jax.checkpoint``.
+
+The Lightator photonic-quantization feature threads through every projection
+via ``nn.layers.dense(quant=...)`` ([W{2,3,4}:A4] fake-quant for QAT, or
+int-carrier weights for serving after ``quantize_lm_params``).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.compressive import sequence_ca
+from repro.distributed.sharding import shard
+from repro.nn import attention as attn_mod
+from repro.nn import layers as L
+from repro.nn import moe as moe_mod
+from repro.nn import ssm as ssm_mod
+from repro.nn.module import KeyGen, normal_init, scaled_init
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_attn(kg: KeyGen, cfg: ModelConfig, dtype):
+    d, hd = cfg.d_model, cfg.head_dim
+    return {
+        "wq": {"w": scaled_init(d)(kg(), (d, cfg.n_heads * hd), dtype)},
+        "wk": {"w": scaled_init(d)(kg(), (d, cfg.n_kv_heads * hd), dtype)},
+        "wv": {"w": scaled_init(d)(kg(), (d, cfg.n_kv_heads * hd), dtype)},
+        "wo": {"w": scaled_init(cfg.n_heads * hd)(kg(), (cfg.n_heads * hd, d),
+                                                  dtype)},
+    }
+
+
+def _init_mlp(kg: KeyGen, cfg: ModelConfig, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    p = {"w_up": {"w": scaled_init(d)(kg(), (d, f), dtype)},
+         "w_down": {"w": scaled_init(f)(kg(), (f, d), dtype)}}
+    if cfg.ffn == "swiglu":
+        p["w_gate"] = {"w": scaled_init(d)(kg(), (d, f), dtype)}
+    return p
+
+
+def _init_ssm(kg: KeyGen, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    di, h = cfg.d_inner, cfg.ssm_heads
+    gn = cfg.ssm_groups * cfg.ssm_state
+    in_dim = 2 * di + 2 * gn + h
+    return {
+        "in_proj": {"w": scaled_init(d)(kg(), (d, in_dim), dtype)},
+        "conv_w": normal_init(0.1)(kg(), (cfg.conv_kernel, cfg.conv_dim),
+                                   jnp.float32),
+        "conv_b": jnp.zeros((cfg.conv_dim,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "a_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm": {"scale": jnp.ones((di,), dtype)},
+        "out_proj": {"w": scaled_init(di)(kg(), (di, d), dtype)},
+    }
+
+
+def _init_norm(kg: KeyGen, cfg: ModelConfig, dtype):
+    if cfg.norm == "layer":
+        return {"scale": jnp.ones((cfg.d_model,), dtype),
+                "bias": jnp.zeros((cfg.d_model,), dtype)}
+    return {"scale": jnp.ones((cfg.d_model,), dtype)}
+
+
+def _apply_norm(p, x, cfg: ModelConfig):
+    return L.layernorm(p, x) if cfg.norm == "layer" else L.rmsnorm(p, x)
+
+
+def _layer_init(key, cfg: ModelConfig, dtype) -> Dict:
+    kg = KeyGen(key)
+    p: Dict[str, Any] = {"norm1": _init_norm(kg, cfg, dtype)}
+    if cfg.family in ("dense", "moe", "encoder", "vlm", "hybrid"):
+        p["attn"] = _init_attn(kg, cfg, dtype)
+    if cfg.family in ("ssm", "hybrid"):
+        p["ssm"] = _init_ssm(kg, cfg, dtype)
+        if cfg.family == "hybrid":
+            p["mix_norm_a"] = {"scale": jnp.ones((cfg.d_model,), dtype)}
+            p["mix_norm_s"] = {"scale": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.family != "ssm":
+        p["norm2"] = _init_norm(kg, cfg, dtype)
+        if cfg.family == "moe":
+            mcfg = moe_mod.MoEConfig(cfg.n_experts, cfg.top_k, cfg.d_model,
+                                     cfg.d_ff, cfg.capacity_factor)
+            p["moe"] = moe_mod.init_moe(kg(), mcfg, dtype)
+        else:
+            p["mlp"] = _init_mlp(kg, cfg, dtype)
+    return p
+
+
+def init_lm(key, cfg: ModelConfig) -> PyTree:
+    dtype = jnp.dtype(cfg.dtype)
+    kg = KeyGen(key)
+    params: Dict[str, Any] = {
+        "embed": {"table": normal_init(0.02)(kg(), (cfg.vocab, cfg.d_model),
+                                             dtype)},
+    }
+    if cfg.frontend != "none":
+        params["frontend"] = L.init_dense(kg(), cfg.frontend_dim, cfg.d_model,
+                                          bias=True, dtype=dtype)
+    # stacked layers: init one layer per key, stack — but avoid materializing
+    # L copies sequentially in python for big L: vmap the init over keys.
+    keys = jax.random.split(kg(), cfg.n_layers)
+    params["layers"] = jax.vmap(
+        lambda k: _layer_init(k, cfg, dtype))(keys)
+    params["final_norm"] = _init_norm(kg, cfg, dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_dense(kg(), cfg.d_model, cfg.vocab,
+                                         dtype=dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _attn_block(p, x, cfg: ModelConfig, positions, quant,
+                cache: Optional[Dict] = None, pos_scalar=None):
+    """x: [B,T,D] -> [B,T,D]; if cache given, T==1 decode step."""
+    b, t, _ = x.shape
+    hd = cfg.head_dim
+    q = L.dense(p["wq"], x, quant).reshape(b, t, cfg.n_heads, hd)
+    k = L.dense(p["wk"], x, quant).reshape(b, t, cfg.n_kv_heads, hd)
+    v = L.dense(p["wv"], x, quant).reshape(b, t, cfg.n_kv_heads, hd)
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "kv", None)
+    if cache is None:
+        q = attn_mod.apply_rope(q, positions, cfg.rope_theta)
+        k = attn_mod.apply_rope(k, positions, cfg.rope_theta)
+        out = attn_mod.attention(q, k, v, causal=cfg.causal,
+                                 window=cfg.sliding_window)
+        new_cache = None
+    else:
+        pos_b = jnp.broadcast_to(pos_scalar[None, None], (b, 1))
+        q = attn_mod.apply_rope(q, pos_b, cfg.rope_theta)
+        k = attn_mod.apply_rope(k, pos_b, cfg.rope_theta)
+        ring = cfg.sliding_window is not None
+        kv = attn_mod.KVCache(cache["k"], cache["v"], pos_scalar)
+        kv = attn_mod.cache_update(kv, k, v, ring=ring)
+        out = attn_mod.decode_attention(q, kv, window=cfg.sliding_window)
+        new_cache = {"k": kv.k, "v": kv.v}
+    out = out.reshape(b, t, cfg.n_heads * hd)
+    y = L.dense(p["wo"], out, quant)
+    return shard(y, "batch", None, "act_embed"), new_cache
+
+
+def _mlp_block(p, x, cfg: ModelConfig, quant):
+    up = L.dense(p["w_up"], x, quant)
+    if cfg.ffn == "swiglu":
+        gate = L.dense(p["w_gate"], x, quant)
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    h = shard(h, "batch", None, "ffn")
+    return L.dense(p["w_down"], h, quant)
+
+
+def _ssm_block(p, x, cfg: ModelConfig, quant,
+               cache: Optional[Dict] = None):
+    """Mamba2 block. x: [B,T,D]. Returns (y, new_cache)."""
+    b, t, _ = x.shape
+    di, h, pdim = cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim
+    gn = cfg.ssm_groups * cfg.ssm_state
+    proj = L.dense(p["in_proj"], x, quant)       # [B,T,2di+2gn+h]
+    z, xbc, dt_raw = jnp.split(proj, [di, 2 * di + 2 * gn], axis=-1)
+    a = -jnp.exp(p["a_log"])                     # [H]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])          # [B,T,H]
+    if cache is None:
+        xbc = ssm_mod.causal_conv1d(xbc, p["conv_w"], p["conv_b"])
+        xbc = jax.nn.silu(xbc)
+        xs, bmat, cmat = jnp.split(xbc, [di, di + gn], axis=-1)
+        xs = xs.reshape(b, t, h, pdim)
+        xs = shard(xs, "batch", None, "ssm_heads", None)
+        bmat = bmat.reshape(b, t, cfg.ssm_groups, cfg.ssm_state)
+        cmat = cmat.reshape(b, t, cfg.ssm_groups, cfg.ssm_state)
+        y, _ = ssm_mod.ssd_chunked(xs, dt, a, bmat, cmat,
+                                   chunk=min(cfg.ssd_chunk, t))
+        new_cache = None
+    else:
+        xbc_new, conv_state = ssm_mod.causal_conv1d_step(
+            cache["conv"], xbc[:, 0], p["conv_w"], p["conv_b"])
+        xbc_new = jax.nn.silu(xbc_new)
+        xs, bvec, cvec = jnp.split(xbc_new, [di, di + gn], axis=-1)
+        xs = xs.reshape(b, h, pdim)
+        bvec = bvec.reshape(b, cfg.ssm_groups, cfg.ssm_state)
+        cvec = cvec.reshape(b, cfg.ssm_groups, cfg.ssm_state)
+        y1, ssm_state = ssm_mod.ssd_decode_step(
+            cache["ssm"], xs, dt[:, 0], a, bvec, cvec)
+        y = y1[:, None]                           # [B,1,H,P]
+        xs = xs[:, None]
+        new_cache = {"conv": conv_state, "ssm": ssm_state}
+        xs = xs.reshape(b, t, h, pdim)
+    y = y + xs.reshape(y.shape) * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, t, di).astype(x.dtype)
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z).astype(x.dtype))
+    return L.dense(p["out_proj"], y, quant).astype(x.dtype), new_cache
+
+
+def _layer(p, x, cfg: ModelConfig, positions, quant,
+           cache: Optional[Dict] = None, pos_scalar=None):
+    """One block. Returns (x_out, aux, new_cache)."""
+    aux = {"balance": jnp.zeros((), jnp.float32),
+           "z": jnp.zeros((), jnp.float32),
+           "dropped": jnp.zeros((), jnp.float32)}
+    new_cache: Dict[str, Any] = {}
+    h = _apply_norm(p["norm1"], x, cfg)
+    if cfg.family in ("dense", "moe", "encoder", "vlm"):
+        y, kvc = _attn_block(p["attn"], h, cfg, positions, quant,
+                             cache.get("kv") if cache else None, pos_scalar)
+        if kvc is not None:
+            new_cache["kv"] = kvc
+        x = x + y
+    elif cfg.family == "ssm":
+        y, sc = _ssm_block(p["ssm"], h, cfg, quant,
+                           cache.get("ssm_block") if cache else None)
+        if sc is not None:
+            new_cache["ssm_block"] = sc
+        return x + y, aux, new_cache            # mamba block = mixer only
+    elif cfg.family == "hybrid":
+        ya, kvc = _attn_block(p["attn"], h, cfg, positions, quant,
+                              cache.get("kv") if cache else None, pos_scalar)
+        ys, sc = _ssm_block(p["ssm"], h, cfg, quant,
+                            cache.get("ssm_block") if cache else None)
+        if kvc is not None:
+            new_cache["kv"] = kvc
+        if sc is not None:
+            new_cache["ssm_block"] = sc
+        y = 0.5 * (L.rmsnorm(p["mix_norm_a"], ya)
+                   + L.rmsnorm(p["mix_norm_s"], ys))
+        x = x + y
+    # FFN ------------------------------------------------------------------
+    h2 = _apply_norm(p["norm2"], x, cfg)
+    if cfg.family == "moe":
+        mcfg = moe_mod.MoEConfig(cfg.n_experts, cfg.top_k, cfg.d_model,
+                                 cfg.d_ff, cfg.capacity_factor)
+        if cfg.moe_dispatch == "grouped":
+            cdt = (None if cfg.moe_combine_dtype == "none"
+                   else jnp.dtype(cfg.moe_combine_dtype))
+            out = moe_mod.moe_ffn_grouped(p["moe"], h2, mcfg, quant,
+                                          combine_dtype=cdt)
+        else:
+            out = moe_mod.moe_ffn(p["moe"], h2, mcfg, quant)
+        aux = {"balance": out.balance_loss, "z": out.z_loss,
+               "dropped": out.dropped_fraction}
+        x = x + out.y
+    else:
+        x = x + _mlp_block(p["mlp"], h2, cfg, quant)
+    return x, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Embedding / frontend
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig):
+    """Token ids and/or modality embeddings -> [B, T, D] hidden states.
+
+    batch keys: "tokens" [B,T_text] int32, and for audio/vlm "frames" /
+    "patches" [B,T_m,frontend_dim] (precomputed stub embeddings).
+    """
+    parts = []
+    if cfg.frontend != "none":
+        key = "frames" if cfg.frontend == "audio" else "patches"
+        m = batch[key]
+        if cfg.ca_factor > 1:
+            # compressive acquisition at the sensor interface (paper step 2)
+            m = sequence_ca(m, cfg.ca_factor)
+        parts.append(L.dense(params["frontend"], m))
+    if "tokens" in batch and batch["tokens"] is not None:
+        parts.append(L.embedding_lookup(params["embed"], batch["tokens"]))
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    return shard(x.astype(jnp.dtype(cfg.dtype)), "batch", None, "act_embed")
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def lm_forward(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+               return_hidden: bool = False):
+    """-> (logits [B,T,V] | hidden, aux dict). Scan over stacked layers."""
+    x = embed_inputs(params, batch, cfg)
+    b, t, _ = x.shape
+    positions = jnp.arange(t)[None, :]
+    quant = cfg.quant_spec()
+
+    def body(carry, lp):
+        h, bal, z, drp = carry
+        h2, aux, _ = _layer(lp, h, cfg, positions, quant)
+        return (h2, bal + aux["balance"], z + aux["z"],
+                drp + aux["dropped"]), None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    elif cfg.remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    zero = jnp.zeros((), jnp.float32)
+    (x, bal, z, drp), _ = jax.lax.scan(body, (x, zero, zero, zero),
+                                       params["layers"])
+    x = _apply_norm(params["final_norm"], x, cfg)
+    aux = {"balance": bal / cfg.n_layers, "z": z / cfg.n_layers,
+           "dropped": drp / cfg.n_layers}
+    if return_hidden:
+        return x, aux
+    logits = _lm_logits(params, x, cfg)
+    return logits, aux
+
+
+def _lm_logits(params, x, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        logits = L.embedding_logits(params["embed"], x)
+    else:
+        logits = L.dense(params["lm_head"], x)
+    return shard(logits, "batch", None, "vocab")
+
+
+def lm_loss(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+            vocab_chunk: int = 0):
+    """Mean CE over labeled positions (+ MoE aux). batch["labels"] [B,T_l],
+    batch["loss_mask"] optional. For big-vocab archs, ``vocab_chunk``>0
+    computes CE from hidden states in sequence chunks so [B,T,V] logits are
+    never materialized at once.
+    """
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    hidden, aux = lm_forward(params, batch, cfg, return_hidden=True)
+    # align hidden to labels (vlm: labels only cover the text tail)
+    t_l = labels.shape[1]
+    h = hidden[:, -t_l:, :]
+
+    if vocab_chunk and t_l > vocab_chunk:
+        n_chunks = t_l // vocab_chunk
+
+        def ce_chunk(carry, idx):
+            hs = jax.lax.dynamic_slice_in_dim(h, idx * vocab_chunk,
+                                              vocab_chunk, axis=1)
+            ls = jax.lax.dynamic_slice_in_dim(labels, idx * vocab_chunk,
+                                              vocab_chunk, axis=1)
+            lg = _lm_logits(params, hs, cfg).astype(jnp.float32)
+            ce = _ce(lg, ls)
+            if mask is not None:
+                ms = jax.lax.dynamic_slice_in_dim(mask, idx * vocab_chunk,
+                                                  vocab_chunk, axis=1)
+                return (carry[0] + (ce * ms).sum(), carry[1] + ms.sum()), None
+            return (carry[0] + ce.sum(), carry[1] + ce.size), None
+
+        (tot, cnt), _ = jax.lax.scan(
+            ce_chunk, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            jnp.arange(n_chunks))
+        loss = tot / jnp.maximum(cnt, 1.0)
+    else:
+        logits = _lm_logits(params, h, cfg).astype(jnp.float32)
+        ce = _ce(logits, labels)
+        if mask is not None:
+            loss = (ce * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+        else:
+            loss = ce.mean()
+    total = loss + aux["balance"] + aux["z"]
+    metrics = {"ce": loss, **aux}
+    return total, metrics
+
+
+def _ce(logits, labels):
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return logz - gold
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Dict:
+    """Stacked per-layer caches [L, ...] + a shared position scalar."""
+    cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    lcache: Dict[str, Any] = {}
+    if cfg.family in ("dense", "moe", "encoder", "vlm", "hybrid"):
+        s = max_len if cfg.sliding_window is None else min(
+            max_len, cfg.sliding_window)
+        z = jnp.zeros((cfg.n_layers, batch, s, cfg.n_kv_heads, cfg.head_dim),
+                      dtype)
+        lcache["kv"] = {"k": z, "v": jnp.zeros_like(z)}
+    if cfg.family in ("ssm", "hybrid"):
+        lcache["ssm_block"] = {
+            "conv": jnp.zeros((cfg.n_layers, batch, cfg.conv_kernel - 1,
+                               cfg.conv_dim), dtype),
+            "ssm": jnp.zeros((cfg.n_layers, batch, cfg.ssm_heads,
+                              cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+        }
+    cache["layers"] = lcache
+    return cache
+
+
+def decode_step(params, cache: Dict, token: jnp.ndarray, cfg: ModelConfig):
+    """One serving step: token [B,1] int32 -> (logits [B,V], new cache)."""
+    x = L.embedding_lookup(params["embed"], token).astype(jnp.dtype(cfg.dtype))
+    x = shard(x, "batch", None, "act_embed")
+    pos = cache["pos"]
+    quant = cfg.quant_spec()
+
+    def body(carry, xs):
+        h = carry
+        lp, lc = xs
+        h2, _, new_lc = _layer(lp, h, cfg, None, quant, cache=lc,
+                               pos_scalar=pos)
+        return h2, new_lc
+
+    x, new_layer_cache = jax.lax.scan(
+        body, x, (params["layers"], cache["layers"]))
+    x = _apply_norm(params["final_norm"], x, cfg)
+    logits = _lm_logits(params, x, cfg)[:, 0]
+    return logits, {"pos": pos + 1, "layers": new_layer_cache}
+
+
+# ---------------------------------------------------------------------------
+# Photonic serving storage (the Lightator deployment mode)
+# ---------------------------------------------------------------------------
+
+def quantize_lm_params(params, cfg: ModelConfig, spec,
+                       carrier=jnp.int4) -> PyTree:
+    """fp params -> MR storage: every projection becomes {wq, ws}.
+
+    ``carrier``: jnp.int4 for [4:*] (2 weights/byte — the true MR density),
+    int8 otherwise. Norms, embeddings and SSM conv/dt params stay fp
+    (they live in the electronic part of the architecture).
+    """
+    def mr_quantize(w):
+        """Per-(layer/expert, out-channel) symmetric quant: reduce only the
+        contraction axis (-2), so stacked [L, ...] structure is preserved."""
+        w32 = w.astype(jnp.float32)
+        amax = jnp.max(jnp.abs(w32), axis=-2, keepdims=True)
+        s = jnp.maximum(amax, 1e-8) / spec.w_qmax
+        q = jnp.clip(jnp.round(w32 / s), -spec.w_qmax, spec.w_qmax)
+        return q.astype(carrier), s.astype(jnp.float32)
+
+    def transform(node, path=()):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if k == "w" and path and path[-1] in (
+                        "wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
+                        "in_proj", "out_proj"):
+                    q, s = mr_quantize(v)
+                    out["wq"] = q
+                    out["ws"] = s
+                else:
+                    out[k] = transform(v, path + (k,))
+            return out
+        if isinstance(node, (list, tuple)):
+            return type(node)(transform(v, path + (str(i),))
+                              for i, v in enumerate(node))
+        # MoE stacked expert weights are raw arrays named w_gate/w_up/w_down
+        if path and path[-1] in ("w_gate", "w_up", "w_down") \
+                and hasattr(node, "ndim") and node.ndim >= 3:
+            q, s = mr_quantize(node)
+            return {"wq": q, "ws": s}
+        return node
+
+    return transform(params)
+
+
+# ---------------------------------------------------------------------------
+# Accounting
+# ---------------------------------------------------------------------------
+
+def count_params(cfg: ModelConfig) -> int:
+    """Analytic parameter count (no allocation)."""
+    d, v = cfg.d_model, cfg.vocab
+    n = v * d                                   # embedding
+    if cfg.frontend != "none":
+        n += cfg.frontend_dim * d + d
+    per = d                                     # norm1
+    if cfg.family in ("dense", "moe", "encoder", "vlm", "hybrid"):
+        per += d * cfg.attn_dim + 2 * d * cfg.kv_dim + cfg.attn_dim * d
+    if cfg.family in ("ssm", "hybrid"):
+        di, h = cfg.d_inner, cfg.ssm_heads
+        gn = cfg.ssm_groups * cfg.ssm_state
+        per += d * (2 * di + 2 * gn + h)        # in_proj
+        per += cfg.conv_kernel * cfg.conv_dim + cfg.conv_dim
+        per += 3 * h + di + di * d              # dt/a/D, norm, out_proj
+        if cfg.family == "hybrid":
+            per += 2 * d
+    if cfg.family != "ssm":
+        per += d                                # norm2
+        if cfg.family == "moe":
+            per += d * cfg.n_experts
+            per += cfg.n_experts * (3 * d * cfg.d_ff)
+        else:
+            n_mats = 3 if cfg.ffn == "swiglu" else 2
+            per += n_mats * d * cfg.d_ff
+    n += cfg.n_layers * per + d                 # final norm
+    if not cfg.tie_embeddings:
+        n += d * v
+    return n
+
+
+def active_params(cfg: ModelConfig) -> int:
+    """Params touched per token (MoE: only top_k experts)."""
+    if cfg.family != "moe":
+        return count_params(cfg)
+    total = count_params(cfg)
+    expert = 3 * cfg.d_model * cfg.d_ff
+    inactive = cfg.n_layers * (cfg.n_experts - cfg.top_k) * expert
+    return total - inactive
+
+
+def model_flops(cfg: ModelConfig, seq: int, batch: int,
+                train: bool = True, decode: bool = False) -> float:
+    """MODEL_FLOPS = 6*N*D (train) or 2*N_active*D (inference) + attention."""
+    n_active = active_params(cfg) - cfg.vocab * cfg.d_model * (
+        0 if cfg.tie_embeddings else 0)
+    tokens = batch * (1 if decode else seq)
+    mult = 6 if train else 2
+    flops = mult * n_active * tokens
+    # attention scores/values term: 2 * 2 * T * S * H * dh per token pair set
+    if cfg.family in ("dense", "moe", "encoder", "vlm", "hybrid"):
+        s_ctx = seq
+        if cfg.sliding_window is not None:
+            s_ctx = min(seq, cfg.sliding_window)
+        att = 4 * cfg.n_heads * cfg.head_dim * s_ctx * tokens * cfg.n_layers
+        flops += att * (3 if train else 1)
+    return float(flops)

@@ -1,0 +1,223 @@
+"""The paper's own CNNs as Lightator layer-IR + trainable JAX functions.
+
+LeNet (MNIST) and VGG9 (CIFAR10/100) are the paper's evaluation models
+(Table 1, Figs. 8/9); VGG16 and AlexNet appear in the execution-time
+comparison (Fig. 10). Each model is expressed twice, consistently:
+
+  * ``*_ir()``       — the LightatorDevice layer IR (drives mapping + power)
+  * ``init_/apply_`` — trainable QAT forward (same quantized semantics via
+                       nn.layers conv2d/dense fake-quant)
+
+Pooling: max pools run electronically; avg pools run on CA banks with
+pre-set weights (the paper's "pooling layers are implemented within CA
+banks"), which the IR encodes for the power model.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.accelerator import CASpec, ConvSpec, DenseSpec, FlattenSpec, LayerIR
+from repro.core.quant import WASpec, MixedPrecisionScheme, resolve_layer_specs
+from repro.nn import layers as L
+from repro.nn.module import KeyGen
+
+
+# ---------------------------------------------------------------------------
+# Layer IRs (architecture level)
+# ---------------------------------------------------------------------------
+
+def lenet_ir(in_hw: int = 28, n_classes: int = 10,
+             use_ca: bool = False) -> List[LayerIR]:
+    """LeNet-5 flavored for 28x28 grayscale (paper: MNIST on LeNET)."""
+    layers: List[LayerIR] = []
+    hw = in_hw
+    c_in = 1
+    if use_ca:
+        layers.append(CASpec(pool=2, rgb_to_gray=False))
+        hw //= 2
+    layers += [
+        ConvSpec("conv1", c_in, 6, kernel=5, padding="SAME", pool=("avg", 2)),
+        ConvSpec("conv2", 6, 16, kernel=5, padding="VALID", pool=("avg", 2)),
+        FlattenSpec(),
+    ]
+    hw = hw // 2                    # conv1 pool
+    hw = (hw - 4) // 2              # conv2 VALID + pool
+    layers += [
+        DenseSpec("fc1", 16 * hw * hw, 120),
+        DenseSpec("fc2", 120, 84),
+        DenseSpec("fc3", 84, n_classes, act="none"),
+    ]
+    return layers
+
+
+def vgg9_ir(in_hw: int = 32, n_classes: int = 100,
+            use_ca: bool = True) -> List[LayerIR]:
+    """VGG9: 6 conv (3x3) + 3 FC — the paper's CIFAR10/100 model.
+
+    With use_ca (the Table-1 operating point), the CA fuses RGB->gray with
+    2x2 mean pooling before conv1 (c_in=1, 16x16 input for CIFAR).
+    """
+    layers: List[LayerIR] = []
+    hw = in_hw
+    c_in = 3
+    if use_ca:
+        layers.append(CASpec(pool=2, rgb_to_gray=True))
+        hw //= 2
+        c_in = 1
+    chans = [(c_in, 64), (64, 64), (64, 128), (128, 128), (256, 256)]
+    chans = [(c_in, 64), (64, 64), (64, 128), (128, 128),
+             (128, 256), (256, 256)]
+    for i, (ci, co) in enumerate(chans):
+        pool = ("max", 2) if i % 2 == 1 else None
+        layers.append(ConvSpec(f"conv{i+1}", ci, co, kernel=3, pool=pool))
+        if pool:
+            hw //= 2
+    layers.append(FlattenSpec())
+    layers += [
+        DenseSpec("fc1", 256 * hw * hw, 512),
+        DenseSpec("fc2", 512, 512),
+        DenseSpec("fc3", 512, n_classes, act="none"),
+    ]
+    return layers
+
+
+def vgg16_ir(in_hw: int = 224, n_classes: int = 1000) -> List[LayerIR]:
+    cfg = [(3, 64), (64, 64), "P", (64, 128), (128, 128), "P",
+           (128, 256), (256, 256), (256, 256), "P",
+           (256, 512), (512, 512), (512, 512), "P",
+           (512, 512), (512, 512), (512, 512), "P"]
+    layers: List[LayerIR] = []
+    hw = in_hw
+    idx = 0
+    prev_pool: Optional[Tuple[str, int]] = None
+    for item in cfg:
+        if item == "P":
+            # attach pooling to the previous conv
+            prev = layers[-1]
+            assert isinstance(prev, ConvSpec)
+            layers[-1] = ConvSpec(prev.name, prev.c_in, prev.c_out,
+                                  prev.kernel, prev.stride, prev.padding,
+                                  prev.act, ("max", 2))
+            hw //= 2
+            continue
+        idx += 1
+        layers.append(ConvSpec(f"conv{idx}", item[0], item[1], kernel=3))
+    layers.append(FlattenSpec())
+    layers += [
+        DenseSpec("fc1", 512 * hw * hw, 4096),
+        DenseSpec("fc2", 4096, 4096),
+        DenseSpec("fc3", 4096, n_classes, act="none"),
+    ]
+    return layers
+
+
+def alexnet_ir(in_hw: int = 227, n_classes: int = 1000) -> List[LayerIR]:
+    """AlexNet (Fig. 10 comparison). 11x11/5x5/3x3 kernels exercise the
+    multi-arm mapping path (11x11 -> 14 arms -> multi-bank strides)."""
+    return [
+        ConvSpec("conv1", 3, 96, kernel=11, stride=4, padding="VALID",
+                 pool=("max", 2)),
+        ConvSpec("conv2", 96, 256, kernel=5, pool=("max", 2)),
+        ConvSpec("conv3", 256, 384, kernel=3),
+        ConvSpec("conv4", 384, 384, kernel=3),
+        ConvSpec("conv5", 384, 256, kernel=3, pool=("max", 2)),
+        FlattenSpec(),
+        DenseSpec("fc1", 256 * 6 * 6, 4096),
+        DenseSpec("fc2", 4096, 4096),
+        DenseSpec("fc3", 4096, n_classes, act="none"),
+    ]
+
+
+VISION_MODELS = {
+    "lenet": lenet_ir,
+    "vgg9": vgg9_ir,
+    "vgg16": vgg16_ir,
+    "alexnet": alexnet_ir,
+}
+
+
+# ---------------------------------------------------------------------------
+# Trainable QAT forward (application level)
+# ---------------------------------------------------------------------------
+
+def init_vision(key, layers: List[LayerIR], dtype=jnp.float32) -> Dict:
+    kg = KeyGen(key)
+    params: Dict[str, Dict] = {}
+    for layer in layers:
+        if isinstance(layer, ConvSpec):
+            params[layer.name] = L.init_conv2d(kg(), layer.kernel, layer.c_in,
+                                               layer.c_out, dtype=dtype)
+        elif isinstance(layer, DenseSpec):
+            params[layer.name] = L.init_dense(kg(), layer.fan_in,
+                                              layer.fan_out, bias=True,
+                                              dtype=dtype)
+    return params
+
+
+def apply_vision(params, layers: List[LayerIR], x: jnp.ndarray,
+                 scheme: WASpec | MixedPrecisionScheme | None = None
+                 ) -> jnp.ndarray:
+    """QAT forward: fake-quantized convs/denses (STE), float pooling.
+
+    Numerically equivalent clipping/rounding to the LightatorDevice integer
+    path; differentiable for the paper's 6-epoch quantization-aware tuning.
+    """
+    from repro.core.compressive import compressive_acquire
+    compute = [l for l in layers if isinstance(l, (ConvSpec, DenseSpec))]
+    specs = (resolve_layer_specs(len(compute), scheme)
+             if scheme is not None else [None] * len(compute))
+    it = iter(specs)
+    for layer in layers:
+        if isinstance(layer, CASpec):
+            x = compressive_acquire(x, layer.pool, layer.rgb_to_gray)
+            if x.ndim == 3:
+                x = x[..., None]
+        elif isinstance(layer, ConvSpec):
+            spec = next(it)
+            x = L.conv2d(params[layer.name], x, layer.stride, layer.padding,
+                         quant=spec)
+            x = jax.nn.relu(x) if layer.act == "relu" else x
+            if layer.pool:
+                kind, size = layer.pool
+                x = L.max_pool2d(x, size) if kind == "max" else L.avg_pool2d(x, size)
+        elif isinstance(layer, FlattenSpec):
+            x = x.reshape(x.shape[0], -1)
+        elif isinstance(layer, DenseSpec):
+            spec = next(it)
+            x = L.dense(params[layer.name], x, quant=spec)
+            if layer.act == "relu":
+                x = jax.nn.relu(x)
+    return x
+
+
+def vision_schedules(layers: List[LayerIR], in_hw: int):
+    """Layer IR -> OCSchedules (what benchmarks feed the power model)."""
+    from repro.core import optical_core as ocore
+    scheds = []
+    hw = in_hw
+    c_last = None
+    for layer in layers:
+        if isinstance(layer, CASpec):
+            hw //= layer.pool
+            scheds.append(ocore.schedule_ca("CA", hw, hw, layer.pool, 3))
+        elif isinstance(layer, ConvSpec):
+            if layer.padding == "VALID":
+                hw = (hw - layer.kernel) // layer.stride + 1
+            else:
+                hw = -(-hw // layer.stride)
+            scheds.append(ocore.schedule_conv(layer.name, hw, hw, layer.c_in,
+                                              layer.c_out, layer.kernel))
+            if layer.pool:
+                hw //= layer.pool[1]
+                if layer.pool[0] == "avg":
+                    scheds.append(ocore.schedule_ca(
+                        f"{layer.name}.pool", hw, hw, layer.pool[1], 1))
+            c_last = layer.c_out
+        elif isinstance(layer, DenseSpec):
+            scheds.append(ocore.schedule_fc(layer.name, layer.fan_in,
+                                            layer.fan_out))
+    return scheds

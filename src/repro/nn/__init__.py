@@ -1,0 +1,12 @@
+"""nn — pure-functional neural-net substrate (no flax; params are pytrees).
+
+Conventions:
+  * every layer is a pair of functions ``init_*(key, cfg...) -> params`` and
+    ``apply_*(params, x, ...) -> y``; params are nested dicts of jnp arrays.
+  * models stack layer params with a leading layer axis and run
+    ``jax.lax.scan`` over layers — compile time is O(1) in depth, which is
+    what makes the 512-device dry-runs tractable.
+  * projections route through ``layers.dense`` which supports the Lightator
+    photonic quantization (PQ) modes [W{2,3,4}:A4] via ``core.quant`` and the
+    ``photonic_mvm`` Pallas kernel.
+"""

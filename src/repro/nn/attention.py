@@ -1,0 +1,205 @@
+"""Attention: GQA + RoPE, flash-style blockwise softmax, KV cache, SWA.
+
+Shapes follow the [B, T, H, D] convention (batch, time, heads, head_dim);
+KV uses [B, S, K, D] with K (kv heads) <= H and H % K == 0.
+
+Three execution paths:
+  * ``attention``        — blockwise (flash-style) online-softmax over KV
+                           blocks via ``lax.scan``: O(T*S) compute, O(block)
+                           memory. Default for training/prefill.
+  * ``attention_naive``  — materialized scores; reference/oracle + tiny tests.
+  * ``decode_attention`` — single-token query against a cache; O(S) per step.
+
+Sliding-window attention (``window``) masks keys older than the window; for
+decode the cache itself is a ring buffer of window size, which is what makes
+hymba's long_500k cell sub-quadratic in memory and compute.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)                       # [D/2]
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x: [B, T, H, D]; positions: [B, T] (or [T]) absolute positions."""
+    freqs = rope_frequencies(x.shape[-1], theta)            # [D/2]
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, T, D/2]
+    cos = jnp.cos(angles)[:, :, None, :]                    # [B, T, 1, D/2]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Reference (naive) attention
+# ---------------------------------------------------------------------------
+
+def _expand_kv(k: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """[B,S,K,D] -> [B,S,H,D] by repeating each kv head H//K times."""
+    b, s, kv, d = k.shape
+    reps = n_heads // kv
+    return jnp.repeat(k, reps, axis=2) if reps > 1 else k
+
+
+def attention_naive(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, window: Optional[int] = None,
+                    q_offset: int = 0) -> jnp.ndarray:
+    """Oracle. q: [B,T,H,D], k/v: [B,S,K,D] -> [B,T,H,D]."""
+    b, t, h, d = q.shape
+    s = k.shape[1]
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    scale = d ** -0.5
+    scores = jnp.einsum("bthd,bshd->bhts", q, k).astype(jnp.float32) * scale
+    qpos = jnp.arange(t) + q_offset
+    kpos = jnp.arange(s)
+    mask = jnp.ones((t, s), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhts,bshd->bthd", probs.astype(v.dtype), v)
+
+
+# ---------------------------------------------------------------------------
+# Flash-style blockwise attention
+# ---------------------------------------------------------------------------
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              causal: bool = True, window: Optional[int] = None,
+              kv_block: int = 512, q_offset: int = 0) -> jnp.ndarray:
+    """Online-softmax attention, scanning KV blocks. Memory O(T * kv_block).
+
+    GQA-aware: computes in grouped layout [B, T, K, G, D] so kv heads are
+    never materialized H/K times.
+    """
+    b, t, h, d = q.shape
+    s = k.shape[1]
+    kv_heads = k.shape[2]
+    g = h // kv_heads
+    scale = d ** -0.5
+
+    if s % kv_block:
+        pad = kv_block - s % kv_block
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s_pad = s + pad
+    else:
+        s_pad = s
+    n_blocks = s_pad // kv_block
+
+    qg = q.reshape(b, t, kv_heads, g, d)
+    kb = k.reshape(b, n_blocks, kv_block, kv_heads, d)
+    vb = v.reshape(b, n_blocks, kv_block, kv_heads, d)
+    qpos = (jnp.arange(t) + q_offset)[:, None]              # [T, 1]
+
+    def step(carry, blk):
+        m_prev, l_prev, acc = carry
+        k_blk, v_blk, blk_idx = blk                         # [B,kvb,K,D]
+        kpos = blk_idx * kv_block + jnp.arange(kv_block)[None, :]   # [1,kvb]
+        sc = jnp.einsum("btkgd,bskd->btkgs", qg, k_blk).astype(jnp.float32)
+        sc = sc * scale
+        mask = kpos < s                                     # padding
+        if causal:
+            mask = mask & (kpos <= qpos)
+        if window is not None:
+            mask = mask & (kpos > qpos - window)
+        sc = jnp.where(mask[None, :, None, None, :], sc, NEG_INF)
+        m_blk = jnp.max(sc, axis=-1)                        # [B,T,K,G]
+        m_new = jnp.maximum(m_prev, m_blk)
+        p = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("btkgs,bskd->btkgd", p.astype(v_blk.dtype), v_blk)
+        acc = acc * corr[..., None].astype(acc.dtype) + pv.astype(jnp.float32)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, t, kv_heads, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, t, kv_heads, g), jnp.float32)
+    acc0 = jnp.zeros((b, t, kv_heads, g, d), jnp.float32)
+    kb_t = jnp.moveaxis(kb, 1, 0)                           # [n,B,kvb,K,D]
+    vb_t = jnp.moveaxis(vb, 1, 0)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0), (kb_t, vb_t, jnp.arange(n_blocks)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, t, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV cache + decode
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray          # [B, S_cache, K, D]
+    v: jnp.ndarray
+    pos: jnp.ndarray        # [] int32 — number of tokens already written
+
+    @classmethod
+    def init(cls, batch: int, max_len: int, kv_heads: int, head_dim: int,
+             dtype=jnp.bfloat16):
+        z = jnp.zeros((batch, max_len, kv_heads, head_dim), dtype)
+        return cls(z, jnp.zeros_like(z), jnp.zeros((), jnp.int32))
+
+
+def cache_update(cache: KVCache, k_new: jnp.ndarray, v_new: jnp.ndarray,
+                 ring: bool = False) -> KVCache:
+    """Insert [B, 1, K, D] at cache.pos (ring buffer if ``ring``)."""
+    s_cache = cache.k.shape[1]
+    idx = jnp.where(ring, cache.pos % s_cache,
+                    jnp.minimum(cache.pos, s_cache - 1)) if ring else cache.pos
+    k = jax.lax.dynamic_update_slice(
+        cache.k, k_new.astype(cache.k.dtype), (0, idx, 0, 0))
+    v = jax.lax.dynamic_update_slice(
+        cache.v, v_new.astype(cache.v.dtype), (0, idx, 0, 0))
+    return KVCache(k, v, cache.pos + 1)
+
+
+def decode_attention(q: jnp.ndarray, cache: KVCache,
+                     window: Optional[int] = None) -> jnp.ndarray:
+    """Single-step decode: q [B,1,H,D] vs the cache. O(S_cache) per token.
+
+    With a ring-buffer cache (sliding window) every resident entry is valid
+    once pos >= S_cache; before that, entries >= pos are masked.
+    """
+    b, one, h, d = q.shape
+    s_cache = cache.k.shape[1]
+    kv_heads = cache.k.shape[2]
+    g = h // kv_heads
+    scale = d ** -0.5
+    qg = q.reshape(b, kv_heads, g, d)
+    # caches may live in a narrower dtype (f8/int8 — the CRC trick applied
+    # to KV storage); upcast at use, XLA fuses the cast into the einsum
+    k_cache = cache.k.astype(q.dtype)
+    v_cache = cache.v.astype(q.dtype)
+    sc = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache).astype(jnp.float32) * scale
+    kpos = jnp.arange(s_cache)
+    # cache.pos counts tokens already written (cache_update increments it),
+    # so entries 0..pos-1 are valid; the query sits at position pos-1.
+    valid = kpos < cache.pos
+    if window is not None and window < s_cache:
+        valid &= kpos >= cache.pos - window
+    sc = jnp.where(valid[None, None, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(q.dtype), v_cache)
+    return out.reshape(b, 1, h, d).astype(q.dtype)

@@ -1,0 +1,174 @@
+"""Core layers: dense (photonic-quantizable), embedding, norms, conv.
+
+``dense`` is the single projection primitive every model routes through; its
+``quant`` argument turns on the Lightator PQ path:
+
+  quant=None          plain matmul (bf16/f32) — the non-photonic baseline
+  quant=WASpec, mode="fake"    QAT fake-quant (STE) — training the paper's way
+  quant=WASpec, mode="qweights"  weight-only quantized storage (int carriers
+                      dequantized on the fly) — photonic serving; weights live
+                      at w_bits the way they live on the MRs
+  quant=WASpec, mode="kernel"  the photonic_mvm Pallas kernel (integer MAC)
+
+Params are dicts: dense -> {"w": [in,out](, "b": [out])}; quantized storage
+adds {"wq": int8 [in,out], "ws": [1,out] or [out]}.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import WASpec, fake_quant_act, fake_quant_weight
+from repro.nn.module import KeyGen, normal_init, scaled_init, zeros_init, ones_init
+
+
+# ---------------------------------------------------------------------------
+# Dense
+# ---------------------------------------------------------------------------
+
+def init_dense(key, d_in: int, d_out: int, bias: bool = False,
+               dtype=jnp.float32, stddev: float | None = None):
+    kg = KeyGen(key)
+    init = normal_init(stddev) if stddev is not None else scaled_init(d_in)
+    p = {"w": init(kg(), (d_in, d_out), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(params, x: jnp.ndarray, quant: Optional[WASpec] = None,
+          mode: str = "fake", act_scale: float = 1.0 / 15.0) -> jnp.ndarray:
+    """x: [..., d_in] -> [..., d_out]."""
+    if "wq" in params:
+        # photonic serving storage: int-carrier weights + per-channel scales
+        # (weights live at w_bits the way they live on the MRs)
+        w = params["wq"].astype(x.dtype) * params["ws"].astype(x.dtype)
+        y = x @ w
+        if "b" in params:
+            y = y + params["b"].astype(y.dtype)
+        return y
+    if quant is None:
+        y = x @ params["w"]
+    elif mode == "fake":
+        # QAT: activations clipped to [0, qmax*scale] happens inside; weights
+        # symmetric per-out-channel. Photonic activations are unsigned, but
+        # interior LM activations are signed — we model the paper's BPD trick
+        # (two VCSEL rails) by quantizing |x| and reapplying sign.
+        w = fake_quant_weight(params["w"].astype(jnp.float32), quant)
+        sgn = jnp.sign(x)
+        mag = fake_quant_act(jnp.abs(x.astype(jnp.float32)),
+                             scale=act_scale, a_bits=quant.a_bits)
+        y = ((sgn * mag) @ w).astype(x.dtype)
+    elif mode == "qweights":
+        # weight-only: int-carrier weights dequantized on the fly (serving)
+        w = params["wq"].astype(x.dtype) * params["ws"].astype(x.dtype)
+        y = x @ w
+    elif mode == "kernel":
+        from repro.kernels.photonic_mvm import ops as pk_ops
+        y = pk_ops.photonic_mvm(x, params["w"], quant, act_scale=act_scale)
+    else:
+        raise ValueError(f"unknown quant mode {mode}")
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+def quantize_dense_params(params, spec: WASpec):
+    """Convert fp dense params to photonic serving storage (wq int8 + ws)."""
+    from repro.core.quant import quantize_weight
+    wq, ws = quantize_weight(params["w"].astype(jnp.float32), spec, axis=-1)
+    out = {"wq": wq, "ws": ws.astype(jnp.float32)}
+    if "b" in params:
+        out["b"] = params["b"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d_model: int, dtype=jnp.float32):
+    return {"table": normal_init(1.0)(key, (vocab, d_model), dtype)}
+
+
+def embedding_lookup(params, ids: jnp.ndarray) -> jnp.ndarray:
+    # one_hot matmul is pathological for big vocab; take() is the right op
+    return jnp.take(params["table"], ids, axis=0)
+
+
+def embedding_logits(params, x: jnp.ndarray) -> jnp.ndarray:
+    """Tied output head: x [..., d] @ table.T -> [..., vocab]."""
+    return x @ params["table"].T
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(key, dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def init_layernorm(key, dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Conv2D (vision models; NHWC)
+# ---------------------------------------------------------------------------
+
+def init_conv2d(key, k: int, c_in: int, c_out: int, bias: bool = True,
+                dtype=jnp.float32):
+    kg = KeyGen(key)
+    p = {"w": scaled_init(k * k * c_in)(kg(), (k, k, c_in, c_out), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((c_out,), dtype)
+    return p
+
+
+def conv2d(params, x: jnp.ndarray, stride: int = 1, padding: str = "SAME",
+           quant: Optional[WASpec] = None) -> jnp.ndarray:
+    w = params["w"]
+    if quant is not None:
+        w = fake_quant_weight(w.astype(jnp.float32), quant).astype(x.dtype)
+        sgn = jnp.sign(x)
+        x = sgn * fake_quant_act(jnp.abs(x.astype(jnp.float32)),
+                                 scale=1.0 / 15.0,
+                                 a_bits=quant.a_bits).astype(x.dtype)
+    y = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+def max_pool2d(x: jnp.ndarray, size: int = 2) -> jnp.ndarray:
+    b, h, w, c = x.shape
+    return x.reshape(b, h // size, size, w // size, size, c).max(axis=(2, 4))
+
+
+def avg_pool2d(x: jnp.ndarray, size: int = 2) -> jnp.ndarray:
+    b, h, w, c = x.shape
+    return x.reshape(b, h // size, size, w // size, size, c).mean(axis=(2, 4))

@@ -1,0 +1,93 @@
+"""Param-tree utilities and initializers for the pure-functional substrate."""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, Iterable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def normal_init(stddev: float = 0.02):
+    def init(key, shape, dtype=jnp.float32):
+        return stddev * jax.random.normal(key, shape, dtype)
+    return init
+
+
+def scaled_init(fan_in: int):
+    """1/sqrt(fan_in) — the default for projection matrices."""
+    return normal_init(1.0 / math.sqrt(max(fan_in, 1)))
+
+
+def zeros_init():
+    def init(key, shape, dtype=jnp.float32):
+        return jnp.zeros(shape, dtype)
+    return init
+
+
+def ones_init():
+    def init(key, shape, dtype=jnp.float32):
+        return jnp.ones(shape, dtype)
+    return init
+
+
+# ---------------------------------------------------------------------------
+# Key management
+# ---------------------------------------------------------------------------
+
+class KeyGen:
+    """Deterministic key splitter: kg = KeyGen(key); k = kg()."""
+
+    def __init__(self, key: jax.Array):
+        self._key = key
+
+    def __call__(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+# ---------------------------------------------------------------------------
+# Tree utilities
+# ---------------------------------------------------------------------------
+
+def tree_size(tree: PyTree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree: PyTree) -> int:
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.tree.leaves(tree))
+
+
+def tree_flatten_with_paths(tree: PyTree) -> Iterable[Tuple[str, jnp.ndarray]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in flat:
+        name = "/".join(_path_str(p) for p in path)
+        yield name, leaf
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def stack_layer_params(layer_params: list[PyTree]) -> PyTree:
+    """Stack per-layer param trees along a new leading 'layers' axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *layer_params)
+
+
+def cast_tree(tree: PyTree, dtype) -> PyTree:
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree)

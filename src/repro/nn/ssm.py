@@ -1,0 +1,179 @@
+"""Mamba2 — state-space duality (SSD), chunked parallel form + decode step.
+
+Implements the SSD algorithm of "Transformers are SSMs" (arXiv:2405.21060):
+the selective SSM
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t        h: [H, P, N]
+    y_t = C_t . h_t + D x_t
+is evaluated in O(T) by splitting time into chunks: a quadratic
+(attention-like) intra-chunk term with the 1-semiseparable decay mask L, and
+an inter-chunk recurrence over per-chunk states carried by ``lax.scan``.
+
+Shapes: x [B, T, H, P]; A [H]; B, C [B, T, G, N] (G groups, GQA-style);
+dt [B, T, H]. chunk = Q.
+
+This is attention-free and O(T) — mamba2/hymba are the archs that run the
+long_500k cell. Decode carries state [B, H, P, N]: O(1) per token.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} a[..., k] (j < i).
+
+    Returns -inf above the diagonal; exp(segsum) is the lower-triangular
+    decay mask L of the SSD dual form.
+    """
+    t = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]     # sum over (j, i]
+    mask = jnp.tril(jnp.ones((t, t), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+                b: jnp.ndarray, c: jnp.ndarray, chunk: int = 128,
+                initial_state: Optional[jnp.ndarray] = None,
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD scan. Returns (y [B,T,H,P], final_state [B,H,P,N])."""
+    bsz, t, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    assert t % chunk == 0, f"T({t}) must divide chunk({chunk})"
+    nc = t // chunk
+    hg = h // g                                           # heads per group
+
+    # chunked views --------------------------------------------------------
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    bc = b.reshape(bsz, nc, chunk, g, n)
+    cc = c.reshape(bsz, nc, chunk, g, n)
+
+    da = dtc * a[None, None, None, :]                     # [B,nc,Q,H] (<0)
+    da = jnp.moveaxis(da, -1, -2)                         # [B,nc,H,Q]
+    da_cs = jnp.cumsum(da, axis=-1)                       # [B,nc,H,Q]
+
+    # 1) intra-chunk (diagonal blocks): attention-like with decay mask -----
+    l_mask = jnp.exp(segsum(da))                          # [B,nc,H,Q,Q]
+    # scores: C_i . B_j  -> [B,nc,H,Q,Q] with GQA group broadcast
+    cb = jnp.einsum("bcqgn,bcsgn->bcgqs", cc, bc)         # [B,nc,G,Q,Q]
+    cb = jnp.repeat(cb, hg, axis=2)                       # [B,nc,H,Q,Q]
+    dtx = xc * jnp.moveaxis(dtc, -1, -1)[..., None]       # x * dt [B,nc,Q,H,P]
+    scores = cb * l_mask
+    y_diag = jnp.einsum("bchqs,bcshp->bcqhp",
+                        scores.astype(x.dtype), dtx.astype(x.dtype))
+
+    # 2) per-chunk states: what each chunk contributes to the carried state
+    # expand the GQA-style groups to heads (head h uses group h // (H/G))
+    bh = jnp.repeat(bc, hg, axis=3)                       # [B,nc,Q,H,N]
+    ch = jnp.repeat(cc, hg, axis=3)
+    decay_states = jnp.exp(da_cs[..., -1:] - da_cs)       # [B,nc,H,Q]
+    states = jnp.einsum("bcqhn,bchq,bcqhp->bchpn",
+                        bh.astype(jnp.float32),
+                        decay_states.astype(jnp.float32) *
+                        jnp.moveaxis(dtc, -1, -2).astype(jnp.float32),
+                        xc.astype(jnp.float32))           # [B,nc,H,P,N]
+
+    # 3) inter-chunk recurrence over carried states -------------------------
+    chunk_decay = jnp.exp(da_cs[..., -1])                 # [B,nc,H]
+    s0 = (initial_state if initial_state is not None
+          else jnp.zeros((bsz, h, p, n), jnp.float32))
+
+    def scan_fn(carry, inp):
+        st, dec = inp                                     # [B,H,P,N], [B,H]
+        new = carry * dec[..., None, None] + st
+        return new, carry                                 # emit PREVIOUS state
+
+    states_t = jnp.moveaxis(states, 1, 0)                 # [nc,B,H,P,N]
+    decay_t = jnp.moveaxis(chunk_decay, 1, 0)             # [nc,B,H]
+    final_state, prev_states = jax.lax.scan(scan_fn, s0, (states_t, decay_t))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)         # [B,nc,H,P,N]
+
+    # 4) inter-chunk output: C_t . (decay-to-t applied to incoming state) ---
+    state_decay = jnp.exp(da_cs)                          # [B,nc,H,Q]
+    y_off = jnp.einsum("bcqhn,bchpn,bchq->bcqhp",
+                       ch.astype(jnp.float32), prev_states,
+                       state_decay.astype(jnp.float32))
+
+    y = (y_diag.astype(jnp.float32) + y_off).reshape(bsz, t, h, p)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_reference(x, dt, a, b, c, initial_state=None):
+    """O(T) sequential oracle (slow; tests only)."""
+    bsz, t, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    hg = h // g
+    state = (initial_state if initial_state is not None
+             else jnp.zeros((bsz, h, p, n), jnp.float32))
+    ys = []
+    for i in range(t):
+        da = jnp.exp(dt[:, i] * a[None, :])               # [B,H]
+        bi = jnp.repeat(b[:, i], hg, axis=1)              # [B,H,N]
+        ci = jnp.repeat(c[:, i], hg, axis=1)
+        upd = (dt[:, i][..., None, None] * x[:, i][..., None]
+               * bi[:, :, None, :])                       # [B,H,P,N]
+        state = state * da[..., None, None] + upd
+        ys.append(jnp.einsum("bhpn,bhn->bhp", state, ci))
+    y = jnp.stack(ys, axis=1)                             # [B,T,H,P]
+    return y.astype(x.dtype), state
+
+
+class SSMState(NamedTuple):
+    """Decode-time cache: conv window + SSM state."""
+    conv: jnp.ndarray        # [B, K-1, conv_dim]
+    ssm: jnp.ndarray         # [B, H, P, N] float32
+    pos: jnp.ndarray         # [] int32
+
+    @classmethod
+    def init(cls, batch: int, conv_k: int, conv_dim: int, heads: int,
+             head_dim: int, state: int, dtype=jnp.bfloat16):
+        return cls(jnp.zeros((batch, conv_k - 1, conv_dim), dtype),
+                   jnp.zeros((batch, heads, head_dim, state), jnp.float32),
+                   jnp.zeros((), jnp.int32))
+
+
+def ssd_decode_step(state: jnp.ndarray, x: jnp.ndarray, dt: jnp.ndarray,
+                    a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray):
+    """One recurrent step. x [B,H,P]; dt [B,H]; b,c [B,G,N]; state [B,H,P,N].
+
+    Returns (y [B,H,P], new_state). O(H*P*N) — independent of context length.
+    """
+    h = x.shape[1]
+    g = b.shape[1]
+    hg = h // g
+    da = jnp.exp(dt * a[None, :])                         # [B,H]
+    bi = jnp.repeat(b, hg, axis=1)                        # [B,H,N]
+    ci = jnp.repeat(c, hg, axis=1)
+    upd = (dt[..., None, None] * x[..., None]) * bi[:, :, None, :]
+    new_state = state * da[..., None, None] + upd.astype(jnp.float32)
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, ci.astype(jnp.float32))
+    return y.astype(x.dtype), new_state
+
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, bias: jnp.ndarray | None = None
+                  ) -> jnp.ndarray:
+    """Depthwise causal conv. x: [B, T, C]; w: [K, C] -> [B, T, C]."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):
+        out = out + xp[:, i:i + x.shape[1], :].astype(jnp.float32) * w[i][None, None, :]
+    if bias is not None:
+        out = out + bias[None, None, :]
+    return out.astype(x.dtype)
+
+
+def causal_conv1d_step(conv_state: jnp.ndarray, x_new: jnp.ndarray,
+                       w: jnp.ndarray, bias: jnp.ndarray | None = None):
+    """Decode step for the depthwise conv. conv_state [B,K-1,C], x_new [B,C]."""
+    window = jnp.concatenate([conv_state, x_new[:, None, :]], axis=1)  # [B,K,C]
+    y = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), w)
+    if bias is not None:
+        y = y + bias[None, :]
+    new_state = window[:, 1:, :]
+    return y.astype(x_new.dtype), new_state

@@ -1,0 +1,5 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedule import cosine_schedule, linear_warmup_cosine
+from repro.optim.clip import global_norm, clip_by_global_norm
+from repro.optim.compression import (compress_int8, decompress_int8,
+                                     compressed_allreduce_update)

@@ -1,0 +1,89 @@
+"""AdamW with mixed-precision master params — built in-repo (no optax here).
+
+Design for scale:
+  * Moments (and optional f32 master copy of bf16 params) are plain pytrees
+    mirroring the param tree -> they inherit the params' NamedShardings
+    (ZeRO-style: sharded over the same axes, never replicated when params
+    are FSDP-sharded).
+  * ``adamw_update`` is pure and jit-safe; the train step closes over the
+    config.
+  * Optional int8 gradient compression hooks live in optim.compression.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4                    # peak lr (scheduled outside or const)
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    master_fp32: bool = True            # keep f32 master for bf16 params
+
+
+def adamw_init(params: PyTree, cfg: AdamWConfig) -> PyTree:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "mu": jax.tree.map(zeros32, params),
+        "nu": jax.tree.map(zeros32, params),
+    }
+    if cfg.master_fp32:
+        state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def adamw_update(params: PyTree, grads: PyTree, state: PyTree,
+                 cfg: AdamWConfig,
+                 lr: Optional[jnp.ndarray] = None) -> Tuple[PyTree, PyTree, dict]:
+    """One AdamW step. Returns (new_params, new_state, metrics).
+
+    Grads are kept in their native (bf16) dtype until the per-leaf moment
+    updates: the f32 upcast is elementwise and fuses AFTER any resharding
+    collectives, so gradient reshards move 2-byte payloads, not 4-byte
+    (measured 2x on the §Perf kimi cell). The global-norm reduction happens
+    per-leaf in f32 scalars — no f32 gradient tensors are materialized.
+    """
+    from repro.optim.clip import global_norm
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    step = state["step"] + 1
+    lr_t = jnp.asarray(cfg.lr if lr is None else lr, jnp.float32)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def g32(g):
+        return g.astype(jnp.float32) * scale
+
+    mu = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g32(g),
+                      state["mu"], grads)
+    nu = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32(g)),
+                      state["nu"], grads)
+
+    masters = state.get("master", params)
+
+    def upd(p32, m, v):
+        mhat = m / b1c
+        vhat = v / b2c
+        return (p32.astype(jnp.float32)
+                - lr_t * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                          + cfg.weight_decay * p32.astype(jnp.float32)))
+
+    new_master = jax.tree.map(upd, masters, mu, nu)
+    new_params = jax.tree.map(
+        lambda nm, p: nm.astype(p.dtype), new_master, params)
+    new_state = {"step": step, "mu": mu, "nu": nu}
+    if "master" in state:
+        new_state["master"] = new_master
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr_t}

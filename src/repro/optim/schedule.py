@@ -1,0 +1,20 @@
+"""LR schedules (pure functions of the step scalar)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, total_steps: int, peak: float,
+                    final_frac: float = 0.1):
+    t = jnp.clip(step.astype(jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return peak * (final_frac + (1 - final_frac) * cos)
+
+
+def linear_warmup_cosine(step, warmup: int, total_steps: int, peak: float,
+                         final_frac: float = 0.1):
+    warm = peak * jnp.minimum(step.astype(jnp.float32) / max(warmup, 1), 1.0)
+    cos = cosine_schedule(jnp.maximum(step - warmup, 0),
+                          max(total_steps - warmup, 1), peak, final_frac)
+    return jnp.where(step < warmup, warm, cos)

@@ -1,0 +1,98 @@
+"""Attention tests: flash-blockwise vs naive oracle, RoPE, cache decode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.nn import attention as A
+
+
+def _qkv(seed, b, t, h, kv, d, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, t, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, t, kv, d), dtype)
+    v = jax.random.normal(ks[2], (b, t, kv, d), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("t,kv_block", [(64, 16), (96, 32), (128, 128),
+                                        (100, 32)])
+@pytest.mark.parametrize("h,kv", [(8, 8), (8, 2), (15, 5)])
+def test_flash_matches_naive_causal(t, kv_block, h, kv):
+    q, k, v = _qkv(t + h, 2, t, h, kv, 32)
+    got = A.attention(q, k, v, causal=True, kv_block=kv_block)
+    want = A.attention_naive(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [8, 32, 1000])
+def test_sliding_window(window):
+    q, k, v = _qkv(0, 1, 64, 4, 2, 16)
+    got = A.attention(q, k, v, causal=True, window=window, kv_block=16)
+    want = A.attention_naive(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_non_causal_encoder():
+    q, k, v = _qkv(1, 2, 48, 4, 4, 16)
+    got = A.attention(q, k, v, causal=False, kv_block=16)
+    want = A.attention_naive(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_rope_relative_property():
+    """RoPE scores depend only on relative distance."""
+    d = 32
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    q = jax.random.normal(k1, (1, 1, 1, d))
+    k = jax.random.normal(k2, (1, 1, 1, d))
+    def score(qpos, kpos):
+        qr = A.apply_rope(q, jnp.asarray([qpos]))
+        kr = A.apply_rope(k, jnp.asarray([kpos]))
+        return float(jnp.sum(qr * kr))
+    assert score(5, 3) == pytest.approx(score(105, 103), rel=1e-4)
+    assert score(5, 3) != pytest.approx(score(5, 4), rel=1e-3)
+
+
+def test_decode_matches_full_attention():
+    b, t, h, kv, d = 2, 33, 8, 4, 16
+    q, k, v = _qkv(3, b, t, h, kv, d)
+    cache = A.KVCache.init(b, t, kv, d, dtype=jnp.float32)
+    outs = []
+    for i in range(t):
+        cache = A.cache_update(cache, k[:, i:i + 1], v[:, i:i + 1])
+        outs.append(A.decode_attention(q[:, i:i + 1], cache))
+    got = jnp.concatenate(outs, axis=1)
+    want = A.attention_naive(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_ring_buffer_decode_matches_windowed():
+    """Ring cache of window size == full cache with window mask."""
+    b, t, h, kv, d, w = 1, 40, 4, 2, 16, 8
+    q, k, v = _qkv(4, b, t, h, kv, d)
+    ring = A.KVCache.init(b, w, kv, d, dtype=jnp.float32)
+    full = A.KVCache.init(b, t, kv, d, dtype=jnp.float32)
+    for i in range(t):
+        ring = A.cache_update(ring, k[:, i:i + 1], v[:, i:i + 1], ring=True)
+        full = A.cache_update(full, k[:, i:i + 1], v[:, i:i + 1])
+    got = A.decode_attention(q[:, -1:], ring)
+    want = A.attention_naive(q[:, -1:], k, v, causal=True, window=w,
+                             q_offset=t - 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_bf16_stability():
+    q, k, v = _qkv(5, 1, 64, 4, 2, 32, jnp.bfloat16)
+    got = A.attention(q, k, v, kv_block=16)
+    want = A.attention_naive(q.astype(jnp.float32), k.astype(jnp.float32),
+                             v.astype(jnp.float32))
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), rtol=3e-2, atol=3e-2)

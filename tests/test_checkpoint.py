@@ -1,0 +1,96 @@
+"""Checkpoint atomicity / keep-k / resharding tests."""
+
+import json
+import os
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import (CheckpointManager, latest_step,
+                                   restore_checkpoint, save_checkpoint)
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(k)
+    return {"layers": {"w": jax.random.normal(k1, (8, 4)),
+                       "b": jnp.zeros(4)},
+            "step": jnp.asarray(7, jnp.int32),
+            "nested": [jax.random.normal(k2, (3,))]}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    tree = _tree()
+    save_checkpoint(tmp_path, 10, tree)
+    assert latest_step(tmp_path) == 10
+    target = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                          tree)
+    out = restore_checkpoint(tmp_path, target)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_atomicity_no_partial_checkpoints(tmp_path):
+    tree = _tree()
+    save_checkpoint(tmp_path, 1, tree)
+    # simulate a crashed writer: stale tmp dir must not count as a checkpoint
+    stale = tmp_path / "tmp.99.12345"
+    stale.mkdir()
+    (stale / "proc_0.npz").write_bytes(b"garbage")
+    assert latest_step(tmp_path) == 1
+    mgr = CheckpointManager(tmp_path, keep=2, save_interval_steps=1)
+    mgr.save(2, tree, force=True)
+    assert not any(p.name.startswith("tmp.") for p in tmp_path.iterdir())
+
+
+def test_keep_k_gc(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2, save_interval_steps=1)
+    tree = _tree()
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree, force=True)
+    steps = sorted(int(p.name.split("_")[1]) for p in tmp_path.iterdir()
+                   if p.name.startswith("step_"))
+    assert steps == [3, 4]
+
+
+def test_restore_detects_shape_mismatch(tmp_path):
+    save_checkpoint(tmp_path, 1, {"w": jnp.zeros((4, 4))})
+    with pytest.raises(ValueError):
+        restore_checkpoint(tmp_path, {"w": jax.ShapeDtypeStruct((8, 4),
+                                                                jnp.float32)})
+    with pytest.raises(KeyError):
+        restore_checkpoint(tmp_path, {"v": jax.ShapeDtypeStruct((4, 4),
+                                                                jnp.float32)})
+
+
+def test_restore_with_dtype_cast(tmp_path):
+    save_checkpoint(tmp_path, 1, {"w": jnp.ones((4,), jnp.float32)})
+    out = restore_checkpoint(
+        tmp_path, {"w": jax.ShapeDtypeStruct((4,), jnp.bfloat16)})
+    assert out["w"].dtype == jnp.bfloat16
+
+
+def test_manifest_contents(tmp_path):
+    save_checkpoint(tmp_path, 3, _tree(), extra={"arch": "smollm-360m"})
+    man = json.load(open(tmp_path / "step_00000003" / "manifest.json"))
+    assert man["step"] == 3
+    assert man["extra"]["arch"] == "smollm-360m"
+    assert "layers/w" in man["leaves"]
+
+
+def test_restore_with_shardings_single_device(tmp_path):
+    """Resharding path: restore onto an explicit (1-device) mesh sharding."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+    save_checkpoint(tmp_path, 5, tree)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    shard = {"w": NamedSharding(mesh, P("data", None))}
+    out = restore_checkpoint(
+        tmp_path, {"w": jax.ShapeDtypeStruct((4, 4), jnp.float32)},
+        shardings=shard)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.arange(16.0).reshape(4, 4))
+    assert out["w"].sharding.is_equivalent_to(shard["w"], 2)

@@ -1,0 +1,65 @@
+"""Compressive Acquisitor tests — paper eq. (1) semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compressive as ca
+
+
+def test_rgb_coefficients():
+    c = ca.ca_coefficients(pool=2, channels=3)
+    assert c.shape == (2, 2, 3)
+    # each pixel contributes 0.25 * (0.299, 0.587, 0.114)
+    np.testing.assert_allclose(np.asarray(c[0, 0]),
+                               np.asarray([0.299, 0.587, 0.114]) / 4,
+                               rtol=1e-6)
+    # total weight = sum of grayscale coefficients
+    assert float(c.sum()) == pytest.approx(sum(ca.RGB_COEFFS), rel=1e-6)
+
+
+def test_compressive_acquire_matches_manual():
+    img = jax.random.uniform(jax.random.PRNGKey(0), (2, 8, 8, 3))
+    out = ca.compressive_acquire(img, pool=2)
+    assert out.shape == (2, 4, 4)
+    gray = (0.299 * img[..., 0] + 0.587 * img[..., 1] + 0.114 * img[..., 2])
+    pooled = gray.reshape(2, 4, 2, 4, 2).mean(axis=(2, 4))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(pooled), rtol=1e-5)
+
+
+def test_compressive_acquire_single_cycle_equivalence():
+    """Fused = gray-then-pool = pool-then-gray (linearity, the paper's point)."""
+    img = jax.random.uniform(jax.random.PRNGKey(1), (1, 16, 16, 3))
+    fused = ca.compressive_acquire(img, pool=4)
+    per_chan = img.reshape(1, 4, 4, 4, 4, 3).mean(axis=(2, 4))
+    gray_after = (0.299 * per_chan[..., 0] + 0.587 * per_chan[..., 1]
+                  + 0.114 * per_chan[..., 2])
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(gray_after),
+                               rtol=1e-5)
+
+
+def test_pool_only_mode():
+    img = jax.random.uniform(jax.random.PRNGKey(2), (2, 8, 8, 4))
+    out = ca.compressive_acquire(img, pool=2, rgb_to_gray=False)
+    assert out.shape == (2, 4, 4, 4)
+
+
+def test_strided_conv_acquire():
+    img = jax.random.uniform(jax.random.PRNGKey(3), (1, 10, 10, 3))
+    w = jax.random.normal(jax.random.PRNGKey(4), (3, 3, 3))
+    out = ca.strided_conv_acquire(img, w, stride=2)
+    assert out.shape == (1, 4, 4)
+    # check one output position manually
+    manual = float(jnp.sum(img[0, 2:5, 4:7, :] * w))
+    assert float(out[0, 1, 2]) == pytest.approx(manual, rel=1e-5)
+
+
+def test_sequence_ca():
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 12, 8))
+    out = ca.sequence_ca(x, 3)
+    assert out.shape == (2, 4, 8)
+    np.testing.assert_allclose(np.asarray(out[:, 0]),
+                               np.asarray(x[:, :3].mean(axis=1)), rtol=1e-5)
+    with pytest.raises(ValueError):
+        ca.sequence_ca(x, 5)

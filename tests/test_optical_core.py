@@ -1,0 +1,79 @@
+"""Hardware-mapping methodology tests — the paper's Fig. 6 numbers, exactly."""
+
+import math
+
+import pytest
+
+from repro.core import optical_core as oc
+
+
+def test_geometry():
+    c = oc.OCConfig()
+    assert c.mrs_per_bank == 54
+    assert c.n_banks == 96
+    assert c.total_mrs == 5184
+    assert c.total_arms == 576
+    assert c.macs_per_cycle == 5184
+
+
+@pytest.mark.parametrize("k,arms,strides,idle,stages", [
+    (3, 1, 6, 0, 0),      # Fig. 6(a)
+    (5, 3, 2, 2, 1),      # Fig. 6(b)
+    (7, 6, 1, 5, 2),      # Fig. 6(c)
+])
+def test_fig6_mappings(k, arms, strides, idle, stages):
+    m = oc.conv_mapping(k)
+    assert m.arms_per_stride == arms
+    assert m.strides_per_bank == strides
+    assert m.idle_mrs_per_stride == idle
+    assert m.summation_stages == stages
+
+
+def test_fc_mapping_segments_into_9s():
+    m = oc.fc_mapping(100)
+    assert m.arms_per_stride == math.ceil(100 / 9)
+    assert m.idle_mrs_per_stride == m.arms_per_stride * 9 - 100
+
+
+@pytest.mark.parametrize("h,w,cin,cout,k", [
+    (32, 32, 3, 64, 3), (16, 16, 64, 128, 3), (8, 8, 1, 16, 5),
+    (28, 28, 1, 6, 5), (4, 4, 256, 256, 3),
+])
+def test_schedule_conv_invariants(h, w, cin, cout, k):
+    s = oc.schedule_conv("x", h, w, cin, cout, k)
+    m = oc.conv_mapping(k, cin)
+    assert s.macs == h * w * cout * m.kernel_taps
+    assert 0.0 < s.utilization <= 1.0
+    assert s.mapped_mrs_avg <= oc.DEFAULT_OC.total_mrs
+    assert s.weight_remaps >= 1
+    # cycles x concurrent outputs must cover all strides
+    resident = min(oc.kernels_resident(m), cout)
+    assert s.cycles == math.ceil(cout / resident) * h * w
+
+
+def test_schedule_fc_invariants():
+    s = oc.schedule_fc("fc", 1024, 512, batch=4)
+    assert s.macs == 4 * 1024 * 512
+    assert s.cycles >= 4
+    assert 0.0 < s.utilization <= 1.0
+
+
+def test_ca_schedule_has_no_dac_remaps():
+    s = oc.schedule_ca("ca", 16, 16, 2, channels=3)
+    assert s.weight_remaps == 0
+    assert s.kind == "ca"
+
+
+def test_large_kernel_multibank():
+    m = oc.conv_mapping(11)          # AlexNet conv1: 121 taps -> 14 arms
+    assert m.arms_per_stride == 14
+    assert m.strides_per_bank == 0   # spans banks
+    assert m.banks_per_stride == 3
+    s = oc.schedule_conv("a1", 55, 55, 3, 96, 11)
+    assert s.cycles > 0 and s.utilization <= 1.0
+
+
+def test_matmul_schedule_matches_fc():
+    s1 = oc.schedule_matmul("m", 16, 1024, 512)
+    s2 = oc.schedule_fc("m", 1024, 512, batch=16)
+    assert s1.cycles == s2.cycles and s1.macs == s2.macs

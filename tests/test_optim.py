@@ -1,0 +1,87 @@
+"""Optimizer + gradient compression tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.clip import clip_by_global_norm, global_norm
+from repro.optim.compression import (compress_int8, decompress_int8,
+                                     init_error_state)
+from repro.optim.schedule import cosine_schedule, linear_warmup_cosine
+
+
+def test_adamw_converges_on_quadratic():
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, grad_clip=10.0)
+    state = adamw_init(params, cfg)
+    for _ in range(200):
+        grads = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        params, state, _ = adamw_update(params, grads, state, cfg)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=1e-2)
+
+
+def test_adamw_bf16_params_with_fp32_master():
+    params = {"w": jnp.ones((8,), jnp.bfloat16)}
+    cfg = AdamWConfig(lr=1e-4)
+    state = adamw_init(params, cfg)
+    assert state["master"]["w"].dtype == jnp.float32
+    grads = {"w": jnp.full((8,), 1e-3, jnp.bfloat16)}
+    for _ in range(10):
+        params, state, _ = adamw_update(params, grads, state, cfg)
+    # master accumulates sub-bf16-resolution updates
+    assert params["w"].dtype == jnp.bfloat16
+    assert float(jnp.max(jnp.abs(state["master"]["w"] - 1.0))) > 0
+
+
+def test_grad_clip():
+    tree = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_schedules():
+    import numpy as np
+    s0 = float(linear_warmup_cosine(jnp.asarray(0), 10, 100, 1.0))
+    s10 = float(linear_warmup_cosine(jnp.asarray(10), 10, 100, 1.0))
+    s100 = float(linear_warmup_cosine(jnp.asarray(100), 10, 100, 1.0))
+    assert s0 == 0.0 and s10 == pytest.approx(1.0)
+    assert s100 == pytest.approx(0.1, rel=1e-2)
+    c = [float(cosine_schedule(jnp.asarray(i), 50, 1.0)) for i in range(51)]
+    assert all(np.diff(c) <= 1e-9)
+
+
+@pytest.mark.parametrize("shape", [(100,), (33, 7), (256, 256)])
+def test_int8_compression_roundtrip(shape):
+    x = jax.random.normal(jax.random.PRNGKey(0), shape)
+    codes, scales = compress_int8(x)
+    assert codes.dtype == jnp.int8
+    y = decompress_int8(codes, scales, shape)
+    # error bounded by scale/2 per block
+    err = jnp.abs(x - y)
+    bound = jnp.repeat(scales, 256)[:x.size].reshape(shape) * 0.5 + 1e-7
+    assert bool(jnp.all(err <= bound))
+
+
+def test_error_feedback_unbiased_over_steps():
+    """With error feedback, the accumulated decompressed sum tracks the
+    accumulated true gradient (residual stays bounded)."""
+    g = jax.random.normal(jax.random.PRNGKey(1), (512,)) * 1e-3
+    e = jnp.zeros_like(g)
+    total_true = jnp.zeros_like(g)
+    total_sent = jnp.zeros_like(g)
+    for i in range(20):
+        gi = g * (1 + 0.1 * i)
+        comp_in = gi + e
+        codes, scales = compress_int8(comp_in)
+        deq = decompress_int8(codes, scales, g.shape)
+        e = comp_in - deq
+        total_true += gi
+        total_sent += deq
+    # residual equals the final error state: sum_sent + e == sum_true
+    np.testing.assert_allclose(np.asarray(total_sent + e),
+                               np.asarray(total_true), rtol=1e-5, atol=1e-7)

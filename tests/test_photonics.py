@@ -1,0 +1,56 @@
+"""Device-level photonic model tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import photonics as ph
+
+
+def test_transmission_monotone_in_detuning():
+    d = jnp.linspace(0, 0.5, 50)
+    t = ph.mr_through_transmission(d, fwhm_nm=0.1)
+    assert float(t[0]) == 0.0                      # on resonance: full drop
+    assert bool(jnp.all(jnp.diff(t) >= 0))         # monotone
+    assert float(t[-1]) > 0.9                      # far off resonance
+
+
+def test_weight_to_detuning_roundtrip():
+    targets = jnp.linspace(0.01, 0.95, 20)
+    d = ph.weight_to_detuning(targets, fwhm_nm=0.1)
+    realized = ph.mr_through_transmission(d, fwhm_nm=0.1)
+    np.testing.assert_allclose(np.asarray(realized), np.asarray(targets),
+                               rtol=1e-5)
+
+
+def test_half_transmission_at_half_fwhm():
+    t = ph.mr_through_transmission(jnp.asarray(0.05), fwhm_nm=0.1)
+    assert abs(float(t) - 0.5) < 1e-6
+
+
+def test_vcsel_li_curve():
+    codes = jnp.arange(16)
+    p = ph.vcsel_intensity(codes)
+    assert float(p[0]) == 0.0                      # below threshold
+    diffs = jnp.diff(p)
+    assert bool(jnp.all(diffs >= 0))               # monotone in drive code
+    assert float(p[15]) > 0
+
+
+def test_drift_noise_changes_transmission():
+    t = jnp.full((128,), 0.5)
+    noisy = ph.photonic_noise(jax.random.PRNGKey(0), t, drift_std_nm=0.02)
+    assert float(jnp.std(noisy)) > 0.0
+    assert bool(jnp.all((noisy >= 0) & (noisy <= 1)))
+
+
+def test_bpd_differential_signed():
+    pos = jnp.asarray([1.0, 0.0, 2.0])
+    neg = jnp.asarray([0.0, 1.0, 2.0])
+    i = ph.bpd_differential(pos, neg)
+    assert float(i[0]) > 0 and float(i[1]) < 0 and abs(float(i[2])) < 1e-12
+
+
+def test_q_factor():
+    dev = ph.MRDevice(lambda_res_nm=1550.0, fwhm_nm=0.1)
+    assert abs(dev.q_factor - 15500) < 1

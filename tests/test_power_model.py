@@ -1,0 +1,84 @@
+"""Power model tests: the paper's Table-1 / Fig. 8-9 claims as assertions."""
+
+import pytest
+
+from repro.core import optical_core as oc
+from repro.core.power_model import (PowerModel, CROSSLIGHT_PROFILE,
+                                    LIGHTBULB_PROFILE)
+from repro.core.quant import W4A4, W3A4, W2A4, MX_43, MX_42
+from repro.models.vision import vgg9_ir, vision_schedules
+
+
+@pytest.fixture(scope="module")
+def vgg9_scheds():
+    return vision_schedules(vgg9_ir(use_ca=True, n_classes=100), 32)
+
+
+def test_table1_power_calibration(vgg9_scheds):
+    """Lightator rows of Table 1 (tolerance: model-level reproduction)."""
+    pm = PowerModel()
+    targets = {  # scheme -> (paper max power W, paper kFPS/W)
+        "44": (W4A4, 5.28, 61.61),
+        "34": (W3A4, 2.71, 117.65),
+        "24": (W2A4, 1.46, 188.24),
+        "mx43": (MX_43, 3.64, 84.4),
+    }
+    for name, (scheme, p_ref, k_ref) in targets.items():
+        r = pm.model_report(vgg9_scheds, scheme)
+        # power within 20% of the paper's figure (avg or max)
+        best = min(abs(r.max_power_w - p_ref), abs(r.avg_power_w - p_ref))
+        assert best / p_ref < 0.20, (name, r.max_power_w, r.avg_power_w, p_ref)
+        assert abs(r.kfps_per_w - k_ref) / k_ref < 0.25, (name, r.kfps_per_w)
+
+
+def test_dac_dominates_power(vgg9_scheds):
+    """Fig. 9: DACs contribute >85% of total power (weight-tuning path)."""
+    pm = PowerModel()
+    r = pm.model_report(vgg9_scheds, W3A4)
+    comps = r.component_totals()
+    assert comps["DAC"] / sum(comps.values()) > 0.85
+
+
+def test_weight_bit_reduction_power_ratio(vgg9_scheds):
+    """~2x power saving per weight bit (paper: 2.4x avg across Fig. 8)."""
+    pm = PowerModel()
+    p4 = pm.model_report(vgg9_scheds, W4A4).avg_power_w
+    p3 = pm.model_report(vgg9_scheds, W3A4).avg_power_w
+    p2 = pm.model_report(vgg9_scheds, W2A4).avg_power_w
+    assert 1.6 < p4 / p3 < 2.6
+    assert 1.6 < p3 / p2 < 2.6
+
+
+def test_adc_reliant_baseline_burns_more(vgg9_scheds):
+    """Prior designs (act-in-MRs + ADC readout) cost much more power."""
+    ours = PowerModel().model_report(vgg9_scheds, W4A4).avg_power_w
+    cross = PowerModel(profile=CROSSLIGHT_PROFILE).model_report(
+        vgg9_scheds, W4A4).avg_power_w
+    bulb = PowerModel(profile=LIGHTBULB_PROFILE).model_report(
+        vgg9_scheds, W4A4).avg_power_w
+    assert cross > ours * 2
+    assert bulb > ours * 2
+
+
+def test_mx_rail_monotonicity(vgg9_scheds):
+    pm = PowerModel()
+    p34 = pm.model_report(vgg9_scheds, W3A4).avg_power_w
+    pmx = pm.model_report(vgg9_scheds, MX_43).avg_power_w
+    p44 = pm.model_report(vgg9_scheds, W4A4).avg_power_w
+    assert p34 < pmx < p44
+    p24 = pm.model_report(vgg9_scheds, W2A4).avg_power_w
+    pmx2 = pm.model_report(vgg9_scheds, MX_42).avg_power_w
+    assert p24 < pmx2 < p44
+
+
+def test_ca_reduces_first_layer_power():
+    """Fig. 9 claim: CA compression cuts first-layer power (42.2% there)."""
+    pm = PowerModel()
+    with_ca = vision_schedules(vgg9_ir(use_ca=True), 32)
+    no_ca = vision_schedules(vgg9_ir(use_ca=False), 32)
+    r_ca = pm.model_report(with_ca, W3A4)
+    r_no = pm.model_report(no_ca, W3A4)
+    l1_ca = next(l for l in r_ca.layers if l.name == "conv1")
+    l1_no = next(l for l in r_no.layers if l.name == "conv1")
+    reduction = 1 - l1_ca.total_w / l1_no.total_w
+    assert reduction > 0.3, reduction    # we measure ~66%; paper reports 42.2%

@@ -1,0 +1,96 @@
+"""Property-style randomized invariant tests.
+
+(hypothesis isn't installed in this container, so properties are checked
+over seeded random sweeps — same invariants, explicit generators.)
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import optical_core as oc
+from repro.core.compressive import compressive_acquire
+from repro.core.quant import WASpec, fake_quant_act, fake_quant_weight, quantize_weight
+from repro.kernels.photonic_mvm.ops import photonic_mvm
+from repro.kernels.photonic_mvm.ref import photonic_mvm_ref
+
+RNG = np.random.default_rng(0)
+
+
+def _rand_shape(rng, lo=1, hi=200, dims=2):
+    return tuple(int(rng.integers(lo, hi)) for _ in range(dims))
+
+
+@pytest.mark.parametrize("trial", range(10))
+def test_property_weight_quant_idempotent(trial):
+    """quant(dequant(quant(w))) == quant(w)."""
+    rng = np.random.default_rng(trial)
+    shape = _rand_shape(rng, 2, 64)
+    bits = int(rng.choice([2, 3, 4]))
+    w = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    spec = WASpec(bits, 4)
+    q1, s1 = quantize_weight(w, spec)
+    q2, s2 = quantize_weight(q1.astype(jnp.float32) * s1, spec)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+
+
+@pytest.mark.parametrize("trial", range(10))
+def test_property_act_quant_monotone(trial):
+    """CRC quantization preserves ordering (monotone non-decreasing)."""
+    rng = np.random.default_rng(100 + trial)
+    x = jnp.asarray(np.sort(rng.uniform(0, 2, 64)), jnp.float32)
+    y = fake_quant_act(x, scale=0.1)
+    assert bool(jnp.all(jnp.diff(y) >= -1e-7))
+
+
+@pytest.mark.parametrize("trial", range(8))
+def test_property_kernel_equals_oracle_random_shapes(trial):
+    rng = np.random.default_rng(200 + trial)
+    m, k, n = (int(rng.integers(1, 100)), int(rng.integers(1, 300)),
+               int(rng.integers(1, 100)))
+    bits = int(rng.choice([2, 3, 4]))
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, n)) * 0.1, jnp.float32)
+    spec = WASpec(bits, 4)
+    got = photonic_mvm(x, w, spec)
+    want = photonic_mvm_ref(x, w, spec)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("trial", range(6))
+def test_property_ca_linearity(trial):
+    """CA is linear: CA(a*x + b*y) == a*CA(x) + b*CA(y)."""
+    rng = np.random.default_rng(300 + trial)
+    x = jnp.asarray(rng.uniform(0, 1, (1, 8, 8, 3)), jnp.float32)
+    y = jnp.asarray(rng.uniform(0, 1, (1, 8, 8, 3)), jnp.float32)
+    a, b = float(rng.uniform(0.1, 2)), float(rng.uniform(0.1, 2))
+    lhs = compressive_acquire(a * x + b * y, 2)
+    rhs = a * compressive_acquire(x, 2) + b * compressive_acquire(y, 2)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("trial", range(10))
+def test_property_scheduler_macs_conserved(trial):
+    """Scheduled MACs == mathematical MACs for random conv shapes."""
+    rng = np.random.default_rng(400 + trial)
+    h = w = int(rng.integers(2, 64))
+    cin = int(rng.integers(1, 128))
+    cout = int(rng.integers(1, 256))
+    k = int(rng.choice([1, 3, 5, 7]))
+    s = oc.schedule_conv("t", h, w, cin, cout, k)
+    assert s.macs == h * w * cout * k * k * cin
+    assert s.utilization <= 1.0 + 1e-9
+    # at least one cycle per weight-remap round
+    assert s.cycles >= s.weight_remaps
+
+
+@pytest.mark.parametrize("trial", range(6))
+def test_property_ste_gradient_bounded(trial):
+    """STE gradient magnitude stays within clip region (no explosion)."""
+    rng = np.random.default_rng(500 + trial)
+    w = jnp.asarray(rng.standard_normal((32, 16)), jnp.float32)
+    g = jax.grad(lambda w: jnp.sum(fake_quant_weight(w, WASpec(4, 4))))(w)
+    assert float(jnp.max(jnp.abs(g))) < 10.0

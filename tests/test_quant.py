@@ -1,0 +1,79 @@
+"""Quantization unit + property tests (seeded randomized sweeps)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant as Q
+
+
+def test_crc_levels():
+    assert Q.CRC_LEVELS == 16 and Q.CRC_COMPARATORS == 15
+    x = jnp.linspace(0, 1.5, 100)
+    codes = Q.crc_quantize_act(x, scale=0.1)
+    assert codes.dtype == jnp.int8
+    assert int(codes.min()) >= 0 and int(codes.max()) <= 15
+
+
+def test_waspec_qmax():
+    assert Q.W4A4.w_qmax == 7 and Q.W3A4.w_qmax == 3 and Q.W2A4.w_qmax == 1
+    assert Q.W4A4.a_qmax == 15
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_weight_quant_roundtrip_bound(bits, seed):
+    """|w - dequant(quant(w))| <= scale/2 (property over random tensors)."""
+    w = jax.random.normal(jax.random.PRNGKey(seed), (64, 32))
+    spec = Q.WASpec(bits, 4)
+    q, s = Q.quantize_weight(w, spec)
+    deq = q.astype(jnp.float32) * s
+    assert q.dtype == jnp.int8
+    assert int(jnp.max(jnp.abs(q))) <= spec.w_qmax
+    assert float(jnp.max(jnp.abs(w - deq))) <= float(jnp.max(s)) * 0.5 + 1e-6
+
+
+def test_fake_quant_weight_ste_gradient():
+    w = jax.random.normal(jax.random.PRNGKey(0), (16, 8))
+    g = jax.grad(lambda w: jnp.sum(Q.fake_quant_weight(w, Q.W4A4)))(w)
+    # STE: gradient flows (not identically zero, mostly ~1 per element via scale)
+    assert float(jnp.mean(jnp.abs(g))) > 0.1
+
+
+def test_fake_quant_act_unsigned_and_clipped():
+    x = jnp.array([-1.0, 0.0, 0.5, 10.0])
+    y = Q.fake_quant_act(x, scale=0.1)
+    assert float(y[0]) == 0.0                      # negatives clip to 0
+    assert float(y[-1]) == pytest.approx(1.5)      # 15 * 0.1
+    assert float(y[2]) == pytest.approx(0.5)
+
+
+def test_mixed_precision_resolution():
+    specs = Q.resolve_layer_specs(4, Q.MX_43)
+    assert specs[0].w_bits == 4
+    assert all(s.w_bits == 3 for s in specs[1:])
+    uni = Q.resolve_layer_specs(3, Q.W2A4)
+    assert all(s.w_bits == 2 for s in uni)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_qmatmul_reference_integer_exact(seed):
+    """The reference MAC is integer math exactly (scales factor out)."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.uniform(k1, (8, 24), minval=0.0, maxval=1.0)
+    w = jax.random.normal(k2, (24, 12))
+    y = Q.qmatmul_reference(x, w, Q.W4A4, act_scale=1.0 / 15)
+    codes = jnp.round(jnp.clip(x / (1.0 / 15), 0, 15))
+    wq, ws = Q.quantize_weight(w, Q.W4A4)
+    manual = (codes @ wq.astype(jnp.float32)) * (1.0 / 15) * ws.reshape(1, -1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(manual), rtol=1e-6)
+
+
+def test_mr_noise_perturbs_weights():
+    spec = Q.WASpec(4, 4, mr_noise_std=0.5)
+    w = jax.random.normal(jax.random.PRNGKey(0), (32, 16))
+    clean = Q.fake_quant_weight(w, Q.W4A4)
+    noisy = Q.fake_quant_weight(w, spec, noise_key=jax.random.PRNGKey(1))
+    assert float(jnp.max(jnp.abs(clean - noisy))) > 0.0

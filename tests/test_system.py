@@ -1,0 +1,72 @@
+"""End-to-end behaviour tests for the Lightator system.
+
+The full stack in one place: sensor acquisition -> CA -> quantized OC
+execution -> power report, and the QAT forward path over the paper's models.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.accelerator import LightatorDevice
+from repro.core.quant import W4A4, W3A4, W2A4, MX_43
+from repro.models.vision import lenet_ir, vgg9_ir, init_vision, apply_vision
+
+
+@pytest.fixture(scope="module")
+def lenet():
+    layers = lenet_ir()
+    params = init_vision(jax.random.PRNGKey(0), layers)
+    return layers, params
+
+
+def test_lightator_device_end_to_end(lenet):
+    layers, params = lenet
+    img = jax.random.uniform(jax.random.PRNGKey(1), (2, 28, 28, 1))
+    dev = LightatorDevice()
+    logits, report = dev.run(layers, params, img, W4A4)
+    assert logits.shape == (2, 10)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert report.exec_time_s > 0 and report.avg_power_w > 0
+    assert report.kfps_per_w > 0
+
+
+def test_device_power_decreases_with_weight_bits(lenet):
+    layers, params = lenet
+    img = jax.random.uniform(jax.random.PRNGKey(1), (1, 28, 28, 1))
+    dev = LightatorDevice()
+    powers = []
+    for scheme in (W4A4, W3A4, W2A4):
+        _, report = dev.run(layers, params, img, scheme)
+        powers.append(report.avg_power_w)
+    assert powers[0] > powers[1] > powers[2], powers
+
+
+def test_mixed_precision_between_pure_configs(lenet):
+    layers, params = lenet
+    img = jax.random.uniform(jax.random.PRNGKey(1), (1, 28, 28, 1))
+    dev = LightatorDevice()
+    _, r44 = dev.run(layers, params, img, W4A4)
+    _, r34 = dev.run(layers, params, img, W3A4)
+    _, rmx = dev.run(layers, params, img, MX_43)
+    assert r34.avg_power_w <= rmx.avg_power_w <= r44.avg_power_w * 1.05
+
+
+def test_vgg9_with_and_without_ca():
+    """CA compression shrinks layer-1 work (the paper's 42.2% claim axis)."""
+    from repro.models.vision import vision_schedules
+    s_ca = vision_schedules(vgg9_ir(use_ca=True), 32)
+    s_no = vision_schedules(vgg9_ir(use_ca=False), 32)
+    l1_ca = next(s for s in s_ca if s.name == "conv1")
+    l1_no = next(s for s in s_no if s.name == "conv1")
+    assert l1_ca.cycles < l1_no.cycles
+    assert l1_ca.macs < l1_no.macs
+
+
+def test_qat_forward_matches_shapes(lenet):
+    layers, params = lenet
+    img = jax.random.uniform(jax.random.PRNGKey(1), (4, 28, 28, 1))
+    for scheme in (None, W4A4, MX_43):
+        out = apply_vision(params, layers, img, scheme)
+        assert out.shape == (4, 10)
+        assert bool(jnp.all(jnp.isfinite(out)))
