@@ -1,0 +1,110 @@
+"""Eager-vs-compiled device pipeline: frames/s over a batch sweep.
+
+The refactor under test (core.plan): the seed ``LightatorDevice.run`` was an
+eager per-layer interpreter that re-scheduled and re-ran the power model on
+every frame; the compiled path resolves all of that once and executes under
+a single jax.jit. This benchmark measures both on the LeNet smoke model at
+batch 1/8/32, asserts the logits stay bit-identical, and writes
+``BENCH_pipeline.json`` next to this file so future PRs have a perf
+trajectory to compare against.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import plan as plan_mod
+from repro.core.accelerator import LightatorDevice
+from repro.core.quant import W4A4
+from repro.models.vision import lenet_ir, init_vision
+
+BATCHES = (1, 8, 32)
+OUT_PATH = Path(__file__).resolve().parent / "BENCH_pipeline.json"
+
+
+def _time_loop(fn, min_reps: int = 3, min_time_s: float = 0.3) -> float:
+    """Per-call seconds; repeats until both floors are met."""
+    fn()                                     # warmup (jit/eager caches)
+    reps, t0 = 0, time.perf_counter()
+    while True:
+        fn()
+        reps += 1
+        dt = time.perf_counter() - t0
+        if reps >= min_reps and dt >= min_time_s:
+            return dt / reps
+
+
+def run(csv: bool = True, batches=BATCHES):
+    layers = lenet_ir()
+    params = init_vision(jax.random.PRNGKey(0), layers)
+    dev = LightatorDevice()
+    results = {}
+    out_lines = []
+    for bs in batches:
+        frames = jax.random.uniform(jax.random.PRNGKey(1), (bs, 28, 28, 1))
+        plan = dev.compile(layers, frames.shape, W4A4)
+
+        le, _ = dev.run_eager(layers, params, frames, W4A4)
+        lc = plan_mod.execute(plan, params, frames)
+        identical = bool(jnp.array_equal(le, lc))
+        if not identical:
+            raise RuntimeError(
+                f"bench_pipeline: compiled logits diverged from eager at "
+                f"batch {bs} (max|diff|="
+                f"{float(jnp.max(jnp.abs(le - lc))):.3e})")
+
+        t_eager = _time_loop(
+            lambda: dev.run_eager(layers, params, frames, W4A4)[0]
+            .block_until_ready())
+        t_comp = _time_loop(
+            lambda: plan_mod.execute(plan, params, frames)
+            .block_until_ready())
+        eager_fps = bs / t_eager
+        comp_fps = bs / t_comp
+        speedup = comp_fps / eager_fps
+        results[str(bs)] = {
+            "eager_fps": eager_fps,
+            "compiled_fps": comp_fps,
+            "speedup": speedup,
+            "logits_identical": identical,
+        }
+        out_lines.append(
+            f"bench_pipeline.lenet_w4a4.b{bs},{t_comp * 1e6:.0f},"
+            f"eager_fps={eager_fps:.0f};compiled_fps={comp_fps:.0f};"
+            f"speedup={speedup:.2f}x;identical={identical}")
+
+    payload = {
+        "model": "lenet",
+        "scheme": "w4a4",
+        "backend": jax.default_backend(),
+        "batches": results,
+    }
+    # merge with prior runs so a --quick sweep doesn't drop trajectory
+    # points recorded at other batch sizes — but only when the prior file
+    # describes the same model/scheme/backend (mixed hardware would corrupt
+    # the trajectory)
+    if OUT_PATH.exists():
+        try:
+            prior = json.loads(OUT_PATH.read_text())
+            same_config = all(prior.get(k) == payload[k]
+                              for k in ("model", "scheme", "backend"))
+            if same_config:
+                merged = prior.get("batches", {})
+                merged.update(payload["batches"])
+                payload["batches"] = merged
+        except (json.JSONDecodeError, AttributeError):
+            pass
+    OUT_PATH.write_text(json.dumps(payload, indent=2) + "\n")
+    if csv:
+        print("\n".join(out_lines))
+        print(f"bench_pipeline.json,0.0,path={OUT_PATH}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -6,6 +6,7 @@
 #   bench_fig10     Fig. 10 (execution time, AlexNet/VGG16)
 #   bench_accuracy  Table 1 accuracy axis (QAT trend on synthetic digits)
 #   bench_kernels   Pallas kernels vs oracles
+#   bench_pipeline  eager vs compiled device pipeline frames/s (core.plan)
 
 import sys
 
@@ -13,7 +14,7 @@ import sys
 def main() -> None:
     from benchmarks import (bench_table1, bench_fig8, bench_fig9,
                             bench_fig10, bench_accuracy, bench_kernels,
-                            bench_lm_photonic)
+                            bench_lm_photonic, bench_pipeline)
     bench_table1.run()
     bench_fig8.run()
     bench_fig9.run()
@@ -22,6 +23,7 @@ def main() -> None:
     bench_accuracy.run(steps=30 if quick else 40)
     bench_kernels.run()
     bench_lm_photonic.run()
+    bench_pipeline.run(batches=(1, 8) if quick else bench_pipeline.BATCHES)
 
 
 if __name__ == '__main__':

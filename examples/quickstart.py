@@ -35,6 +35,7 @@ print(f"photonic_mvm [4:4]: max|kernel - oracle| = "
       f"{float(jnp.max(jnp.abs(y_kernel - y_oracle))):.2e}")
 
 # -- 3. a full model on the device simulator --------------------------------
+# run() = cached compile pass + single-jit batched execute pass (core.plan)
 layers = lenet_ir()
 params = init_vision(jax.random.PRNGKey(2), layers)
 digit = jax.random.uniform(jax.random.PRNGKey(3), (1, 28, 28, 1))
@@ -43,6 +44,14 @@ logits, report = dev.run(layers, params, digit, MX_43)
 print(f"LeNet on Lightator-MX: logits {logits.shape}, "
       f"{report.exec_time_s * 1e6:.2f} us/frame, "
       f"{report.avg_power_w:.2f} W, {report.kfps_per_w:.0f} kFPS/W")
+
+# the two passes can also be driven directly — compile once, stream batches
+from repro.core import plan as plan_mod
+frames = jax.random.uniform(jax.random.PRNGKey(6), (8, 28, 28, 1))
+plan = dev.compile(layers, frames.shape, MX_43)
+batch_logits = plan_mod.execute(plan, params, frames)
+print(f"compiled plan: {len(plan.schedules)} schedules cached, "
+      f"batched logits {batch_logits.shape}")
 
 # -- 4. the paper's technique on an assigned LM architecture ----------------
 import dataclasses

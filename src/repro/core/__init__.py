@@ -8,7 +8,11 @@
 - compressive:    Compressive Acquisitor — fused RGB->gray + avg-pool weighted MAC.
 - photonics:      MR transmission / VCSEL / BPD device models + noise.
 - power_model:    device-to-architecture power/latency/FPS-per-W simulator.
-- accelerator:    LightatorDevice — layer-by-layer execution of a mapped model.
+- accelerator:    LightatorDevice — compile + execute wrapper over a mapped
+                  model (eager reference interpreter kept as ``run_eager``).
+- plan:           static compile pass (cached CompiledPlan: specs, schedules,
+                  power report) + jitted batched execute pass that dispatches
+                  to the Pallas kernels.
 """
 
 from repro.core.quant import (
@@ -41,8 +45,10 @@ from repro.core.photonics import (
     vcsel_intensity,
 )
 from repro.core.power_model import PowerModel, LayerSchedule
+from repro.core.plan import CompiledPlan, compile_model, execute
 
 __all__ = [
+    "CompiledPlan", "compile_model", "execute",
     "WASpec", "MixedPrecisionScheme",
     "crc_quantize_act", "fake_quant_act", "fake_quant_weight",
     "quantize_weight", "weight_scale",

@@ -1,6 +1,6 @@
 """LightatorDevice — the paper's "custom in-house simulator" (Sec. 5).
 
-Executes a vision model layer-by-layer exactly the way the hardware would:
+The device models a vision model the way the hardware runs it:
 
   step 1  frame captured; CRC quantizes pixels to uint4 (ADC-less imager)
   step 2  optional Compressive Acquisitor (fused RGB->gray + pooling)
@@ -9,9 +9,19 @@ Executes a vision model layer-by-layer exactly the way the hardware would:
           the DMVA for the next layer (activation banks eliminated)
   step 5  repeat 3<->4 until the classifier output
 
-It returns both the numerical output (integer-exact quantized semantics,
-identical to what the photonic core computes) and the architecture report
-(optical cycles, power breakdown, FPS/W) from the power model.
+Execution is split into two passes (``core.plan``):
+
+  * **compile** — ``plan.compile_model`` resolves per-layer [W:A] specs, OC
+    schedules, and the power/latency report once from shapes, and caches the
+    resulting ``CompiledPlan`` per (layers, scheme, input shape, hardware).
+  * **execute** — ``plan.execute`` runs the integer-exact quantized numerics
+    end-to-end under a single ``jax.jit``, batch-first, with the MAC work
+    routed through the Pallas kernels via ``kernels.dispatch``.
+
+``LightatorDevice.run`` is a thin wrapper over the two passes and keeps the
+seed signature: it returns (logits, report). The original eager per-layer
+interpreter survives as ``run_eager`` — the executable specification that
+the compiled path must match bit-for-bit (see tests/test_plan_compile.py).
 
 The model is described by a small layer IR (``ConvSpec``/``DenseSpec``/...)
 emitted by ``models.vision``; weights are plain pytrees from QAT training.
@@ -130,10 +140,43 @@ class LightatorDevice:
         return out
 
     # -- the device -------------------------------------------------------
+    def compile(self, layers: Sequence[LayerIR],
+                input_shape: Tuple[int, ...],
+                scheme: WASpec | MixedPrecisionScheme):
+        """Static pass: layers + input shape -> cached ``CompiledPlan``."""
+        from repro.core import plan as plan_mod
+        return plan_mod.compile_model(
+            tuple(layers), tuple(input_shape), scheme, oc=self.oc,
+            circuit=self.power.c, profile=self.power.profile,
+            weight_sram_kb=self.power.weight_sram_kb,
+            act_sram_kb=self.power.act_sram_kb)
+
     def run(self, layers: Sequence[LayerIR], params: Dict[str, Dict],
             image: jnp.ndarray,
             scheme: WASpec | MixedPrecisionScheme) -> Tuple[jnp.ndarray, pmod.ModelReport]:
-        """image: [B,H,W,C] float in [0,1]. Returns (logits, report)."""
+        """image: [B,H,W,C] float in [0,1]. Returns (logits, report).
+
+        Compatibility wrapper: compile (cached) + jitted batched execute.
+        Bit-identical to ``run_eager``.
+        """
+        import copy
+
+        from repro.core import plan as plan_mod
+        plan = self.compile(layers, image.shape, scheme)
+        logits = plan_mod.execute(plan, params, image)
+        # deep copy: the plan (and its report) is shared via the global plan
+        # cache; callers mutating their report must not corrupt future runs
+        return logits, copy.deepcopy(plan.report)
+
+    def run_eager(self, layers: Sequence[LayerIR], params: Dict[str, Dict],
+                  image: jnp.ndarray,
+                  scheme: WASpec | MixedPrecisionScheme) -> Tuple[jnp.ndarray, pmod.ModelReport]:
+        """The seed per-layer eager interpreter (reference semantics).
+
+        Re-schedules and re-runs the power model on every call; kept as the
+        specification the compiled path is regression-tested against, and as
+        the baseline for ``benchmarks.bench_pipeline``.
+        """
         compute_layers = [l for l in layers
                           if isinstance(l, (ConvSpec, DenseSpec))]
         specs = resolve_layer_specs(len(compute_layers), scheme)

@@ -1,0 +1,416 @@
+"""Static compile pass + jitted execute pass for the Lightator device.
+
+The seed ``LightatorDevice.run`` was an eager per-frame Python interpreter:
+every call re-resolved [W:A] specs, rebuilt OC schedules, re-ran the power
+model, and dispatched each layer's math as separate un-jitted XLA calls.
+All of that scheduling work is data-independent — it depends only on the
+layer IR, the [W:A] scheme, and the input shape. This module splits it out:
+
+  compile_model(layers, input_shape, scheme, ...) -> CompiledPlan
+      Runs shape inference over the IR once, resolves per-layer ``WASpec``s,
+      builds every ``OCSchedule`` and the full power/latency ``ModelReport``,
+      and precomputes the static geometry (conv pads, strides, output dims)
+      the execute pass needs. Plans are cached on
+      ``(layers, input_shape, scheme, oc, circuit, profile, sram)`` so a
+      serving loop compiles exactly once per model/shape.
+
+  execute(plan, params, frames) -> logits
+      A pure function of (params, frames), jitted once per plan, batch-first.
+      It reproduces the eager interpreter's integer-exact quantized numerics
+      bit-for-bit, but routes the MAC work through the kernel dispatch layer
+      (``kernels.dispatch``): on the pallas backend convs go via im2col into
+      the photonic MVM kernel and the CA through the fused ca_pool kernel;
+      the reference backend uses the integer-exact jnp/lax oracles (convs
+      stay ``conv_general_dilated`` — no patch materialization on large
+      frames). Because the OC accumulate is exact integer arithmetic on
+      both backends, conv/dense routing cannot change the logits; with the
+      dequant/activation/requant expressions kept textually identical to
+      preserve float associativity, the compiled path is bit-identical to
+      the seed eager path. One carve-out: the CA stage is *float* math, and
+      the fused ca_pool kernel's summation order differs from the reference
+      einsum by ~1 ulp — so on the pallas backend, CA-bearing models are
+      bit-identical only up to CRC requant absorbing that ulp (models
+      without a CASpec, like LeNet, stay exactly bit-identical on every
+      backend; everything is exact on the reference backend).
+
+``LightatorDevice.run`` is now a thin compatibility wrapper over these two
+passes; ``launch.serve_vision`` streams frame batches through a compiled
+plan and reports measured frames/s next to the model's simulated FPS/W.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import optical_core as ocore
+from repro.core import power_model as pmod
+from repro.core.quant import (ACT_BITS, WASpec, MixedPrecisionScheme,
+                              resolve_layer_specs)
+from repro.kernels import dispatch
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity helpers
+#
+# The eager interpreter runs op-by-op: every scalar literal is staged as an
+# executable *parameter* and every mul/add is its own XLA computation. Under
+# one fused jax.jit, XLA inlines literals (rewriting x/15 into x * (1/15),
+# off by 1 ULP) and LLVM contracts mul+add chains into FMAs. Both break
+# bit-identity with the eager reference, and neither optimization_barrier
+# nor the XLA fast-math flags stop them. So:
+#
+#   * quantization divisors (CRC a_qmax, MR w_qmax) are passed into the
+#     jitted executor as *traced* scalars — divisions by a parameter are
+#     never rewritten, exactly like the eager path's weak-typed literals;
+#   * `_nofma` (nextafter(x, x), an exact identity XLA expands to integer
+#     bit-ops) is inserted between the dequant multiply and the bias add,
+#     so LLVM never sees a contractible fmul->fadd edge.
+# ---------------------------------------------------------------------------
+
+def _nofma(x: jnp.ndarray) -> jnp.ndarray:
+    """Exact identity that blocks FMA contraction of producer*... + b."""
+    return jnp.nextafter(x, x)
+
+
+def _crc_requant_traced(x: jnp.ndarray, a_qmax: jnp.ndarray):
+    """`accelerator._crc_requant` with the divisor as a traced scalar."""
+    x = jnp.maximum(x, 0.0)
+    scale = jnp.maximum(jnp.max(x), 1e-8) / a_qmax
+    codes = jnp.clip(jnp.round(x / scale), 0, (1 << ACT_BITS) - 1)
+    return codes, scale
+
+
+def _quantize_weight_traced(w: jnp.ndarray, spec: WASpec,
+                            w_qmax: jnp.ndarray):
+    """`quant.quantize_weight(axis=-1)` with the divisor as a traced scalar."""
+    reduce_axes = tuple(range(w.ndim - 1))
+    if spec.per_channel:
+        amax = jnp.max(jnp.abs(w), axis=reduce_axes, keepdims=True)
+    else:
+        amax = jnp.max(jnp.abs(w))
+    s = jnp.maximum(amax, 1e-8) / w_qmax
+    q = jnp.clip(jnp.round(w / s), -spec.w_qmax, spec.w_qmax).astype(jnp.int8)
+    return q, s
+
+
+# ---------------------------------------------------------------------------
+# Shape inference helpers (shared with models.vision.vision_schedules)
+# ---------------------------------------------------------------------------
+
+def conv_out_hw(hw: int, kernel: int, stride: int, padding: str) -> int:
+    """Spatial output size of a conv, matching XLA's SAME/VALID semantics."""
+    if padding == "VALID":
+        return (hw - kernel) // stride + 1
+    return -(-hw // stride)                      # SAME: ceil(hw / stride)
+
+
+# ---------------------------------------------------------------------------
+# Plan steps: the IR annotated with everything shape-derived
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CAStep:
+    pool: int
+    rgb_to_gray: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvStep:
+    name: str
+    wa: WASpec
+    kernel: int
+    stride: int
+    act: str
+    pool: Optional[Tuple[str, int]]
+    pads: Tuple[Tuple[int, int], Tuple[int, int]]   # ((lo,hi) per spatial dim)
+
+
+@dataclasses.dataclass(frozen=True)
+class FlattenStep:
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseStep:
+    name: str
+    wa: WASpec
+    act: str
+
+
+PlanStep = CAStep | ConvStep | FlattenStep | DenseStep
+
+
+@dataclasses.dataclass(eq=False)
+class CompiledPlan:
+    """Everything ``execute`` needs, resolved once from shapes.
+
+    ``report`` is the architecture-level power/latency/FPS-per-W report for
+    one ``frame_shape`` frame — identical to what the eager interpreter
+    recomputed on every call. A plan is batch-agnostic: ``execute`` accepts
+    any leading batch dimension (each shape jit-compiles once).
+
+    Calibration caveat (inherited from the eager reference, preserved for
+    bit-identity): the CRC requant scale is a per-*tensor* max, reduced over
+    the batch axis too, so a frame's logits depend on the other frames in
+    its batch — serving the same frame at batch 1 vs batch 8 can classify
+    differently. Per-frame accuracy numbers should be measured at the batch
+    size they will be served at (or batch 1 for the hardware's per-frame
+    semantics).
+    """
+
+    layers: tuple
+    frame_shape: Tuple[int, int, int]         # per-frame [H, W, C]
+    scheme: WASpec | MixedPrecisionScheme
+    steps: Tuple[PlanStep, ...]
+    schedules: Tuple[ocore.OCSchedule, ...]
+    layer_specs: Tuple[WASpec, ...]
+    report: pmod.ModelReport
+    out_features: int
+    consts: Dict[str, object] = dataclasses.field(default_factory=dict)
+    _exec_fns: Dict[str, object] = dataclasses.field(default_factory=dict,
+                                                     repr=False)
+
+    def executor(self):
+        """The jitted (params, frames) -> logits function for this plan.
+
+        Keyed by the active kernel backend AND the Pallas interpret flag:
+        both are baked in at trace time, so switching either (set_backend /
+        REPRO_KERNEL_BACKEND / REPRO_FORCE_INTERPRET) gets its own jitted
+        executable instead of silently reusing the old trace.
+        """
+        key = (dispatch.get_backend(), dispatch.default_interpret())
+        fn = self._exec_fns.get(key)
+        if fn is None:
+            fn = jax.jit(
+                lambda params, frames, consts: _execute_steps(
+                    self.steps, params, frames, consts))
+            self._exec_fns[key] = fn
+        return fn
+
+
+# ---------------------------------------------------------------------------
+# Compile pass
+# ---------------------------------------------------------------------------
+
+_PLAN_CACHE: Dict[tuple, CompiledPlan] = {}
+_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def plan_cache_stats() -> Dict[str, int]:
+    return dict(_CACHE_STATS)
+
+
+def clear_plan_cache() -> None:
+    _PLAN_CACHE.clear()
+    _CACHE_STATS["hits"] = 0
+    _CACHE_STATS["misses"] = 0
+
+
+def compile_model(layers: Sequence, input_shape: Tuple[int, ...],
+                  scheme: WASpec | MixedPrecisionScheme,
+                  oc: ocore.OCConfig = ocore.DEFAULT_OC,
+                  circuit: pmod.CircuitConstants = pmod.DEFAULT_CIRCUIT,
+                  profile: pmod.AcceleratorProfile = pmod.LIGHTATOR_PROFILE,
+                  weight_sram_kb: float = 512.0,
+                  act_sram_kb: float = 256.0) -> CompiledPlan:
+    """Resolve specs, shapes, OC schedules and the power report — once.
+
+    ``input_shape`` is the frame shape, batched [B, H, W, C] or per-frame
+    [H, W, C]. The schedule / report describe one frame and the plan is
+    batch-agnostic (the device processes a frame per pass; the batch
+    dimension only feeds the jitted execute pass), so plans are cached on
+    the per-frame dims: streaming a ragged final batch or sweeping batch
+    sizes reuses the same ``CompiledPlan`` object — and its jitted
+    executors — without re-scheduling.
+    """
+    from repro.core.accelerator import (CASpec, ConvSpec, DenseSpec,
+                                        FlattenSpec)
+    layers = tuple(layers)
+    frame_shape = tuple(int(d) for d in input_shape[-3:])
+    if len(frame_shape) != 3:
+        raise ValueError(f"input_shape {input_shape} must be [B,H,W,C] or "
+                         f"[H,W,C]")
+    key = (layers, frame_shape, scheme, oc, circuit, profile,
+           weight_sram_kb, act_sram_kb)
+    cached = _PLAN_CACHE.get(key)
+    if cached is not None:
+        _CACHE_STATS["hits"] += 1
+        return cached
+    _CACHE_STATS["misses"] += 1
+
+    compute_layers = [l for l in layers if isinstance(l, (ConvSpec, DenseSpec))]
+    specs = resolve_layer_specs(len(compute_layers), scheme)
+    spec_iter = iter(specs)
+
+    steps: List[PlanStep] = []
+    schedules: List[ocore.OCSchedule] = []
+    spec_list: List[WASpec] = []
+
+    h, w, c = frame_shape
+    out_features = 0
+    for layer in layers:
+        if isinstance(layer, CASpec):
+            if h % layer.pool or w % layer.pool:
+                raise ValueError(
+                    f"CA pool={layer.pool} does not divide frame "
+                    f"{h}x{w}")
+            h, w = h // layer.pool, w // layer.pool
+            # fused RGB->gray collapses channels; per-channel pooling keeps c
+            rgb = layer.rgb_to_gray if layer.rgb_to_gray is not None else (c == 3)
+            c_out = 1 if (rgb or c == 1) else c
+            schedules.append(ocore.schedule_ca(
+                "CA", h, w, layer.pool, channels=frame_shape[-1], oc=oc))
+            spec_list.append(WASpec(4, 4))
+            steps.append(CAStep(layer.pool, rgb))
+            c = c_out
+        elif isinstance(layer, ConvSpec):
+            wa = next(spec_iter)
+            pads = jax.lax.padtype_to_pads(
+                (h, w), (layer.kernel, layer.kernel),
+                (layer.stride, layer.stride), layer.padding)
+            pads = tuple((int(lo), int(hi)) for lo, hi in pads)
+            h_out = conv_out_hw(h, layer.kernel, layer.stride, layer.padding)
+            w_out = conv_out_hw(w, layer.kernel, layer.stride, layer.padding)
+            h, w, c = h_out, w_out, layer.c_out
+            if layer.pool is not None:
+                kind, size = layer.pool
+                if h % size or w % size:
+                    raise ValueError(
+                        f"{layer.name}: {kind}-pool size={size} does not "
+                        f"divide its {h}x{w} conv output (the eager path "
+                        f"fails the same way, at reshape time)")
+                h, w = h // size, w // size
+                if kind == "avg":
+                    # avg pooling runs on CA banks with pre-set weights —
+                    # scheduled before the conv, as the eager interpreter did
+                    schedules.append(ocore.schedule_ca(
+                        f"{layer.name}.pool", h, w, size, channels=1, oc=oc))
+                    spec_list.append(WASpec(4, 4))
+            # NB: the eager interpreter scheduled the conv with its
+            # *post-pool* output dims (it read y.shape after pooling);
+            # reproduced here so reports stay bit-identical.
+            schedules.append(ocore.schedule_conv(
+                layer.name, h, w, layer.c_in, layer.c_out, layer.kernel,
+                oc=oc))
+            spec_list.append(wa)
+            steps.append(ConvStep(layer.name, wa, layer.kernel, layer.stride,
+                                  layer.act, layer.pool, pads))
+        elif isinstance(layer, FlattenSpec):
+            h, w, c = 1, 1, h * w * c
+            steps.append(FlattenStep())
+        elif isinstance(layer, DenseSpec):
+            wa = next(spec_iter)
+            schedules.append(ocore.schedule_fc(
+                layer.name, layer.fan_in, layer.fan_out, batch=1, oc=oc))
+            spec_list.append(wa)
+            steps.append(DenseStep(layer.name, wa, layer.act))
+            c = layer.fan_out
+            out_features = layer.fan_out
+        else:
+            raise TypeError(f"unknown layer IR {layer!r}")
+
+    power = pmod.PowerModel(oc, circuit, profile, weight_sram_kb, act_sram_kb)
+    lps = [power.layer_power(pmod.LayerSchedule(s, sp))
+           for s, sp in zip(schedules, spec_list)]
+    report = power.finalize_report(lps, schedules, scheme)
+
+    # quantization divisors, fed to the executor as traced scalars (see the
+    # bit-identity note at the top of this module)
+    consts = {
+        "a_qmax": np.float32((1 << ACT_BITS) - 1),
+        "w_qmax": {s.name: np.float32(s.wa.w_qmax) for s in steps
+                   if isinstance(s, (ConvStep, DenseStep))},
+    }
+
+    plan = CompiledPlan(layers, frame_shape, scheme, tuple(steps),
+                        tuple(schedules), tuple(spec_list), report,
+                        out_features or c, consts)
+    _PLAN_CACHE[key] = plan
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Execute pass (pure, jitted once per plan)
+# ---------------------------------------------------------------------------
+
+def _execute_steps(steps: Tuple[PlanStep, ...], params: Dict[str, Dict],
+                   frames: jnp.ndarray, consts: Dict[str, object]) -> jnp.ndarray:
+    """The device forward, batch-first, kernels via ``kernels.dispatch``.
+
+    Numerics contract: bit-identical to ``LightatorDevice.run_eager`` (on
+    the pallas backend, for CA-bearing models, up to the ca_pool float
+    summation-order ulp — see the module docstring). The MAC accumulates
+    are exact integers (so conv/dense kernel routing cannot change them);
+    every dequant/activation/requant expression keeps the eager path's
+    association order, with traced divisors + ``_nofma`` guards
+    neutralizing the jit-only rewrites (see module-top note).
+    """
+    from repro.core.accelerator import _activation
+
+    a_qmax = consts["a_qmax"]
+    codes, act_scale = _crc_requant_traced(frames, a_qmax)
+    x = codes
+    for step in steps:
+        if isinstance(step, CAStep):
+            intens = x * act_scale
+            g = dispatch.ca_acquire(intens, step.pool, step.rgb_to_gray)
+            if g.ndim == 3:
+                g = g[..., None]
+            x, act_scale = _crc_requant_traced(g, a_qmax)
+        elif isinstance(step, ConvStep):
+            p = params[step.name]
+            wq, ws = _quantize_weight_traced(p["w"], step.wa,
+                                             consts["w_qmax"][step.name])
+            acc = dispatch.conv_int(x, wq, step.stride, step.pads)
+            out = acc * (act_scale * ws.reshape(1, 1, 1, -1))
+            if p.get("b") is not None:
+                out = _nofma(out) + p["b"]
+            y = _activation(out, step.act)
+            if step.pool is not None:
+                kind, size = step.pool
+                b_, h_, w_, c_ = y.shape
+                yr = y.reshape(b_, h_ // size, size, w_ // size, size, c_)
+                y = yr.max(axis=(2, 4)) if kind == "max" else yr.mean(axis=(2, 4))
+            x, act_scale = _crc_requant_traced(y, a_qmax)
+        elif isinstance(step, FlattenStep):
+            intens = x * act_scale
+            flat = intens.reshape(intens.shape[0], -1)
+            x, act_scale = _crc_requant_traced(flat, a_qmax)
+        elif isinstance(step, DenseStep):
+            p = params[step.name]
+            wq, ws = _quantize_weight_traced(p["w"], step.wa,
+                                             consts["w_qmax"][step.name])
+            acc = dispatch.matmul_int(x, wq)
+            out = acc * (act_scale * ws.reshape(1, -1))
+            if p.get("b") is not None:
+                out = _nofma(out) + p["b"]
+            if step.act != "none":
+                y = _activation(out, step.act)
+                x, act_scale = _crc_requant_traced(y, a_qmax)
+            else:
+                x, act_scale = out, jnp.asarray(1.0)
+        else:
+            raise TypeError(f"unknown plan step {step!r}")
+    return x * act_scale if act_scale.ndim == 0 else x
+
+
+def execute(plan: CompiledPlan, params: Dict[str, Dict],
+            frames: jnp.ndarray) -> jnp.ndarray:
+    """Run ``frames`` [B, H, W, C] through a compiled plan -> logits [B, n].
+
+    The underlying function is jitted once per plan; repeated calls with the
+    same frame shape reuse the XLA executable (no re-tracing, no
+    re-scheduling — the schedules live on the plan).
+    """
+    if frames.ndim == 3:                       # single frame [H, W, C]
+        frames = frames[None]
+    if frames.ndim != 4 or tuple(frames.shape[1:]) != plan.frame_shape:
+        raise ValueError(f"frames {frames.shape} do not match plan frame "
+                         f"shape {plan.frame_shape}; expected "
+                         f"[B, {', '.join(map(str, plan.frame_shape))}]")
+    return plan.executor()(params, frames, plan.consts)

@@ -4,3 +4,6 @@
 #   conv_bank    — Fig. 6 conv mapping (tap-position dots = arms)
 # Each package: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper),
 # ref.py (pure-jnp oracle). Validated on CPU with interpret=True.
+# dispatch.py picks the backend (pallas on TPU, reference elsewhere; env
+# overrides REPRO_KERNEL_BACKEND / REPRO_FORCE_INTERPRET) and is the single
+# source of the Pallas interpret flag (default_interpret()).

@@ -2,13 +2,11 @@
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.compressive import ca_coefficients
 from repro.kernels.ca_pool import kernel as K
-
-_INTERPRET = jax.default_backend() != "tpu"
+from repro.kernels.dispatch import default_interpret
 
 
 def ca_pool(img: jnp.ndarray, pool: int = 2,
@@ -23,8 +21,7 @@ def ca_pool(img: jnp.ndarray, pool: int = 2,
     if coeffs is None:
         if rgb_to_gray is None:
             rgb_to_gray = (c == 3)
-        coeffs = ca_coefficients(pool, c if rgb_to_gray else c)
-        if not rgb_to_gray:
-            coeffs = jnp.ones((pool, pool, c), jnp.float32) / (pool * pool * c)
+        coeffs = (ca_coefficients(pool, c) if rgb_to_gray
+                  else jnp.ones((pool, pool, c), jnp.float32) / (pool * pool * c))
     return K.ca_pool_kernel(img, coeffs.astype(jnp.float32), pool=pool,
-                            interpret=_INTERPRET)
+                            interpret=default_interpret())

@@ -4,13 +4,11 @@ from __future__ import annotations
 
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.quant import WASpec, quantize_weight
 from repro.kernels.conv_bank import kernel as K
-
-_INTERPRET = jax.default_backend() != "tpu"
+from repro.kernels.dispatch import default_interpret
 
 
 def conv_bank(x: jnp.ndarray, w: jnp.ndarray,
@@ -32,9 +30,9 @@ def conv_bank(x: jnp.ndarray, w: jnp.ndarray,
         return K.conv_bank_kernel(xin, wq.astype(jnp.float32),
                                   ws.reshape(-1), kk=kk, bn=bn,
                                   act_scale=act_scale, quantized=True,
-                                  interpret=_INTERPRET)
+                                  interpret=default_interpret())
     xin = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
     ws_dummy = jnp.ones((w.shape[-1],), jnp.float32)
     return K.conv_bank_kernel(xin.astype(jnp.float32),
                               w.astype(jnp.float32), ws_dummy, kk=kk, bn=bn,
-                              quantized=False, interpret=_INTERPRET)
+                              quantized=False, interpret=default_interpret())

@@ -1,0 +1,176 @@
+"""Backend dispatch for the Lightator compute kernels.
+
+One place decides *how* the photonic integer math actually runs:
+
+  pallas     — the Pallas TPU kernels (photonic_mvm / conv_bank / ca_pool).
+               On a real TPU they compile to MXU code; elsewhere they run in
+               interpret mode, which is a correctness tool, not a perf path.
+  reference  — the pure-jnp oracles (ref.py modules / core.compressive).
+               Bit-identical to the Pallas kernels for the integer MVM path
+               (both accumulate exact integers), and fast under XLA on CPU.
+
+Selection order:
+
+  1. ``set_backend("pallas"|"reference"|None)`` — programmatic override.
+  2. ``REPRO_KERNEL_BACKEND`` env var.
+  3. default: ``pallas`` on TPU, ``reference`` everywhere else.
+
+``default_interpret()`` is the single source of truth for the Pallas
+``interpret=`` flag (previously three duplicated ``_INTERPRET`` module
+globals): interpret off on TPU, on elsewhere, overridable for debugging with
+``REPRO_FORCE_INTERPRET=1|0``.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import os
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+BACKENDS = ("pallas", "reference")
+
+_TRUTHY = ("1", "true", "yes", "on")
+_FALSY = ("0", "false", "no", "off")
+
+_backend_override: Optional[str] = None
+
+
+def default_interpret() -> bool:
+    """Pallas ``interpret=`` flag: False on real TPU, True elsewhere.
+
+    ``REPRO_FORCE_INTERPRET=1`` forces interpret mode even on TPU (debugging);
+    ``REPRO_FORCE_INTERPRET=0`` forces compiled mode.
+    """
+    env = os.environ.get("REPRO_FORCE_INTERPRET", "").strip().lower()
+    if env in _TRUTHY:
+        return True
+    if env in _FALSY:
+        return False
+    return jax.default_backend() != "tpu"
+
+
+def get_backend() -> str:
+    """Resolve the active kernel backend (see module docstring)."""
+    if _backend_override is not None:
+        return _backend_override
+    env = os.environ.get("REPRO_KERNEL_BACKEND", "").strip().lower()
+    if env:
+        if env not in BACKENDS:
+            raise ValueError(
+                f"REPRO_KERNEL_BACKEND={env!r}; expected one of {BACKENDS}")
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "reference"
+
+
+def set_backend(name: Optional[str]) -> None:
+    """Force a backend programmatically; ``None`` restores auto-selection."""
+    global _backend_override
+    if name is not None and name not in BACKENDS:
+        raise ValueError(f"unknown backend {name!r}; expected {BACKENDS}")
+    _backend_override = name
+
+
+@contextlib.contextmanager
+def use_backend(name: str) -> Iterator[None]:
+    """Context manager form of :func:`set_backend`."""
+    prev = _backend_override
+    set_backend(name)
+    try:
+        yield
+    finally:
+        set_backend(prev)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch entry points
+# ---------------------------------------------------------------------------
+
+def matmul_int(a_codes: jnp.ndarray, wq: jnp.ndarray) -> jnp.ndarray:
+    """Integer-exact MAC: [M, K] codes x [K, N] weight levels -> f32 [M, N].
+
+    This is the raw OC accumulate (arm dots + BPD + summation tree) with NO
+    dequant — both backends return the exact integer sum carried in f32, so
+    callers can apply scale factors in whatever association order their
+    reference semantics demand. Exactness envelope: with the device's CRC
+    codes (<= 15) and MR levels (|wq| <= 7, i.e. w_bits <= 4) every partial
+    sum stays below 105 * K; for K up to ~160K that is under 2^24, exact in
+    f32 and int32 alike. Callers pushing w_bits to 8 (|wq| <= 127, bound
+    15 * 127 * K) must keep K below ~8.8K themselves.
+    """
+    if get_backend() == "pallas":
+        from repro.kernels.photonic_mvm.ops import photonic_mvm_prequant
+        ones = jnp.ones((wq.shape[-1],), jnp.float32)
+        return photonic_mvm_prequant(a_codes.astype(jnp.int8),
+                                     wq.astype(jnp.int8), ones, act_scale=1.0)
+    from repro.kernels.photonic_mvm.ref import mvm_int_ref
+    ones = jnp.ones((wq.shape[-1],), jnp.float32)
+    return mvm_int_ref(a_codes.astype(jnp.int32), wq.astype(jnp.int32), ones)
+
+
+def conv_int(codes: jnp.ndarray, wq: jnp.ndarray, stride: int,
+             pads) -> jnp.ndarray:
+    """Integer-exact conv accumulate: [B,H,W,Cin] codes x [k,k,Cin,Cout]
+    weight levels -> f32 [B,H',W',Cout], NO dequant (see matmul_int).
+
+    pallas: im2col into the photonic MVM kernel (one OC weight mapping per
+    VMEM-resident tile). reference: ``lax.conv_general_dilated`` on the
+    float-carried codes — the exact op the eager interpreter runs, so no
+    patch matrix is ever materialized (at 224x224 frames the im2col patches
+    would be ~100x the input).
+    """
+    if get_backend() == "pallas":
+        b = codes.shape[0]
+        k, _, c_in, c_out = wq.shape
+        patches, h_out, w_out = _im2col(codes, k, stride, pads)
+        acc = matmul_int(patches, wq.reshape(k * k * c_in, c_out))
+        return acc.reshape(b, h_out, w_out, c_out)
+    return jax.lax.conv_general_dilated(
+        codes.astype(jnp.float32), wq.astype(jnp.float32),
+        window_strides=(stride, stride), padding=tuple(pads),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _im2col(codes: jnp.ndarray, k: int, stride: int, pads):
+    """[B,H,W,Cin] -> ([B*H'*W', k*k*Cin], H', W').
+
+    Tap order (di, dj, cin) matches ``wq.reshape(k*k*cin, cout)`` so the
+    patch @ weight matmul reproduces the conv accumulate exactly.
+    """
+    (plo, phi), (qlo, qhi) = pads
+    xp = jnp.pad(codes, ((0, 0), (plo, phi), (qlo, qhi), (0, 0)))
+    h_out = (xp.shape[1] - k) // stride + 1
+    w_out = (xp.shape[2] - k) // stride + 1
+    cols = []
+    for di in range(k):
+        for dj in range(k):
+            cols.append(xp[:, di:di + (h_out - 1) * stride + 1:stride,
+                           dj:dj + (w_out - 1) * stride + 1:stride, :])
+    patches = jnp.concatenate(cols, axis=-1)
+    return patches.reshape(-1, k * k * codes.shape[-1]), h_out, w_out
+
+
+def ca_acquire(img: jnp.ndarray, pool: int,
+               rgb_to_gray: bool | None = None) -> jnp.ndarray:
+    """Compressive Acquisitor dispatch. img [B, H, W, C].
+
+    Returns [B, H', W'] (fused gray) or [B, H', W', C] (per-channel pooling),
+    matching ``core.compressive.compressive_acquire``. The Pallas kernel only
+    implements the fused single-output modes (rgb_to_gray or C == 1); the
+    per-channel multi-channel mode always uses the reference.
+
+    NB: unlike matmul_int/conv_int this is *float* math — the kernel's tap
+    summation order differs from the reference einsum by ~1 ulp, so the two
+    backends agree only up to downstream CRC requant.
+    """
+    c = img.shape[-1]
+    if rgb_to_gray is None:
+        rgb_to_gray = (c == 3)
+    if get_backend() == "pallas" and (rgb_to_gray or c == 1):
+        from repro.kernels.ca_pool.ops import ca_pool
+        out = ca_pool(img, pool=pool, rgb_to_gray=rgb_to_gray)
+        return out if rgb_to_gray else out[..., None]
+    from repro.core.compressive import compressive_acquire
+    return compressive_acquire(img, pool, rgb_to_gray)

@@ -7,15 +7,11 @@ and the interpret switch (True on CPU — this container; False on real TPU).
 
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
 
 from repro.core.quant import WASpec, quantize_weight
+from repro.kernels.dispatch import default_interpret
 from repro.kernels.photonic_mvm import kernel as K
-
-_INTERPRET = jax.default_backend() != "tpu"
 
 
 def _pad_to(x: jnp.ndarray, mult: int, axis: int) -> jnp.ndarray:
@@ -45,7 +41,8 @@ def photonic_mvm_prequant(a_signed_codes: jnp.ndarray, wq: jnp.ndarray,
     wp = _pad_to(_pad_to(wq, bk, 0), bn, 1)
     wsp = _pad_to(ws.reshape(-1), bn, 0)
     out = K.mvm_int_kernel(a2, wp, wsp, act_scale=act_scale, bm=bm, bn=bn,
-                           bk=bk, out_dtype=out_dtype, interpret=_INTERPRET)
+                           bk=bk, out_dtype=out_dtype,
+                           interpret=default_interpret())
     return out[:m, :n].reshape(*lead, n)
 
 

@@ -1,1 +1,5 @@
-"""launch — production mesh, multi-pod dry-run, roofline, train/serve drivers."""
+"""launch — production mesh, multi-pod dry-run, roofline, train/serve drivers.
+
+``serve_vision`` streams frame batches through the compiled device pipeline
+(core.plan) and reports measured frames/s next to the simulated FPS/W.
+"""

@@ -139,6 +139,17 @@ VISION_MODELS = {
     "alexnet": alexnet_ir,
 }
 
+# Per-frame [H, W, C] each IR's default arguments expect — what the batched
+# serving driver (launch.serve_vision) and pipeline benchmarks feed in.
+# alexnet is deliberately absent: its IR is schedule-only (Fig. 10 cycle
+# counts) — the 11x11/s4 conv yields odd pool inputs, so the executable
+# device path rejects it.
+MODEL_INPUT_HWC = {
+    "lenet": (28, 28, 1),
+    "vgg9": (32, 32, 3),
+    "vgg16": (224, 224, 3),
+}
+
 
 # ---------------------------------------------------------------------------
 # Trainable QAT forward (application level)
@@ -197,6 +208,7 @@ def apply_vision(params, layers: List[LayerIR], x: jnp.ndarray,
 def vision_schedules(layers: List[LayerIR], in_hw: int):
     """Layer IR -> OCSchedules (what benchmarks feed the power model)."""
     from repro.core import optical_core as ocore
+    from repro.core.plan import conv_out_hw
     scheds = []
     hw = in_hw
     c_last = None
@@ -205,10 +217,7 @@ def vision_schedules(layers: List[LayerIR], in_hw: int):
             hw //= layer.pool
             scheds.append(ocore.schedule_ca("CA", hw, hw, layer.pool, 3))
         elif isinstance(layer, ConvSpec):
-            if layer.padding == "VALID":
-                hw = (hw - layer.kernel) // layer.stride + 1
-            else:
-                hw = -(-hw // layer.stride)
+            hw = conv_out_hw(hw, layer.kernel, layer.stride, layer.padding)
             scheds.append(ocore.schedule_conv(layer.name, hw, hw, layer.c_in,
                                               layer.c_out, layer.kernel))
             if layer.pool:

@@ -1,0 +1,168 @@
+"""Compile/execute split regression tests (core.plan + kernels.dispatch).
+
+Contract under test: the compiled pipeline (static compile pass + single
+jitted batched execute pass routed through the kernel dispatch layer) is
+*bit-identical* — logits and power report — to the seed eager interpreter
+``LightatorDevice.run_eager``, and compiles exactly once per
+(model, scheme, shape).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import plan as plan_mod
+from repro.core.accelerator import LightatorDevice
+from repro.core.quant import W4A4, W3A4, MX_43
+from repro.kernels import dispatch
+from repro.models.vision import lenet_ir, vgg9_ir, init_vision
+
+
+@pytest.fixture(scope="module")
+def lenet():
+    layers = lenet_ir()
+    params = init_vision(jax.random.PRNGKey(0), layers)
+    img = jax.random.uniform(jax.random.PRNGKey(1), (2, 28, 28, 1))
+    return layers, params, img
+
+
+@pytest.mark.parametrize("scheme", [W4A4, W3A4], ids=["w4a4", "w3a4"])
+def test_execute_bit_identical_to_eager(lenet, scheme):
+    """Logits AND power report must match the seed eager path exactly."""
+    layers, params, img = lenet
+    dev = LightatorDevice()
+    logits_e, report_e = dev.run_eager(layers, params, img, scheme)
+    logits_c, report_c = dev.run(layers, params, img, scheme)
+    np.testing.assert_array_equal(np.asarray(logits_e), np.asarray(logits_c))
+    assert dataclasses.asdict(report_e) == dataclasses.asdict(report_c)
+
+
+@pytest.mark.parametrize("make", [
+    pytest.param(lambda: (lenet_ir(in_hw=32, use_ca=True), (2, 32, 32, 1)),
+                 id="lenet_ca"),
+    pytest.param(lambda: (vgg9_ir(in_hw=32, n_classes=10), (2, 32, 32, 3)),
+                 id="vgg9_ca"),
+])
+def test_ca_models_bit_identical_to_eager(make):
+    """The CAStep branch (fused gray/pool + requant) matches eager too."""
+    layers, shape = make()
+    params = init_vision(jax.random.PRNGKey(0), layers)
+    img = jax.random.uniform(jax.random.PRNGKey(2), shape)
+    dev = LightatorDevice()
+    logits_e, report_e = dev.run_eager(layers, params, img, W4A4)
+    logits_c, report_c = dev.run(layers, params, img, W4A4)
+    np.testing.assert_array_equal(np.asarray(logits_e), np.asarray(logits_c))
+    assert dataclasses.asdict(report_e) == dataclasses.asdict(report_c)
+
+
+def test_mx_scheme_bit_identical(lenet):
+    layers, params, img = lenet
+    dev = LightatorDevice()
+    logits_e, report_e = dev.run_eager(layers, params, img, MX_43)
+    logits_c, report_c = dev.run(layers, params, img, MX_43)
+    np.testing.assert_array_equal(np.asarray(logits_e), np.asarray(logits_c))
+    assert dataclasses.asdict(report_e) == dataclasses.asdict(report_c)
+
+
+def test_compile_is_cached_and_schedules_once(lenet, monkeypatch):
+    """Repeated runs reuse the plan: no re-scheduling, same executor."""
+    layers, params, img = lenet
+    plan_mod.clear_plan_cache()
+    calls = {"n": 0}
+    import repro.core.optical_core as ocore
+    orig = ocore.schedule_conv
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(ocore, "schedule_conv", counting)
+    p1 = plan_mod.compile_model(tuple(layers), img.shape, W4A4)
+    after_first = calls["n"]
+    assert after_first > 0
+    p2 = plan_mod.compile_model(tuple(layers), img.shape, W4A4)
+    assert p2 is p1                       # same object, executor preserved
+    assert calls["n"] == after_first      # no re-scheduling on the hit
+    stats = plan_mod.plan_cache_stats()
+    assert stats["hits"] >= 1
+
+    # repeated execute: one traced executable per (backend, shape)
+    f1 = p1.executor()
+    plan_mod.execute(p1, params, img)
+    plan_mod.execute(p1, params, img)
+    assert p1.executor() is f1
+
+
+def test_execute_batch_consistency(lenet):
+    """Batched execute equals the same batch through the eager path."""
+    layers, params, _ = lenet
+    dev = LightatorDevice()
+    imgs = jax.random.uniform(jax.random.PRNGKey(3), (8, 28, 28, 1))
+    le, _ = dev.run_eager(layers, params, imgs, W4A4)
+    lc, _ = dev.run(layers, params, imgs, W4A4)
+    assert le.shape == (8, 10)
+    np.testing.assert_array_equal(np.asarray(le), np.asarray(lc))
+
+
+def test_pallas_backend_bit_identical(lenet):
+    """Forcing the Pallas kernels (interpret mode on CPU) changes nothing:
+    the OC accumulate is exact integer math on every backend."""
+    layers, params, img = lenet
+    dev = LightatorDevice()
+    logits_ref, _ = dev.run_eager(layers, params, img, W4A4)
+    plan_mod.clear_plan_cache()
+    with dispatch.use_backend("pallas"):
+        logits_pl, _ = dev.run(layers, params, img, W4A4)
+    plan_mod.clear_plan_cache()
+    np.testing.assert_array_equal(np.asarray(logits_ref),
+                                  np.asarray(logits_pl))
+
+
+def test_execute_rejects_wrong_frame_shape(lenet):
+    layers, params, img = lenet
+    dev = LightatorDevice()
+    plan = dev.compile(layers, img.shape, W4A4)
+    bad = jnp.zeros((2, 14, 14, 1))
+    with pytest.raises(ValueError, match="do not match plan"):
+        plan_mod.execute(plan, params, bad)
+
+
+# -- dispatch layer ---------------------------------------------------------
+
+def test_default_interpret_env_override(monkeypatch):
+    monkeypatch.delenv("REPRO_FORCE_INTERPRET", raising=False)
+    on_tpu = jax.default_backend() == "tpu"
+    assert dispatch.default_interpret() == (not on_tpu)
+    monkeypatch.setenv("REPRO_FORCE_INTERPRET", "1")
+    assert dispatch.default_interpret() is True
+    monkeypatch.setenv("REPRO_FORCE_INTERPRET", "0")
+    assert dispatch.default_interpret() is False
+
+
+def test_backend_selection_env_and_override(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "pallas")
+    assert dispatch.get_backend() == "pallas"
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "reference")
+    assert dispatch.get_backend() == "reference"
+    with dispatch.use_backend("pallas"):
+        assert dispatch.get_backend() == "pallas"      # override beats env
+    assert dispatch.get_backend() == "reference"
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "bogus")
+    with pytest.raises(ValueError, match="REPRO_KERNEL_BACKEND"):
+        dispatch.get_backend()
+    with pytest.raises(ValueError, match="unknown backend"):
+        dispatch.set_backend("bogus")
+
+
+def test_matmul_int_backends_agree():
+    k = jax.random.PRNGKey(0)
+    a = jnp.round(jax.random.uniform(k, (5, 40)) * 15)
+    wq = jnp.round(jax.random.uniform(jax.random.PRNGKey(1), (40, 7)) * 14) - 7
+    with dispatch.use_backend("reference"):
+        ref = dispatch.matmul_int(a, wq)
+    with dispatch.use_backend("pallas"):
+        pal = dispatch.matmul_int(a, wq)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(pal))

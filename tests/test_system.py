@@ -12,6 +12,10 @@ from repro.core.accelerator import LightatorDevice
 from repro.core.quant import W4A4, W3A4, W2A4, MX_43
 from repro.models.vision import lenet_ir, vgg9_ir, init_vision, apply_vision
 
+# The fast compile/execute coverage lives in test_plan_compile.py; this
+# module keeps the full-stack sweeps and runs in the slow tier.
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def lenet():

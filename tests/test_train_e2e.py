@@ -8,6 +8,8 @@ import pytest
 from repro.launch.train import main as train_main
 from repro.launch.serve import main as serve_main
 
+pytestmark = pytest.mark.slow
+
 
 def test_train_loss_decreases(tmp_path):
     losses = train_main([
