@@ -1,0 +1,92 @@
+"""Imaging pipelines: frames/s + quantized-vs-float quality per scheme.
+
+For every pipeline in ``repro.imaging.PIPELINES`` x [W:A] scheme, compiles
+the plan, measures compiled frames/s on the host backend, and scores the
+quantized device output against the float reference path (PSNR/SSIM); recon
+pipelines are additionally scored against the original grayscale frame
+(reconstruction quality). Writes ``BENCH_imaging.json`` next to this file.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax.numpy as jnp
+
+from repro.core import plan as plan_mod
+from repro.core.quant import W4A4, MX_43
+from repro.data.synthetic import synthetic_textures
+from repro.imaging import PIPELINES, apply_float, gray_target, psnr, ssim
+
+SCHEMES = {"w4a4": W4A4, "mx43": MX_43}
+HW = 64
+BATCH = 8
+OUT_PATH = Path(__file__).resolve().parent / "BENCH_imaging.json"
+
+
+def _time_loop(fn, min_reps: int = 3, min_time_s: float = 0.2) -> float:
+    """Per-call seconds; repeats until both floors are met."""
+    fn()                                     # warmup (jit/eager caches)
+    reps, t0 = 0, time.perf_counter()
+    while True:
+        fn()
+        reps += 1
+        dt = time.perf_counter() - t0
+        if reps >= min_reps and dt >= min_time_s:
+            return dt / reps
+
+
+def run(csv: bool = True, pipelines=None):
+    import jax
+    names = sorted(pipelines or PIPELINES)
+    imgs, _ = synthetic_textures(BATCH, hw=HW, seed=0)
+    frames = jnp.asarray(imgs)
+    results = {}
+    out_lines = []
+    for name in names:
+        pipe = PIPELINES[name]
+        layers, params = pipe.build(HW, HW, 3)
+        ref = apply_float(layers, params, frames)
+        per_scheme = {}
+        for sname, scheme in SCHEMES.items():
+            plan = plan_mod.compile_model(layers, frames.shape, scheme)
+            out = plan_mod.execute(plan, params, frames)
+            t = _time_loop(lambda: plan_mod.execute(plan, params, frames)
+                           .block_until_ready())
+            fps = BATCH / t
+            entry = {
+                "fps": fps,
+                "psnr_db": float(psnr(ref, out)),
+                "ssim": float(ssim(ref, out)),
+                "device_fps": plan.report.fps,
+                "device_kfps_per_w": plan.report.kfps_per_w,
+            }
+            if pipe.kind == "recon":
+                tgt = gray_target(frames)
+                entry["recon_psnr_db"] = float(psnr(tgt, out))
+                entry["recon_psnr_float_db"] = float(psnr(tgt, ref))
+            per_scheme[sname] = entry
+            out_lines.append(
+                f"bench_imaging.{name}.{sname},{t * 1e6:.0f},"
+                f"fps={fps:.0f};psnr={entry['psnr_db']:.2f}dB;"
+                f"ssim={entry['ssim']:.4f}")
+        results[name] = {"kind": pipe.kind,
+                         "description": pipe.description,
+                         "schemes": per_scheme}
+
+    payload = {
+        "input": f"synthetic_textures {BATCH}x{HW}x{HW}x3",
+        "backend": jax.default_backend(),
+        "pipelines": results,
+    }
+    OUT_PATH.write_text(json.dumps(payload, indent=2) + "\n")
+    if csv:
+        print("\n".join(out_lines))
+        print(f"bench_imaging.json,0.0,path={OUT_PATH}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

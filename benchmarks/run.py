@@ -7,6 +7,7 @@
 #   bench_accuracy  Table 1 accuracy axis (QAT trend on synthetic digits)
 #   bench_kernels   Pallas kernels vs oracles
 #   bench_pipeline  eager vs compiled device pipeline frames/s (core.plan)
+#   bench_imaging   imaging pipelines frames/s + PSNR/SSIM per scheme
 
 import sys
 
@@ -14,7 +15,7 @@ import sys
 def main() -> None:
     from benchmarks import (bench_table1, bench_fig8, bench_fig9,
                             bench_fig10, bench_accuracy, bench_kernels,
-                            bench_lm_photonic, bench_pipeline)
+                            bench_lm_photonic, bench_pipeline, bench_imaging)
     bench_table1.run()
     bench_fig8.run()
     bench_fig9.run()
@@ -24,6 +25,8 @@ def main() -> None:
     bench_kernels.run()
     bench_lm_photonic.run()
     bench_pipeline.run(batches=(1, 8) if quick else bench_pipeline.BATCHES)
+    bench_imaging.run(pipelines=("edge_detect", "compress_recon")
+                      if quick else None)
 
 
 if __name__ == '__main__':

@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Tier-1 CI: the fast test suite + an end-to-end serving smoke on CPU.
+#   bash scripts/ci.sh          # what the driver runs
+#   bash scripts/ci.sh --slow   # also include the slow-marked tests
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+if [[ "${1:-}" == "--slow" ]]; then
+    python -m pytest -x -q -m ""
+else
+    python -m pytest -x -q
+fi
+
+# end-to-end serving smoke (2 batches each): imaging pipeline + CNN
+python -m repro.launch.serve_vision --pipeline edge_detect --batch 2 \
+    --batches 2 --size 32
+python -m repro.launch.serve_vision --model lenet --batch 2 --batches 2
+
+echo "ci.sh: OK"

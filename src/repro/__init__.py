@@ -6,6 +6,8 @@ Layers:
   nn/, models/  model substrate (pure-functional JAX modules)
   kernels/      Pallas TPU kernels for the perf-critical compute (photonic MVM,
                 compressive acquisition, bank-mapped convolution)
+  imaging/      fixed-function image-processing pipelines (optical filters +
+                CA compression/reconstruction) compiled on the plan runtime
   distributed/  sharding rules, collectives, fault tolerance, elastic scaling
   optim/, checkpoint/, data/   training substrate
   configs/      assigned architectures + the paper's own CNNs

@@ -60,8 +60,28 @@ class ConvSpec:
     kernel: int = 3
     stride: int = 1
     padding: str = "SAME"
-    act: str = "relu"               # relu | sign | tanh | none
+    act: str = "relu"               # relu | sign | tanh | abs | none
     pool: Optional[Tuple[str, int]] = None   # ("avg"|"max", size)
+    # Depthwise filtering: the same (or a per-channel) k x k filter applied to
+    # each input channel independently (c_out == c_in, weights [k,k,1,c]).
+    # This is how the imaging pipelines run fixed-function filters over RGB
+    # frames without collapsing channels — each channel is one single-channel
+    # conv on the OC banks (k*k taps per arm group, c_out strides).
+    depthwise: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class UpsampleSpec:
+    """Reconstruction upsample (the CA's inverse for compress->recon).
+
+    Runs as preset-weight interpolation banks: every output pixel is a fixed
+    weighted sum of <= 4 neighbouring inputs (bilinear) or a copy (nearest) —
+    the same preset-MAC structure as the CA, so it is scheduled like a CA
+    layer (no DACs, no remaps).
+    """
+
+    factor: int = 2
+    method: str = "bilinear"        # bilinear | nearest
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,7 +97,7 @@ class FlattenSpec:
     pass
 
 
-LayerIR = CASpec | ConvSpec | DenseSpec | FlattenSpec
+LayerIR = CASpec | ConvSpec | DenseSpec | FlattenSpec | UpsampleSpec
 
 
 def _activation(x: jnp.ndarray, kind: str) -> jnp.ndarray:
@@ -87,6 +107,10 @@ def _activation(x: jnp.ndarray, kind: str) -> jnp.ndarray:
         return jnp.sign(x)
     if kind == "tanh":
         return jnp.tanh(x)
+    if kind == "abs":
+        # magnitude readout: the BPD's two rails measured without sign —
+        # what edge-magnitude pipelines consume
+        return jnp.abs(x)
     if kind == "none":
         return x
     raise ValueError(f"unknown activation {kind}")
@@ -176,6 +200,11 @@ class LightatorDevice:
         Re-schedules and re-runs the power model on every call; kept as the
         specification the compiled path is regression-tested against, and as
         the baseline for ``benchmarks.bench_pipeline``.
+
+        Covers the seed IR only: the imaging extensions (depthwise convs,
+        ``UpsampleSpec``) execute exclusively on the compiled path — their
+        quality oracle is the float reference (``imaging.apply_float``), not
+        this interpreter — and are rejected here with a clear error.
         """
         compute_layers = [l for l in layers
                           if isinstance(l, (ConvSpec, DenseSpec))]
@@ -203,6 +232,11 @@ class LightatorDevice:
                 spec_list.append(WASpec(4, 4))
                 x, act_scale = _crc_requant(g)
             elif isinstance(layer, ConvSpec):
+                if layer.depthwise:
+                    raise NotImplementedError(
+                        f"{layer.name}: depthwise convs run on the compiled "
+                        f"path only (core.plan.execute); the eager "
+                        f"interpreter covers the seed IR")
                 wa = next(spec_iter)
                 p = params[layer.name]
                 y = self._conv(x, act_scale, p["w"], p.get("b"), layer, wa)

@@ -78,6 +78,24 @@ def strided_conv_acquire(img: jnp.ndarray, weights: jnp.ndarray,
     return jnp.einsum("...hpwqc,pqc->...hw", patches, weights)
 
 
+def upsample_reconstruct(img: jnp.ndarray, factor: int = 2,
+                         method: str = "bilinear") -> jnp.ndarray:
+    """The CA's inverse: reconstruct a full-resolution frame from a
+    compressively acquired one (paper's versatile-processing direction:
+    acquisition *and* reconstruction on the same preset-MAC fabric).
+
+    img: [B, H, W, C] -> [B, H*factor, W*factor, C]. ``bilinear`` models
+    preset interpolation banks (each output a fixed weighted sum of <= 4
+    inputs); ``nearest`` is a pure copy. Deterministic and differentiable —
+    the learned deconv head trains through it.
+    """
+    import jax
+    if method not in ("bilinear", "nearest"):
+        raise ValueError(f"unknown upsample method {method!r}")
+    b, h, w, c = img.shape
+    return jax.image.resize(img, (b, h * factor, w * factor, c), method)
+
+
 def sequence_ca(embeds: jnp.ndarray, factor: int,
                 channel_mix: jnp.ndarray | None = None) -> jnp.ndarray:
     """Compressive acquisition for token/frame/patch embedding streams.

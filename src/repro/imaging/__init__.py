@@ -1,0 +1,16 @@
+"""repro.imaging — compiled versatile image-processing pipelines.
+
+Fixed-function optical filter / compression / reconstruction programs over
+the LightatorDevice layer IR, compiled and executed on the plan runtime
+(``core.plan``) with per-scheme quantization, plus the float reference path
+and PSNR/SSIM quality metrics.
+"""
+
+from repro.imaging.metrics import psnr, ssim
+from repro.imaging.pipelines import (PIPELINES, ImagingPipeline,
+                                     fit_recon_head, gray_target,
+                                     recon_head_identity_params)
+from repro.imaging.reference import apply_float
+
+__all__ = ["PIPELINES", "ImagingPipeline", "apply_float", "fit_recon_head",
+           "gray_target", "psnr", "ssim", "recon_head_identity_params"]

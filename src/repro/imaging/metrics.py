@@ -1,0 +1,60 @@
+"""Image quality metrics: PSNR + SSIM (quantized-vs-float evaluation).
+
+Used to report how much the device's 4-bit CRC activations and [W:A] MR
+weight quantization cost against the float reference pipeline, and how much
+reconstruction quality the compressive acquisition gives back up.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _data_range(ref: jnp.ndarray, data_range) -> jnp.ndarray:
+    if data_range is not None:
+        return jnp.asarray(data_range, jnp.float32)
+    rng = jnp.max(ref) - jnp.min(ref)
+    return jnp.maximum(rng, 1e-8)
+
+
+def psnr(ref: jnp.ndarray, x: jnp.ndarray, data_range=None) -> jnp.ndarray:
+    """Peak signal-to-noise ratio in dB. ``ref`` is the ground truth;
+    ``data_range`` defaults to ref's dynamic range (use 1.0 for [0,1] frames).
+    """
+    mse = jnp.mean((ref.astype(jnp.float32) - x.astype(jnp.float32)) ** 2)
+    dr = _data_range(ref, data_range)
+    return 20.0 * jnp.log10(dr) - 10.0 * jnp.log10(jnp.maximum(mse, 1e-12))
+
+
+def ssim(ref: jnp.ndarray, x: jnp.ndarray, data_range=None,
+         window: int = 7) -> jnp.ndarray:
+    """Mean structural similarity over [B, H, W, C] (or [B, H, W]) images.
+
+    Uniform ``window`` x ``window`` local statistics (the box-filter SSIM
+    variant); standard C1/C2 stabilizers at k1=0.01, k2=0.03.
+    """
+    if ref.ndim == 3:
+        ref, x = ref[..., None], x[..., None]
+    ref = ref.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    dr = _data_range(ref, data_range)
+    c1 = (0.01 * dr) ** 2
+    c2 = (0.03 * dr) ** 2
+
+    def box(img):
+        # depthwise box filter, VALID so every window is fully supported
+        import jax
+        c = img.shape[-1]
+        k = jnp.ones((window, window, 1, c), jnp.float32) / (window * window)
+        return jax.lax.conv_general_dilated(
+            img, k, (1, 1), "VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=c)
+
+    mu_r, mu_x = box(ref), box(x)
+    var_r = box(ref * ref) - mu_r * mu_r
+    var_x = box(x * x) - mu_x * mu_x
+    cov = box(ref * x) - mu_r * mu_x
+    num = (2 * mu_r * mu_x + c1) * (2 * cov + c2)
+    den = (mu_r ** 2 + mu_x ** 2 + c1) * (var_r + var_x + c2)
+    return jnp.mean(num / den)

@@ -1,0 +1,64 @@
+"""Float reference execution of imaging pipelines (the quality oracle).
+
+Runs the same layer IR as ``core.plan`` but in plain float32 — no CRC
+activation codes, no MR weight levels. The difference between this path and
+``plan.execute`` is the device's acquisition physics: the 4-bit CRC/MR
+quantization AND the CRC's non-negativity clamp (light intensity — every
+inter-stage requant is max(x, 0), which this oracle deliberately does not
+apply). For signed-output filters (sharpen/unsharp overshoot) the clamp
+dominates the PSNR gap reported by ``benchmarks.bench_imaging``; for
+non-negative outputs the gap is pure quantization. Differentiable
+end-to-end (the learned reconstruction head trains through it).
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.accelerator import (CASpec, ConvSpec, DenseSpec, FlattenSpec,
+                                    UpsampleSpec, _activation)
+from repro.core.compressive import compressive_acquire, upsample_reconstruct
+
+
+def apply_float(layers, params: Dict[str, Dict],
+                frames: jnp.ndarray) -> jnp.ndarray:
+    """frames [B, H, W, C] float -> pipeline output, full float32 math."""
+    x = frames.astype(jnp.float32)
+    for layer in layers:
+        if isinstance(layer, CASpec):
+            x = compressive_acquire(x, layer.pool, layer.rgb_to_gray)
+            if x.ndim == 3:
+                x = x[..., None]
+        elif isinstance(layer, ConvSpec):
+            p = params[layer.name]
+            groups = layer.c_in if layer.depthwise else 1
+            y = jax.lax.conv_general_dilated(
+                x, p["w"].astype(jnp.float32),
+                (layer.stride, layer.stride), layer.padding,
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                feature_group_count=groups)
+            if p.get("b") is not None:
+                y = y + p["b"]
+            y = _activation(y, layer.act)
+            if layer.pool is not None:
+                kind, size = layer.pool
+                b_, h_, w_, c_ = y.shape
+                yr = y.reshape(b_, h_ // size, size, w_ // size, size, c_)
+                y = yr.max(axis=(2, 4)) if kind == "max" else yr.mean(axis=(2, 4))
+            x = y
+        elif isinstance(layer, UpsampleSpec):
+            x = upsample_reconstruct(x, layer.factor, layer.method)
+        elif isinstance(layer, FlattenSpec):
+            x = x.reshape(x.shape[0], -1)
+        elif isinstance(layer, DenseSpec):
+            p = params[layer.name]
+            y = x @ p["w"]
+            if p.get("b") is not None:
+                y = y + p["b"]
+            x = _activation(y, layer.act)
+        else:
+            raise TypeError(f"unknown layer IR {layer!r}")
+    return x

@@ -111,26 +111,48 @@ def matmul_int(a_codes: jnp.ndarray, wq: jnp.ndarray) -> jnp.ndarray:
 
 
 def conv_int(codes: jnp.ndarray, wq: jnp.ndarray, stride: int,
-             pads) -> jnp.ndarray:
-    """Integer-exact conv accumulate: [B,H,W,Cin] codes x [k,k,Cin,Cout]
+             pads, groups: int = 1) -> jnp.ndarray:
+    """Integer-exact conv accumulate: [B,H,W,Cin] codes x [k,k,Cin/g,Cout]
     weight levels -> f32 [B,H',W',Cout], NO dequant (see matmul_int).
 
+    ``groups`` is the feature-group count (1 = dense conv; groups == Cin with
+    [k,k,1,Cin] weights = depthwise — the imaging pipelines' per-channel
+    fixed-function filters: each channel is an independent single-channel
+    kernel on the OC banks).
+
     pallas: im2col into the photonic MVM kernel (one OC weight mapping per
-    VMEM-resident tile). reference: ``lax.conv_general_dilated`` on the
+    VMEM-resident tile); grouped convs run one im2col matmul per group over
+    that channel slice. reference: ``lax.conv_general_dilated`` on the
     float-carried codes — the exact op the eager interpreter runs, so no
     patch matrix is ever materialized (at 224x224 frames the im2col patches
     would be ~100x the input).
     """
+    k, _, cg, c_out = wq.shape
+    if c_out % groups or codes.shape[-1] != cg * groups:
+        raise ValueError(
+            f"conv_int: groups={groups} must divide c_out={c_out} and "
+            f"match c_in={codes.shape[-1]} against weight slice {cg}")
     if get_backend() == "pallas":
         b = codes.shape[0]
-        k, _, c_in, c_out = wq.shape
-        patches, h_out, w_out = _im2col(codes, k, stride, pads)
-        acc = matmul_int(patches, wq.reshape(k * k * c_in, c_out))
-        return acc.reshape(b, h_out, w_out, c_out)
+        if groups == 1:
+            patches, h_out, w_out = _im2col(codes, k, stride, pads)
+            acc = matmul_int(patches, wq.reshape(k * k * cg, c_out))
+            return acc.reshape(b, h_out, w_out, c_out)
+        og = c_out // groups
+        outs = []
+        for g in range(groups):
+            patches, h_out, w_out = _im2col(
+                codes[..., g * cg:(g + 1) * cg], k, stride, pads)
+            acc = matmul_int(patches,
+                             wq[..., g * og:(g + 1) * og].reshape(
+                                 k * k * cg, og))
+            outs.append(acc.reshape(b, h_out, w_out, og))
+        return jnp.concatenate(outs, axis=-1)
     return jax.lax.conv_general_dilated(
         codes.astype(jnp.float32), wq.astype(jnp.float32),
         window_strides=(stride, stride), padding=tuple(pads),
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
 
 
 def _im2col(codes: jnp.ndarray, k: int, stride: int, pads):

@@ -1,14 +1,27 @@
 """Batched streaming vision driver over the compiled device pipeline.
 
+Two serving modes, same compiled runtime:
+
+    # CNN classification (the paper's Table-1 models)
     PYTHONPATH=src python -m repro.launch.serve_vision \
         --model lenet --scheme mx43 --batch 8 --batches 50
 
-Compiles the model once (``core.plan.compile_model``), then streams frame
-batches through the single jitted execute pass — the deployment shape of the
-paper's sensor->CA->OC pipeline: acquisition and compute fused, weights
-resident, zero per-frame scheduling work. Reports the *measured* host
-frames/s next to the power model's simulated device FPS and kFPS/W, so the
-software pipeline and the architecture model can be compared at a glance.
+    # fixed-function imaging (repro.imaging pipelines)
+    PYTHONPATH=src python -m repro.launch.serve_vision \
+        --pipeline edge_detect --batch 8 --batches 50
+
+Compiles once (``core.plan.compile_model``), then streams host frame batches
+through the single jitted execute pass with *double-buffered* feeding: batch
+i+1 is transferred and dispatched while batch i is still in flight, and the
+host only blocks on the oldest outstanding batch (``--depth`` controls the
+in-flight window; ``--depth 0`` forces the old synchronous feed for
+comparison). Reports measured steady-state frames/s next to the power
+model's simulated device FPS and kFPS/W — and, for imaging pipelines, the
+PSNR of the quantized device output against the float reference path.
+
+FC layers are scheduled at the served batch size (``fc_batch=--batch``) so
+weight-remap DAC settles amortize across the batch; the report stays
+per-frame (see ``core.plan.compile_model``).
 
 NB: the CRC calibration scale is per-tensor (batch included) to stay
 bit-identical with the reference interpreter, so logits depend mildly on
@@ -19,10 +32,13 @@ batch composition — evaluate accuracy at the batch size you serve at
 from __future__ import annotations
 
 import argparse
+import collections
 import time
+from typing import List
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import plan as plan_mod
 from repro.core.quant import W4A4, W3A4, W2A4, MX_43, MX_42
@@ -32,16 +48,40 @@ SCHEMES = {"w4a4": W4A4, "w3a4": W3A4, "w2a4": W2A4,
            "mx43": MX_43, "mx42": MX_42}
 
 
-def stream(plan: plan_mod.CompiledPlan, params, frames: jnp.ndarray,
-           n_batches: int) -> float:
-    """Feed ``frames`` through the plan ``n_batches`` times -> frames/s."""
-    plan_mod.execute(plan, params, frames).block_until_ready()   # warmup/jit
+def stream(plan: plan_mod.CompiledPlan, params,
+           host_batches: List[np.ndarray], n_batches: int,
+           depth: int = 2) -> float:
+    """Feed ``n_batches`` host batches through the plan -> frames/s.
+
+    Double-buffered: each iteration transfers + dispatches the next batch,
+    then blocks only on the result ``depth`` batches back, so host->device
+    transfer of batch i+1 overlaps compute of batch i (the ROADMAP's async
+    frame-feeding item). ``depth=0`` degenerates to the synchronous
+    dispatch-then-block loop. Timing starts after a warmup batch, so the
+    rate is steady-state (no jit trace included).
+    """
+    batch = host_batches[0].shape[0]
+    # warmup: trace + compile, and fill device caches
+    plan_mod.execute(plan, params,
+                     jnp.asarray(host_batches[0])).block_until_ready()
+    inflight: collections.deque = collections.deque()
     t0 = time.perf_counter()
-    for _ in range(n_batches):
-        logits = plan_mod.execute(plan, params, frames)
-    logits.block_until_ready()
+    for i in range(n_batches):
+        frames = jax.device_put(host_batches[i % len(host_batches)])
+        out = plan_mod.execute(plan, params, frames)
+        inflight.append(out)
+        if len(inflight) > depth:
+            inflight.popleft().block_until_ready()
+    while inflight:
+        inflight.popleft().block_until_ready()
     dt = time.perf_counter() - t0
-    return n_batches * frames.shape[0] / dt
+    return n_batches * batch / dt
+
+
+def _imaging_frames(batch: int, size: int, seed: int) -> np.ndarray:
+    from repro.data.synthetic import synthetic_textures
+    imgs, _ = synthetic_textures(batch, hw=size, seed=seed)
+    return imgs
 
 
 def main(argv=None):
@@ -50,33 +90,64 @@ def main(argv=None):
     # is schedule-only; see models.vision.MODEL_INPUT_HWC)
     ap.add_argument("--model", default="lenet",
                     choices=sorted(MODEL_INPUT_HWC))
+    ap.add_argument("--pipeline", default=None,
+                    help="serve a repro.imaging pipeline instead of a CNN")
     ap.add_argument("--scheme", default="mx43", choices=sorted(SCHEMES))
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--batches", type=int, default=50)
+    ap.add_argument("--size", type=int, default=64,
+                    help="imaging frame height/width (pipeline mode)")
+    ap.add_argument("--depth", type=int, default=2,
+                    help="in-flight batches (0 = synchronous feeding)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.batch < 1 or args.batches < 1:
         ap.error("--batch and --batches must be >= 1")
+    if args.depth < 0:
+        ap.error("--depth must be >= 0")
 
     scheme = SCHEMES[args.scheme]
-    h, w, c = MODEL_INPUT_HWC[args.model]
-    layers = VISION_MODELS[args.model]()
-    params = init_vision(jax.random.PRNGKey(args.seed), layers)
-    frames = jax.random.uniform(jax.random.PRNGKey(args.seed + 1),
-                                (args.batch, h, w, c))
+
+    if args.pipeline is not None:
+        from repro.imaging import PIPELINES, apply_float, psnr
+        if args.pipeline not in PIPELINES:
+            ap.error(f"unknown pipeline {args.pipeline!r}; "
+                     f"choose from {sorted(PIPELINES)}")
+        pipe = PIPELINES[args.pipeline]
+        h = w = args.size
+        c = 3
+        layers, params = pipe.build(h, w, c)
+        host_batches = [_imaging_frames(args.batch, args.size, args.seed + i)
+                        for i in range(2)]
+        name = f"pipeline={pipe.name}"
+    else:
+        h, w, c = MODEL_INPUT_HWC[args.model]
+        layers = VISION_MODELS[args.model]()
+        params = init_vision(jax.random.PRNGKey(args.seed), layers)
+        rng = np.random.default_rng(args.seed + 1)
+        host_batches = [rng.random((args.batch, h, w, c), np.float32)
+                        for _ in range(2)]
+        name = f"model={args.model}"
 
     t0 = time.perf_counter()
-    plan = plan_mod.compile_model(tuple(layers), frames.shape, scheme)
+    plan = plan_mod.compile_model(tuple(layers), (args.batch, h, w, c),
+                                  scheme, fc_batch=args.batch)
     t_compile = time.perf_counter() - t0
-    fps = stream(plan, params, frames, args.batches)
+    fps = stream(plan, params, host_batches, args.batches, depth=args.depth)
 
     r = plan.report
-    print(f"[serve_vision] {args.model} {scheme.name} batch={args.batch} "
-          f"compile={t_compile * 1e3:.1f}ms")
+    print(f"[serve_vision] {name} {scheme.name} batch={args.batch} "
+          f"depth={args.depth} compile={t_compile * 1e3:.1f}ms")
     print(f"[serve_vision] measured {fps:,.0f} frames/s on "
           f"{jax.default_backend()} | device model: "
           f"{r.fps:,.0f} FPS, {r.avg_power_w:.2f} W, "
           f"{r.kfps_per_w:.1f} kFPS/W")
+    if args.pipeline is not None:
+        frames = jnp.asarray(host_batches[0])
+        out = plan_mod.execute(plan, params, frames)
+        ref = apply_float(layers, params, frames)
+        print(f"[serve_vision] quantized-vs-float PSNR "
+              f"{float(psnr(ref, out)):.2f} dB ({pipe.description})")
     return fps
 
 

@@ -55,6 +55,42 @@ def test_strided_conv_acquire():
     assert float(out[0, 1, 2]) == pytest.approx(manual, rel=1e-5)
 
 
+@pytest.mark.parametrize("seed,hw,k,c,stride", [
+    (0, 10, 3, 3, 1), (1, 12, 3, 1, 2), (2, 16, 5, 3, 3),
+    (3, 9, 2, 4, 2), (4, 17, 7, 2, 4),
+])
+def test_strided_conv_acquire_matches_lax(seed, hw, k, c, stride):
+    """Property: the CA's configurable strided acquisition == a VALID
+    strided conv (``lax.conv_general_dilated``) collapsing all channels."""
+    img = jax.random.uniform(jax.random.PRNGKey(seed), (2, hw, hw, c))
+    w = jax.random.normal(jax.random.PRNGKey(seed + 100), (k, k, c))
+    out = ca.strided_conv_acquire(img, w, stride=stride)
+    ref = jax.lax.conv_general_dilated(
+        img, w[..., None], (stride, stride), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))[..., 0]
+    assert out.shape == ref.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=1e-5)
+
+
+def test_upsample_reconstruct_shapes_and_modes():
+    img = jax.random.uniform(jax.random.PRNGKey(5), (2, 4, 4, 3))
+    up = ca.upsample_reconstruct(img, 2, "bilinear")
+    assert up.shape == (2, 8, 8, 3)
+    near = ca.upsample_reconstruct(img, 3, "nearest")
+    assert near.shape == (2, 12, 12, 3)
+    # nearest is a pure copy
+    np.testing.assert_allclose(np.asarray(near[:, ::3, ::3]),
+                               np.asarray(img), rtol=1e-6)
+    # bilinear preserves constants exactly
+    const = jnp.full((1, 4, 4, 1), 0.7)
+    np.testing.assert_allclose(
+        np.asarray(ca.upsample_reconstruct(const, 2, "bilinear")), 0.7,
+        rtol=1e-6)
+    with pytest.raises(ValueError, match="method"):
+        ca.upsample_reconstruct(img, 2, "bicubic")
+
+
 def test_sequence_ca():
     x = jax.random.normal(jax.random.PRNGKey(5), (2, 12, 8))
     out = ca.sequence_ca(x, 3)

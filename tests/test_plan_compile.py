@@ -121,6 +121,41 @@ def test_pallas_backend_bit_identical(lenet):
                                   np.asarray(logits_pl))
 
 
+def test_fc_batch_amortizes_only_remaps(lenet):
+    """Batched schedule_fc: scheduling FC layers at the served batch size
+    must change the per-frame report ONLY in the amortized terms — the
+    per-cycle power breakdown of every layer is untouched, non-FC layers are
+    completely untouched, and FC remap (DAC settle) cycles shrink ~1/N."""
+    layers, _, img = lenet
+    p1 = plan_mod.compile_model(tuple(layers), img.shape, W4A4, fc_batch=1)
+    p8 = plan_mod.compile_model(tuple(layers), img.shape, W4A4, fc_batch=8)
+    assert p8 is not p1                      # fc_batch is part of the key
+    for s, l1, l8 in zip(p1.schedules, p1.report.layers, p8.report.layers):
+        assert l1.breakdown_w == l8.breakdown_w       # power rates invariant
+        if s.kind == "fc":
+            # per-frame streaming cycles are batch-invariant (rounds * N
+            # windows / N frames); only the remap (DAC settle) term amortizes
+            assert l8.cycles == l1.cycles
+            assert l8.remap_cycles == -(-l1.remap_cycles // 8)
+            assert l8.remap_cycles < l1.remap_cycles
+        else:
+            assert (l1.cycles, l1.remap_cycles) == (l8.cycles,
+                                                    l8.remap_cycles)
+    assert p8.report.fps > p1.report.fps
+    assert p8.report.exec_time_s < p1.report.exec_time_s
+    with pytest.raises(ValueError, match="fc_batch"):
+        plan_mod.compile_model(tuple(layers), img.shape, W4A4, fc_batch=0)
+
+
+def test_fc_batch_default_matches_eager_report(lenet):
+    """fc_batch=1 (the default) keeps the seed's bit-identical report."""
+    layers, params, img = lenet
+    dev = LightatorDevice()
+    _, report_e = dev.run_eager(layers, params, img, W4A4)
+    plan = plan_mod.compile_model(tuple(layers), img.shape, W4A4)
+    assert dataclasses.asdict(report_e) == dataclasses.asdict(plan.report)
+
+
 def test_execute_rejects_wrong_frame_shape(lenet):
     layers, params, img = lenet
     dev = LightatorDevice()
