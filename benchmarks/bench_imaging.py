@@ -20,6 +20,7 @@ from repro.core.quant import W4A4, MX_43
 from repro.data.synthetic import synthetic_textures
 from repro.imaging import PIPELINES, apply_float, gray_target, psnr, ssim
 
+SCHEMA_VERSION = 1
 SCHEMES = {"w4a4": W4A4, "mx43": MX_43}
 HW = 64
 BATCH = 8
@@ -77,6 +78,7 @@ def run(csv: bool = True, pipelines=None):
                          "schemes": per_scheme}
 
     payload = {
+        "schema_version": SCHEMA_VERSION,
         "input": f"synthetic_textures {BATCH}x{HW}x{HW}x3",
         "backend": jax.default_backend(),
         "pipelines": results,

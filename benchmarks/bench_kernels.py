@@ -1,25 +1,47 @@
-"""Kernel micro-benchmarks: photonic_mvm / ca_pool / conv_bank vs oracles.
+"""Kernel micro-benchmarks + the conv strategy sweep.
 
-Absolute times on this CPU container are interpret-mode (not TPU) — the
-meaningful outputs are correctness deltas and the MAC counts / arithmetic
-intensities recorded for the §Perf analysis.
+Two parts:
+
+  * micro — photonic_mvm / ca_pool / conv_bank vs their oracles (correctness
+    deltas + MAC counts; absolute CPU times are interpret-mode, not TPU).
+  * conv_strategy_sweep — quantized conv at several frame sizes through all
+    three execution paths: resident Pallas kernel (whole image in VMEM),
+    strip-mined Pallas kernel (halo DMA per strip), and the XLA reference
+    oracle. Records per-path microseconds, the strip geometry the
+    VMEM-budget heuristic picks, and the max abs error vs the oracle. The
+    raw integer accumulates are bit-identical across all three paths (see
+    tests/test_kernels_conv_bank.py); the errors here are the dequant
+    multiply's float epsilon, identical for resident and strip. The
+    depthwise entry compares the strip kernel against the grouped
+    per-channel-im2col path it replaces (raw accumulate: err exactly 0).
+
+Writes ``BENCH_kernels.json`` (see docs/benchmarks.md for the schema) next
+to this file.
 """
 
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.quant import W4A4
+from repro.kernels import dispatch
 from repro.kernels.ca_pool.ops import ca_pool
 from repro.kernels.ca_pool.ref import ca_pool_ref
 from repro.kernels.conv_bank.ops import conv_bank
 from repro.kernels.conv_bank.ref import conv_bank_quant_ref
 from repro.kernels.photonic_mvm.ops import photonic_mvm
 from repro.kernels.photonic_mvm.ref import photonic_mvm_ref
+
+SCHEMA_VERSION = 1
+SWEEP_SIZES = (64, 128, 256)
+SWEEP_CIN, SWEEP_COUT, SWEEP_K = 8, 16, 3
+OUT_PATH = Path(__file__).resolve().parent / "BENCH_kernels.json"
 
 
 def _time(f, *args, reps=3):
@@ -30,8 +52,7 @@ def _time(f, *args, reps=3):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def run(csv=True):
-    out = []
+def _micro(out, results):
     key = jax.random.PRNGKey(0)
     k1, k2 = jax.random.split(key)
 
@@ -43,6 +64,8 @@ def run(csv=True):
     err = float(jnp.max(jnp.abs(photonic_mvm(x, w, W4A4)
                                 - photonic_mvm_ref(x, w, W4A4))))
     macs = 256 * 1024 * 512
+    results["photonic_mvm"] = {"kernel_us": us_k, "ref_us": us_r,
+                               "macs": macs, "max_abs_err": err}
     out.append(f"bench_kernels.photonic_mvm,{us_k:.1f},"
                f"ref_us={us_r:.1f};macs={macs};err={err:.1e}")
 
@@ -51,10 +74,12 @@ def run(csv=True):
     us_k = _time(lambda i: ca_pool(i, 2), img)
     us_r = _time(lambda i: ca_pool_ref(i, 2), img)
     err = float(jnp.max(jnp.abs(ca_pool(img, 2) - ca_pool_ref(img, 2))))
+    results["ca_pool"] = {"kernel_us": us_k, "ref_us": us_r,
+                          "taps": 2 * 2 * 3, "max_abs_err": err}
     out.append(f"bench_kernels.ca_pool,{us_k:.1f},"
                f"ref_us={us_r:.1f};taps={2*2*3};err={err:.1e}")
 
-    # conv_bank 3x3 (the OC's native kernel size)
+    # conv_bank 3x3 (the OC's native kernel size), resident path
     xc = jax.random.uniform(k1, (4, 32, 32, 64))
     wc = jax.random.normal(k2, (3, 3, 64, 64)) * 0.1
     us_k = _time(lambda a, b: conv_bank(a, b, W4A4), xc, wc)
@@ -62,10 +87,84 @@ def run(csv=True):
     err = float(jnp.max(jnp.abs(conv_bank(xc, wc, W4A4)
                                 - conv_bank_quant_ref(xc, wc, W4A4))))
     macs = 4 * 32 * 32 * 64 * 9 * 64
+    results["conv_bank3x3"] = {"kernel_us": us_k, "ref_us": us_r,
+                               "macs": macs, "max_abs_err": err}
     out.append(f"bench_kernels.conv_bank3x3,{us_k:.1f},"
                f"ref_us={us_r:.1f};macs={macs};err={err:.1e}")
+
+
+def _conv_sweep(out, results, sizes):
+    """Quantized conv, resident vs strip-mined vs reference, per frame size."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    w = jax.random.normal(k2, (SWEEP_K, SWEEP_K, SWEEP_CIN, SWEEP_COUT)) * 0.1
+    for hw in sizes:
+        x = jax.random.uniform(k1, (1, hw, hw, SWEEP_CIN))
+        want = conv_bank_quant_ref(x, w, W4A4)
+        entry = {}
+        for strat in ("resident", "strip"):
+            us = _time(lambda a, b, s=strat: conv_bank(a, b, W4A4,
+                                                       strategy=s), x, w)
+            got = conv_bank(x, w, W4A4, strategy=strat)
+            entry[f"{strat}_us"] = us
+            entry[f"{strat}_max_abs_err"] = float(
+                jnp.max(jnp.abs(got - want)))
+        entry["reference_us"] = _time(
+            lambda a, b: conv_bank_quant_ref(a, b, W4A4), x, w)
+        geo = dispatch.select_conv_strategy(hw, hw, SWEEP_CIN, SWEEP_COUT,
+                                            SWEEP_K, mode="strip")
+        auto = dispatch.select_conv_strategy(hw, hw, SWEEP_CIN, SWEEP_COUT,
+                                             SWEEP_K)
+        entry.update(strip_rows=geo.strip_rows, n_strips=geo.n_strips,
+                     auto_kind=auto.kind,
+                     macs=hw * hw * SWEEP_K * SWEEP_K * SWEEP_CIN
+                     * SWEEP_COUT)
+        results[str(hw)] = entry
+        out.append(
+            f"bench_kernels.conv_sweep.{hw},{entry['strip_us']:.1f},"
+            f"resident_us={entry['resident_us']:.1f};"
+            f"reference_us={entry['reference_us']:.1f};"
+            f"auto={auto.kind};strips={geo.n_strips}x{geo.strip_rows}rows;"
+            f"err={entry['strip_max_abs_err']:.1e}")
+
+    # depthwise: the strip kernel vs the grouped per-channel im2col it replaces
+    hw, c, kk = sizes[-1], 3, 5
+    codes = jnp.round(jax.random.uniform(k1, (1, hw, hw, c)) * 15)
+    wq = jnp.round(jax.random.uniform(k2, (kk, kk, 1, c)) * 14) - 7
+    pads = ((kk // 2, kk // 2), (kk // 2, kk // 2))
+    strip = dispatch.select_conv_strategy(hw, hw, c, c, kk, groups=c,
+                                          mode="strip")
+    with dispatch.use_backend("pallas"):
+        us_s = _time(lambda: dispatch.conv_int(codes, wq, 1, pads, groups=c,
+                                               strategy=strip))
+        us_g = _time(lambda: dispatch.conv_int(
+            codes, wq, 1, pads, groups=c,
+            strategy=dispatch.ConvStrategy("resident")))
+        err = float(jnp.max(jnp.abs(
+            dispatch.conv_int(codes, wq, 1, pads, groups=c, strategy=strip)
+            - dispatch.conv_int(codes, wq, 1, pads, groups=c,
+                                strategy=dispatch.ConvStrategy("resident")))))
+    results[f"depthwise_{hw}"] = {"strip_us": us_s, "grouped_im2col_us": us_g,
+                                  "max_abs_err": err}
+    out.append(f"bench_kernels.depthwise_{hw},{us_s:.1f},"
+               f"grouped_im2col_us={us_g:.1f};err={err:.1e}")
+
+
+def run(csv=True, sizes=SWEEP_SIZES):
+    out = []
+    micro, sweep = {}, {}
+    _micro(out, micro)
+    _conv_sweep(out, sweep, sizes)
+    payload = {
+        "schema_version": SCHEMA_VERSION,
+        "backend": jax.default_backend(),
+        "interpret": dispatch.default_interpret(),
+        "micro": micro,
+        "conv_strategy_sweep": sweep,
+    }
+    OUT_PATH.write_text(json.dumps(payload, indent=2) + "\n")
     if csv:
         print("\n".join(out))
+        print(f"bench_kernels.json,0.0,path={OUT_PATH}")
     return out
 
 

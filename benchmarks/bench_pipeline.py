@@ -23,6 +23,7 @@ from repro.core.accelerator import LightatorDevice
 from repro.core.quant import W4A4
 from repro.models.vision import lenet_ir, init_vision
 
+SCHEMA_VERSION = 1
 BATCHES = (1, 8, 32)
 OUT_PATH = Path(__file__).resolve().parent / "BENCH_pipeline.json"
 
@@ -79,6 +80,7 @@ def run(csv: bool = True, batches=BATCHES):
             f"speedup={speedup:.2f}x;identical={identical}")
 
     payload = {
+        "schema_version": SCHEMA_VERSION,
         "model": "lenet",
         "scheme": "w4a4",
         "backend": jax.default_backend(),

@@ -22,7 +22,8 @@ def main() -> None:
     bench_fig10.run()
     quick = "--quick" in sys.argv
     bench_accuracy.run(steps=30 if quick else 40)
-    bench_kernels.run()
+    bench_kernels.run(sizes=(64, 128) if quick
+                      else bench_kernels.SWEEP_SIZES)
     bench_lm_photonic.run()
     bench_pipeline.run(batches=(1, 8) if quick else bench_pipeline.BATCHES)
     bench_imaging.run(pipelines=("edge_detect", "compress_recon")

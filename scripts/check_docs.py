@@ -1,0 +1,57 @@
+"""Docs hygiene gate (run by scripts/ci.sh).
+
+Checks:
+  1. every ``docs/*.md`` file is referenced from README.md — docs that
+     nothing links to rot silently;
+  2. no dead relative links: every ``[text](relative/path)`` in README.md
+     and docs/*.md must resolve to an existing file (anchors stripped;
+     http(s) links ignored).
+
+Exit code 0 on success; prints every violation otherwise.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def relative_links(md: Path):
+    for target in LINK_RE.findall(md.read_text()):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        yield target.split("#", 1)[0]
+
+
+def main() -> int:
+    errors = []
+    readme = ROOT / "README.md"
+    readme_text = readme.read_text()
+
+    docs = sorted((ROOT / "docs").glob("*.md"))
+    if not docs:
+        errors.append("docs/: no markdown files found")
+    for doc in docs:
+        rel = doc.relative_to(ROOT).as_posix()
+        if rel not in readme_text:
+            errors.append(f"README.md does not reference {rel}")
+
+    for md in [readme, *docs]:
+        for target in relative_links(md):
+            if not (md.parent / target).exists():
+                errors.append(
+                    f"{md.relative_to(ROOT)}: dead link -> {target}")
+
+    if errors:
+        print("\n".join(f"check_docs: {e}" for e in errors))
+        return 1
+    print(f"check_docs: OK ({len(docs)} docs, all referenced, no dead links)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,6 +12,12 @@ else
     python -m pytest -x -q
 fi
 
+# docs gate: every docs/*.md referenced from README, no dead relative links
+python scripts/check_docs.py
+
+# conv kernels again with the strip-mined strategy forced (large-frame path)
+REPRO_CONV_STRATEGY=strip python -m pytest tests/test_kernels_conv_bank.py -q
+
 # end-to-end serving smoke (2 batches each): imaging pipeline + CNN
 python -m repro.launch.serve_vision --pipeline edge_detect --batch 2 \
     --batches 2 --size 32

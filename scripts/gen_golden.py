@@ -1,0 +1,60 @@
+"""Regenerate the golden imaging arrays under tests/golden/.
+
+One ``<pipeline>.npz`` per ``imaging.PIPELINES`` entry, holding the float
+reference output and the quantized device output (W4A4, reference backend)
+for a fixed deterministic input batch. ``tests/test_imaging_golden.py``
+recomputes both and asserts a close match — any numerics change to the
+filters, the plan runtime, or the quantization path trips it.
+
+Run (only) when an intentional numerics change invalidates the arrays:
+
+    PYTHONPATH=src python scripts/gen_golden.py
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import plan as plan_mod
+from repro.core.quant import W4A4
+from repro.data.synthetic import synthetic_textures
+from repro.imaging import PIPELINES, apply_float
+from repro.kernels import dispatch
+
+GOLDEN_DIR = Path(__file__).resolve().parent.parent / "tests" / "golden"
+BATCH, HW, SEED = 2, 32, 0
+
+
+def golden_frames() -> jnp.ndarray:
+    imgs, _ = synthetic_textures(BATCH, hw=HW, seed=SEED)
+    return jnp.asarray(imgs)
+
+
+def main() -> None:
+    GOLDEN_DIR.mkdir(parents=True, exist_ok=True)
+    frames = golden_frames()
+    # pin the backend: goldens describe the reference numerics (the pallas
+    # path is regression-tested bit-identical to it elsewhere)
+    with dispatch.use_backend("reference"):
+        for name, pipe in sorted(PIPELINES.items()):
+            layers, params = pipe.build(HW, HW, 3)
+            float_out = np.asarray(apply_float(layers, params, frames),
+                                   np.float32)
+            plan = plan_mod.compile_model(layers, frames.shape, W4A4)
+            quant_out = np.asarray(plan_mod.execute(plan, params, frames),
+                                   np.float32)
+            # the input frames ride along so the goldens are self-contained
+            # (the test needs no access to the generator's input recipe)
+            path = GOLDEN_DIR / f"{name}.npz"
+            np.savez_compressed(path, frames=np.asarray(frames, np.float32),
+                                float_out=float_out, quant_out=quant_out,
+                                batch=BATCH, hw=HW, seed=SEED, scheme="w4a4")
+            print(f"wrote {path} float{float_out.shape} "
+                  f"quant{quant_out.shape}")
+
+
+if __name__ == "__main__":
+    main()

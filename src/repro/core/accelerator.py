@@ -40,6 +40,7 @@ from repro.core import power_model as pmod
 from repro.core.compressive import compressive_acquire
 from repro.core.quant import (WASpec, MixedPrecisionScheme, ACT_BITS,
                               quantize_weight, resolve_layer_specs)
+from repro.kernels import dispatch
 
 
 # ---------------------------------------------------------------------------
@@ -213,6 +214,7 @@ class LightatorDevice:
 
         schedules: List[ocore.OCSchedule] = []
         spec_list: List[WASpec] = []
+        conv_strategy: Dict[str, Dict] = {}
 
         # step 1: ADC-less imager — CRC on raw pixels
         codes, act_scale = _crc_requant(image)
@@ -240,6 +242,13 @@ class LightatorDevice:
                 wa = next(spec_iter)
                 p = params[layer.name]
                 y = self._conv(x, act_scale, p["w"], p.get("b"), layer, wa)
+                # record the conv strategy the kernel path would choose for
+                # this layer's (pre-pool) output dims — same resolution as
+                # the compile pass, so reports stay field-for-field equal
+                conv_strategy[layer.name] = dataclasses.asdict(
+                    dispatch.select_conv_strategy(
+                        y.shape[1], y.shape[2], layer.c_in, layer.c_out,
+                        layer.kernel, layer.stride))
                 y = _activation(y, layer.act)
                 if layer.pool is not None:
                     kind, size = layer.pool
@@ -284,4 +293,5 @@ class LightatorDevice:
         lps = [self.power.layer_power(pmod.LayerSchedule(s, sp))
                for s, sp in zip(schedules, spec_list)]
         report = self.power.finalize_report(lps, schedules, scheme)
+        report.conv_strategy = conv_strategy
         return logits, report

@@ -129,6 +129,10 @@ class ConvStep:
     pool: Optional[Tuple[str, int]]
     pads: Tuple[Tuple[int, int], Tuple[int, int]]   # ((lo,hi) per spatial dim)
     groups: int = 1                 # feature groups (c_in for depthwise)
+    # conv execution strategy (resident vs strip-mined + strip geometry),
+    # resolved once at compile time from the layer's output dims and the
+    # REPRO_CONV_STRATEGY / VMEM-budget environment (kernels.dispatch)
+    strategy: Optional[dispatch.ConvStrategy] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -254,7 +258,7 @@ def compile_model(layers: Sequence, input_shape: Tuple[int, ...],
         raise ValueError(f"input_shape {input_shape} must be [B,H,W,C] or "
                          f"[H,W,C]")
     key = (layers, frame_shape, scheme, oc, circuit, profile,
-           weight_sram_kb, act_sram_kb, fc_batch)
+           weight_sram_kb, act_sram_kb, fc_batch, dispatch.conv_env_key())
     cached = _PLAN_CACHE.get(key)
     if cached is not None:
         _CACHE_STATS["hits"] += 1
@@ -298,6 +302,11 @@ def compile_model(layers: Sequence, input_shape: Tuple[int, ...],
             pads = tuple((int(lo), int(hi)) for lo, hi in pads)
             h_out = conv_out_hw(h, layer.kernel, layer.stride, layer.padding)
             w_out = conv_out_hw(w, layer.kernel, layer.stride, layer.padding)
+            # resident vs strip-mined, from the conv's own (pre-pool) output
+            # dims — part of the plan AND the power report (serving surfaces)
+            strat = dispatch.select_conv_strategy(
+                h_out, w_out, layer.c_in, layer.c_out, layer.kernel,
+                layer.stride, groups=layer.c_in if layer.depthwise else 1)
             h, w, c = h_out, w_out, layer.c_out
             if layer.pool is not None:
                 kind, size = layer.pool
@@ -325,7 +334,8 @@ def compile_model(layers: Sequence, input_shape: Tuple[int, ...],
             spec_list.append(wa)
             steps.append(ConvStep(layer.name, wa, layer.kernel, layer.stride,
                                   layer.act, layer.pool, pads,
-                                  groups=layer.c_in if layer.depthwise else 1))
+                                  groups=layer.c_in if layer.depthwise else 1,
+                                  strategy=strat))
         elif isinstance(layer, UpsampleSpec):
             if layer.method not in ("bilinear", "nearest"):
                 raise ValueError(f"unknown upsample method {layer.method!r}")
@@ -367,6 +377,9 @@ def compile_model(layers: Sequence, input_shape: Tuple[int, ...],
             lp.remap_cycles = -(-lp.remap_cycles // fc_batch)
         lps.append(lp)
     report = power.finalize_report(lps, schedules, scheme)
+    report.conv_strategy = {
+        s.name: dataclasses.asdict(s.strategy) for s in steps
+        if isinstance(s, ConvStep)}
 
     # quantization divisors, fed to the executor as traced scalars (see the
     # bit-identity note at the top of this module)
@@ -416,7 +429,8 @@ def _execute_steps(steps: Tuple[PlanStep, ...], params: Dict[str, Dict],
             wq, ws = _quantize_weight_traced(p["w"], step.wa,
                                              consts["w_qmax"][step.name])
             acc = dispatch.conv_int(x, wq, step.stride, step.pads,
-                                    groups=step.groups)
+                                    groups=step.groups,
+                                    strategy=step.strategy)
             out = acc * (act_scale * ws.reshape(1, 1, 1, -1))
             if p.get("b") is not None:
                 out = _nofma(out) + p["b"]

@@ -125,6 +125,11 @@ class ModelReport:
     exec_time_s: float
     fps: float
     kfps_per_w: float
+    # conv execution strategy per conv layer (resident vs strip-mined +
+    # strip geometry), recorded by the compile pass (core.plan) and by the
+    # eager interpreter so reports stay comparable field-for-field; empty
+    # for schedule-only reports (PowerModel.model_report)
+    conv_strategy: Dict[str, Dict] = dataclasses.field(default_factory=dict)
 
     def component_totals(self) -> Dict[str, float]:
         """Time-weighted component powers across the model (Fig. 9 pie)."""

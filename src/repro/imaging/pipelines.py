@@ -156,9 +156,19 @@ def fit_recon_head(layers, params, frames: jnp.ndarray, steps: int = 150,
 
     Optimizes MSE against the grayscale original through the *float*
     reference path (differentiable end-to-end: CA -> bilinear -> head) with
-    plain SGD + momentum — no optimizer deps. Returns a new params dict;
-    the frozen CA/upsample stages have no parameters and the head stays
-    small (4 x 3x3 + 4 x 3x3 taps), so this converges in seconds on CPU.
+    plain SGD + momentum — no optimizer deps.
+
+    Args:
+        layers: the ``compress_recon_deconv`` layer IR (must contain convs
+            named ``rec1``/``rec2``).
+        params: the pipeline params; only the head entries are updated.
+        frames: ``[B, H, W, C]`` training frames in [0, 1].
+        steps / lr / momentum: SGD schedule.
+
+    Returns:
+        A new params dict with the fitted head (inputs are not mutated).
+        The frozen CA/upsample stages have no parameters and the head stays
+        small (4 x 3x3 + 4 x 3x3 taps), so this converges in seconds on CPU.
     """
     target = gray_target(frames)
     head = {k: params[k] for k in ("rec1", "rec2")}
@@ -180,6 +190,12 @@ def fit_recon_head(layers, params, frames: jnp.ndarray, steps: int = 150,
 
 # -- registry ---------------------------------------------------------------
 
+#: The pipeline registry — every fixed-function imaging program the device
+#: serves, keyed by name. Each value is an :class:`ImagingPipeline`; call
+#: ``PIPELINES[name].build(h, w, c)`` for the (layer IR, params) pair, then
+#: compile/execute it through ``core.plan`` like any model. The full table
+#: (filter math, measured PSNR per scheme, serving walkthrough) lives in
+#: docs/imaging.md.
 PIPELINES: Dict[str, ImagingPipeline] = {
     p.name: p for p in [
         ImagingPipeline(

@@ -25,7 +25,21 @@ from repro.core.compressive import compressive_acquire, upsample_reconstruct
 
 def apply_float(layers, params: Dict[str, Dict],
                 frames: jnp.ndarray) -> jnp.ndarray:
-    """frames [B, H, W, C] float -> pipeline output, full float32 math."""
+    """Run an imaging/vision layer-IR program in full float32 math.
+
+    The quality oracle for ``core.plan.execute``: same IR, no quantization
+    and no CRC clamps (see module docstring for exactly what differs).
+
+    Args:
+        layers: the layer IR sequence (e.g. from ``PIPELINES[n].build``).
+        params: per-layer weight pytrees keyed by layer name (fixed filter
+            weights for the imaging pipelines).
+        frames: ``[B, H, W, C]`` float frames in [0, 1].
+
+    Returns:
+        The pipeline output — ``[B, H', W', C']`` for spatial programs,
+        ``[B, n]`` after a dense head. Differentiable end-to-end.
+    """
     x = frames.astype(jnp.float32)
     for layer in layers:
         if isinstance(layer, CASpec):

@@ -1,9 +1,11 @@
 # Pallas TPU kernels for the Lightator compute hot-spots:
 #   photonic_mvm — the Optical Core's quantized MVM (arm/bank -> MXU tiles)
 #   ca_pool      — Compressive Acquisitor (fused RGB->gray + mean pool)
-#   conv_bank    — Fig. 6 conv mapping (tap-position dots = arms)
+#   conv_bank    — Fig. 6 conv mapping (tap-position dots = arms); resident
+#                  (kernel.py) + strip-mined halo-DMA (strip_kernel.py) paths
 # Each package: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper),
 # ref.py (pure-jnp oracle). Validated on CPU with interpret=True.
 # dispatch.py picks the backend (pallas on TPU, reference elsewhere; env
-# overrides REPRO_KERNEL_BACKEND / REPRO_FORCE_INTERPRET) and is the single
-# source of the Pallas interpret flag (default_interpret()).
+# overrides REPRO_KERNEL_BACKEND / REPRO_FORCE_INTERPRET), the conv strategy
+# (resident vs strip; REPRO_CONV_STRATEGY + VMEM-budget heuristic) and is the
+# single source of the Pallas interpret flag (default_interpret()).

@@ -1,1 +1,5 @@
 from repro.kernels.conv_bank.ops import conv_bank
+from repro.kernels.conv_bank.strip_kernel import (conv_strip_kernel,
+                                                 conv_strip_depthwise_kernel)
+
+__all__ = ["conv_bank", "conv_strip_kernel", "conv_strip_depthwise_kernel"]

@@ -1,4 +1,18 @@
-"""Public wrapper for the bank-mapped convolution kernel."""
+"""Public wrapper for the bank-mapped convolution kernels.
+
+``conv_bank`` runs the OC conv mapping end to end (quantize -> pad ->
+kernel -> dequant) and picks between the two Pallas implementations:
+
+  resident — ``kernel.conv_bank_kernel``: whole padded image as one VMEM
+             block (the paper's <=32x32 evaluation frames);
+  strip    — ``strip_kernel.conv_strip_kernel``: output rows tiled into
+             strips, each input strip + halo DMA'd into VMEM (large frames).
+
+``strategy`` resolves like ``kernels.dispatch``: explicit arg, then the
+``REPRO_CONV_STRATEGY`` env var, then the VMEM-budget heuristic. Both
+strategies accumulate identical exact integers, so they are bit-identical
+on the quantized path.
+"""
 
 from __future__ import annotations
 
@@ -8,31 +22,48 @@ import jax.numpy as jnp
 
 from repro.core.quant import WASpec, quantize_weight
 from repro.kernels.conv_bank import kernel as K
-from repro.kernels.dispatch import default_interpret
+from repro.kernels.conv_bank import strip_kernel as SK
+from repro.kernels.dispatch import (default_interpret, select_conv_strategy)
 
 
 def conv_bank(x: jnp.ndarray, w: jnp.ndarray,
               spec: Optional[WASpec] = None,
               act_scale: float = 1.0 / 15.0,
-              padding: str = "SAME", bn: int = 64) -> jnp.ndarray:
+              padding: str = "SAME", bn: int = 64,
+              strategy: Optional[str] = None) -> jnp.ndarray:
     """kxk conv through the OC mapping. x [B,H,W,Cin]; w [k,k,Cin,Cout].
 
     With ``spec`` the integer photonic path runs (uint4 codes x int-w
     weights); without it, a float conv with the same tap-dot structure.
+    ``strategy`` ("resident" | "strip" | "auto" | None=auto) selects the
+    resident or strip-mined kernel (see module docstring).
     """
     kk = w.shape[0]
     pad = kk // 2 if padding == "SAME" else 0
+    h_out = x.shape[1] + 2 * pad - kk + 1
+    w_out = x.shape[2] + 2 * pad - kk + 1
+    strat = select_conv_strategy(h_out, w_out, x.shape[-1], w.shape[-1],
+                                 kk, stride=1, mode=strategy)
     if spec is not None:
         codes = jnp.clip(jnp.round(x.astype(jnp.float32) / act_scale), 0,
                          spec.a_qmax)
         wq, ws = quantize_weight(w.astype(jnp.float32), spec, axis=-1)
         xin = jnp.pad(codes, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
-        return K.conv_bank_kernel(xin, wq.astype(jnp.float32),
-                                  ws.reshape(-1), kk=kk, bn=bn,
-                                  act_scale=act_scale, quantized=True,
-                                  interpret=default_interpret())
-    xin = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
-    ws_dummy = jnp.ones((w.shape[-1],), jnp.float32)
-    return K.conv_bank_kernel(xin.astype(jnp.float32),
-                              w.astype(jnp.float32), ws_dummy, kk=kk, bn=bn,
-                              quantized=False, interpret=default_interpret())
+        wf, wsf = wq.astype(jnp.float32), ws.reshape(-1)
+        quantized = True
+    else:
+        xin = jnp.pad(x.astype(jnp.float32),
+                      ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+        wf, wsf = w.astype(jnp.float32), jnp.ones((w.shape[-1],), jnp.float32)
+        quantized, act_scale = False, 1.0
+    if strat.kind == "strip":
+        xin = SK.pad_rows_for_strips(xin, kk, 1, strat.strip_rows,
+                                     strat.n_strips)
+        out = SK.conv_strip_kernel(xin, wf, wsf, kk=kk, stride=1,
+                                   strip_h=strat.strip_rows, bn=bn,
+                                   act_scale=act_scale, quantized=quantized,
+                                   interpret=default_interpret())
+        return out[:, :h_out]
+    return K.conv_bank_kernel(xin, wf, wsf, kk=kk, bn=bn,
+                              act_scale=act_scale, quantized=quantized,
+                              interpret=default_interpret())

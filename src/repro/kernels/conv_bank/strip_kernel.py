@@ -1,0 +1,224 @@
+"""Strip-mined Pallas conv kernels for frames past the VMEM-resident budget.
+
+``kernel.py`` maps the whole SAME-padded image as one VMEM block — right for
+the paper's <=32x32 evaluation models, wrong for full sensor frames and the
+VGG16/AlexNet layers of Fig. 10 where the image (let alone its im2col patch
+matrix) no longer fits on-chip. This module is the large-frame path:
+
+  * the output spatial rows are tiled into strips of ``strip_h`` rows;
+  * the input stays off-chip (``memory_space=ANY``) and each grid step DMAs
+    exactly one input strip plus its (k-1)-row halo into a VMEM scratch
+    buffer (``pltpu.make_async_copy``) — the strip is fetched once and
+    reused across every output-channel block;
+  * the tap loop then runs unchanged on the VMEM strip: k*k shifted
+    [strip_h*W, C_in] x [C_in, bn] MXU matmuls accumulated in f32, the same
+    arm-granular structure as the resident kernel, so the integer-exactness
+    envelope (|sum| < 2^24) is identical.
+
+Grid: (batch, strip, out-channel block) — the channel block innermost so one
+halo DMA serves ``C_out / bn`` compute steps (input-stationary).
+
+The depthwise variant keeps the strip/halo structure but replaces the MXU
+matmul with a VPU multiply-accumulate per tap (each output channel sees one
+input channel), eliminating the per-channel im2col the grouped resident path
+used to do. Strategy selection / geometry lives in ``kernels.dispatch``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def pad_rows_for_strips(xp: jnp.ndarray, kk: int, stride: int,
+                        strip_rows: int, n_strips: int) -> jnp.ndarray:
+    """Zero-pad the bottom rows of a spatially-padded input so ``n_strips``
+    strips of ``strip_rows`` output rows tile exactly (the kernels' geometry
+    contract). The single home of the row-padding recipe for every caller
+    (dispatch strip path, ops wrapper): the padded height is
+    ``(n_strips*strip_rows - 1)*stride + kk``. When the input already has
+    surplus trailing rows (strided VALID convs drop up to stride-1 rows),
+    nothing is added — the kernels' floor division ignores the surplus."""
+    extra = (n_strips * strip_rows - 1) * stride + kk - xp.shape[1]
+    if extra <= 0:
+        return xp
+    return jnp.pad(xp, ((0, 0), (0, extra), (0, 0), (0, 0)))
+
+
+def _tap_patch(x: jnp.ndarray, di: int, dj: int, strip_h: int, w_out: int,
+               stride: int, c: int) -> jnp.ndarray:
+    """The (di, dj) tap's strided window of a VMEM strip -> [strip_h, w_out, c]."""
+    return jax.lax.slice(
+        x, (di, dj, 0),
+        (di + (strip_h - 1) * stride + 1, dj + (w_out - 1) * stride + 1, c),
+        (stride, stride, 1))
+
+
+def _conv_strip_kernel(x_hbm, w_ref, ws_ref, out_ref, xs_ref, sem, *,
+                       kk: int, stride: int, strip_h: int, w_out: int,
+                       c_in: int, rows_in: int, act_scale: float,
+                       quantized: bool):
+    """One (strip, out-channel block) output tile.
+
+    x_hbm:  [B, Hp, Wp, c_in] in ANY/HBM — never blocked into VMEM whole
+    w_ref:  [kk, kk, c_in, bn] VMEM        ws_ref: [1, bn]
+    xs_ref: [rows_in, Wp, c_in] VMEM scratch (strip + halo), persists across
+            the innermost grid dim; sem: DMA completion semaphore
+    out_ref: [1, strip_h, w_out, bn]
+    """
+    b = pl.program_id(0)
+    s = pl.program_id(1)
+    n_blk = pl.program_id(2)
+
+    @pl.when(n_blk == 0)
+    def _fetch_strip():
+        # strip + (kk-1)-row halo; fetched once, reused for every bn block
+        cp = pltpu.make_async_copy(
+            x_hbm.at[b, pl.ds(s * (strip_h * stride), rows_in)],
+            xs_ref, sem)
+        cp.start()
+        cp.wait()
+
+    x = xs_ref[...]
+    bn = out_ref.shape[-1]
+    acc = jnp.zeros((strip_h * w_out, bn), jnp.float32)
+    for di in range(kk):
+        for dj in range(kk):
+            patch = _tap_patch(x, di, dj, strip_h, w_out, stride, c_in)
+            pf = patch.reshape(strip_h * w_out, c_in).astype(jnp.float32)
+            wf = w_ref[di, dj].astype(jnp.float32)       # [c_in, bn]
+            acc = acc + jax.lax.dot_general(
+                pf, wf, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+    if quantized:
+        acc = acc * act_scale * ws_ref[...]
+    out_ref[0] = acc.reshape(strip_h, w_out, bn).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("kk", "stride", "strip_h", "bn",
+                                             "act_scale", "quantized",
+                                             "interpret"))
+def conv_strip_kernel(x_padded: jnp.ndarray, w: jnp.ndarray, ws: jnp.ndarray,
+                      kk: int, stride: int = 1, strip_h: int = 8,
+                      bn: int = 64, act_scale: float = 1.0,
+                      quantized: bool = False,
+                      interpret: bool = True) -> jnp.ndarray:
+    """x_padded [B, Hp, Wp, Cin]; w [kk,kk,Cin,Cout] -> [B, H_out, W_out, Cout].
+
+    Geometry contract (enforced): the caller pads the rows so the strips
+    tile exactly — ``Hp == (n_strips*strip_h - 1)*stride + kk`` — i.e. the
+    last strip's halo DMA ends exactly at the padded bottom edge. Output
+    rows past the true h_out are the caller's padding to slice off.
+    """
+    b, hp, wp, c_in = x_padded.shape
+    w_out = (wp - kk) // stride + 1
+    n_rows = (hp - kk) // stride + 1
+    if strip_h < 1:
+        raise ValueError(f"conv_strip_kernel: strip_h={strip_h} must be >= 1 "
+                         f"(use dispatch.select_conv_strategy for geometry)")
+    if n_rows % strip_h:
+        raise ValueError(
+            f"conv_strip_kernel: padded rows {hp} give {n_rows} output rows, "
+            f"not a multiple of strip_h={strip_h}")
+    n_strips = n_rows // strip_h
+    rows_in = (strip_h - 1) * stride + kk
+    c_out = w.shape[-1]
+    bn = min(bn, c_out)
+    while c_out % bn:
+        bn -= 1
+    ws2 = ws.reshape(1, c_out).astype(jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_conv_strip_kernel, kk=kk, stride=stride,
+                          strip_h=strip_h, w_out=w_out, c_in=c_in,
+                          rows_in=rows_in, act_scale=act_scale,
+                          quantized=quantized),
+        grid=(b, n_strips, c_out // bn),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec((kk, kk, c_in, bn), lambda i, s, n: (0, 0, 0, n)),
+            pl.BlockSpec((1, bn), lambda i, s, n: (0, n)),
+        ],
+        out_specs=pl.BlockSpec((1, strip_h, w_out, bn),
+                               lambda i, s, n: (i, s, 0, n)),
+        out_shape=jax.ShapeDtypeStruct((b, n_rows, w_out, c_out),
+                                       jnp.float32),
+        scratch_shapes=[pltpu.VMEM((rows_in, wp, c_in), jnp.float32),
+                        pltpu.SemaphoreType.DMA],
+        interpret=interpret,
+    )(x_padded.astype(jnp.float32), w.astype(jnp.float32), ws2)
+
+
+def _conv_strip_dw_kernel(x_hbm, w_ref, ws_ref, out_ref, xs_ref, sem, *,
+                          kk: int, stride: int, strip_h: int, w_out: int,
+                          c: int, rows_in: int, act_scale: float,
+                          quantized: bool):
+    """Depthwise strip: every channel convolves with its own kk x kk filter.
+
+    w_ref: [kk*kk, c] (tap-major) — the tap loop is a VPU multiply-accumulate
+    over all channels at once; no im2col, no per-channel kernel launches.
+    """
+    b = pl.program_id(0)
+    s = pl.program_id(1)
+    cp = pltpu.make_async_copy(
+        x_hbm.at[b, pl.ds(s * (strip_h * stride), rows_in)],
+        xs_ref, sem)
+    cp.start()
+    cp.wait()
+
+    x = xs_ref[...]
+    acc = jnp.zeros((strip_h, w_out, c), jnp.float32)
+    for di in range(kk):
+        for dj in range(kk):
+            patch = _tap_patch(x, di, dj, strip_h, w_out, stride, c)
+            acc = acc + patch.astype(jnp.float32) * w_ref[di * kk + dj]
+    if quantized:
+        acc = acc * act_scale * ws_ref[0]
+    out_ref[0] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("kk", "stride", "strip_h",
+                                             "act_scale", "quantized",
+                                             "interpret"))
+def conv_strip_depthwise_kernel(x_padded: jnp.ndarray, w_taps: jnp.ndarray,
+                                ws: jnp.ndarray, kk: int, stride: int = 1,
+                                strip_h: int = 8, act_scale: float = 1.0,
+                                quantized: bool = False,
+                                interpret: bool = True) -> jnp.ndarray:
+    """x_padded [B, Hp, Wp, C]; w_taps [kk*kk, C] -> [B, H_out, W_out, C].
+
+    Same row-padding contract as :func:`conv_strip_kernel`.
+    """
+    b, hp, wp, c = x_padded.shape
+    w_out = (wp - kk) // stride + 1
+    n_rows = (hp - kk) // stride + 1
+    if strip_h < 1:
+        raise ValueError(f"conv_strip_depthwise_kernel: strip_h={strip_h} "
+                         f"must be >= 1")
+    if n_rows % strip_h:
+        raise ValueError(
+            f"conv_strip_depthwise_kernel: padded rows {hp} give {n_rows} "
+            f"output rows, not a multiple of strip_h={strip_h}")
+    n_strips = n_rows // strip_h
+    rows_in = (strip_h - 1) * stride + kk
+    ws2 = ws.reshape(1, c).astype(jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_conv_strip_dw_kernel, kk=kk, stride=stride,
+                          strip_h=strip_h, w_out=w_out, c=c, rows_in=rows_in,
+                          act_scale=act_scale, quantized=quantized),
+        grid=(b, n_strips),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec((kk * kk, c), lambda i, s: (0, 0)),
+            pl.BlockSpec((1, c), lambda i, s: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, strip_h, w_out, c),
+                               lambda i, s: (i, s, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n_rows, w_out, c), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((rows_in, wp, c), jnp.float32),
+                        pltpu.SemaphoreType.DMA],
+        interpret=interpret,
+    )(x_padded.astype(jnp.float32), w_taps.astype(jnp.float32), ws2)

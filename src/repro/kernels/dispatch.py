@@ -19,11 +19,31 @@ Selection order:
 ``interpret=`` flag (previously three duplicated ``_INTERPRET`` module
 globals): interpret off on TPU, on elsewhere, overridable for debugging with
 ``REPRO_FORCE_INTERPRET=1|0``.
+
+Conv strategy (pallas backend only — the reference backend is always
+``lax.conv_general_dilated``):
+
+  resident   — im2col into the photonic MVM kernel: the whole patch matrix
+               is materialized (k*k x the input), right for the paper's
+               <=32x32 evaluation frames where everything fits on-chip.
+  strip      — the strip-mined conv_bank kernel: output rows are tiled into
+               strips, each input strip + (k-1)-row halo is DMA'd into VMEM
+               once and reused across output-channel blocks; no patch matrix
+               ever exists. The large-frame path (VGG16/AlexNet layers,
+               >=256x256 sensor frames) and the native depthwise path.
+  auto       — per-conv VMEM-budget heuristic (``select_conv_strategy``):
+               strip when the per-frame im2col patch matrix would blow the
+               budget, and always for depthwise (the strip kernel replaces
+               the grouped per-channel im2col loop outright).
+
+``REPRO_CONV_STRATEGY=auto|resident|strip`` forces the choice globally;
+``REPRO_CONV_VMEM_BUDGET`` (bytes) resizes the heuristic's budget.
 """
 
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import os
 from typing import Iterator, Optional
 
@@ -31,6 +51,12 @@ import jax
 import jax.numpy as jnp
 
 BACKENDS = ("pallas", "reference")
+CONV_STRATEGIES = ("auto", "resident", "strip")
+
+# Heuristic budget: what we let one conv's working set claim of the ~16 MB
+# VMEM. Half goes to the strip (input rows + halo), the rest covers the
+# weight block, accumulator and pipelining headroom.
+DEFAULT_CONV_VMEM_BUDGET = 4 << 20
 
 _TRUTHY = ("1", "true", "yes", "on")
 _FALSY = ("0", "false", "no", "off")
@@ -85,6 +111,97 @@ def use_backend(name: str) -> Iterator[None]:
 
 
 # ---------------------------------------------------------------------------
+# Conv strategy selection (resident vs strip-mined)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ConvStrategy:
+    """A resolved conv execution strategy + its strip geometry.
+
+    ``strip_rows`` is output rows per strip; ``n_strips`` tiles the output
+    height (the last strip may be padding, sliced off after the kernel).
+    Both are 0 for the resident strategy.
+    """
+
+    kind: str                     # "resident" | "strip"
+    strip_rows: int = 0
+    n_strips: int = 0
+
+
+def conv_strategy_mode() -> str:
+    """The forced/auto strategy mode: ``REPRO_CONV_STRATEGY`` or ``auto``."""
+    env = os.environ.get("REPRO_CONV_STRATEGY", "").strip().lower()
+    if not env:
+        return "auto"
+    if env not in CONV_STRATEGIES:
+        raise ValueError(
+            f"REPRO_CONV_STRATEGY={env!r}; expected one of {CONV_STRATEGIES}")
+    return env
+
+
+def conv_vmem_budget() -> int:
+    """Heuristic VMEM budget in bytes (``REPRO_CONV_VMEM_BUDGET`` override)."""
+    env = os.environ.get("REPRO_CONV_VMEM_BUDGET", "").strip()
+    if env:
+        budget = int(env)
+        if budget <= 0:
+            raise ValueError(f"REPRO_CONV_VMEM_BUDGET={env!r} must be > 0")
+        return budget
+    return DEFAULT_CONV_VMEM_BUDGET
+
+
+def conv_env_key() -> tuple:
+    """Everything conv-strategy resolution reads from the environment —
+    goes into the plan cache key so compiled plans never serve a stale
+    strategy after the env changes."""
+    return (conv_strategy_mode(), conv_vmem_budget())
+
+
+def _strip_geometry(h_out: int, w_out: int, c_in: int, kernel: int,
+                    stride: int, budget: int) -> ConvStrategy:
+    """Largest strip (output rows) whose input strip + halo fits budget/2."""
+    wp = (w_out - 1) * stride + kernel        # padded input width
+    row_bytes = wp * c_in * 4                 # f32-carried codes
+    # input rows needed for r output rows: (r-1)*stride + kernel
+    rows = (budget // 2 // max(row_bytes, 1) - kernel) // stride + 1
+    rows = max(1, min(int(rows), h_out))
+    if rows >= 8:
+        rows -= rows % 8                      # f32 sublane-friendly strips
+    n_strips = -(-h_out // rows)
+    return ConvStrategy("strip", rows, n_strips)
+
+
+def select_conv_strategy(h_out: int, w_out: int, c_in: int, c_out: int,
+                         kernel: int, stride: int = 1, groups: int = 1,
+                         mode: Optional[str] = None,
+                         budget: Optional[int] = None) -> ConvStrategy:
+    """Resolve the conv strategy for one layer's geometry.
+
+    ``h_out``/``w_out`` are the conv's own output dims (pre-pooling);
+    ``c_in`` counts *all* input channels (also for depthwise, where the
+    whole channel stack rides in each strip). Resolution order: explicit
+    ``mode`` arg > ``REPRO_CONV_STRATEGY`` > VMEM-budget heuristic. The
+    heuristic sends a conv to the strip path when its per-frame im2col
+    patch matrix (h_out*w_out*k*k*c_in f32) would not sit in the budget,
+    and sends depthwise convs there unconditionally — the strip kernel's
+    per-tap VPU accumulate replaces the per-channel im2col loop.
+    """
+    mode = mode if mode is not None else conv_strategy_mode()
+    if mode not in CONV_STRATEGIES:
+        raise ValueError(
+            f"unknown conv strategy {mode!r}; expected {CONV_STRATEGIES}")
+    budget = budget if budget is not None else conv_vmem_budget()
+    if mode == "resident":
+        return ConvStrategy("resident")
+    if mode == "auto":
+        depthwise = groups > 1 and groups == c_in
+        patch_bytes = h_out * w_out * kernel * kernel * c_in * 4
+        if not depthwise and patch_bytes <= budget:
+            return ConvStrategy("resident")
+    return _strip_geometry(h_out, w_out, c_in, kernel, stride, budget)
+
+
+# ---------------------------------------------------------------------------
 # Dispatch entry points
 # ---------------------------------------------------------------------------
 
@@ -111,7 +228,8 @@ def matmul_int(a_codes: jnp.ndarray, wq: jnp.ndarray) -> jnp.ndarray:
 
 
 def conv_int(codes: jnp.ndarray, wq: jnp.ndarray, stride: int,
-             pads, groups: int = 1) -> jnp.ndarray:
+             pads, groups: int = 1,
+             strategy: Optional[ConvStrategy] = None) -> jnp.ndarray:
     """Integer-exact conv accumulate: [B,H,W,Cin] codes x [k,k,Cin/g,Cout]
     weight levels -> f32 [B,H',W',Cout], NO dequant (see matmul_int).
 
@@ -120,12 +238,13 @@ def conv_int(codes: jnp.ndarray, wq: jnp.ndarray, stride: int,
     fixed-function filters: each channel is an independent single-channel
     kernel on the OC banks).
 
-    pallas: im2col into the photonic MVM kernel (one OC weight mapping per
-    VMEM-resident tile); grouped convs run one im2col matmul per group over
-    that channel slice. reference: ``lax.conv_general_dilated`` on the
-    float-carried codes — the exact op the eager interpreter runs, so no
-    patch matrix is ever materialized (at 224x224 frames the im2col patches
-    would be ~100x the input).
+    ``strategy`` picks the pallas execution plan (see module docstring):
+    ``None`` resolves per call via :func:`select_conv_strategy` (env /
+    VMEM-budget heuristic); ``core.plan`` passes the strategy it resolved
+    and recorded at compile time. The reference backend ignores it —
+    ``lax.conv_general_dilated`` on the float-carried codes is the exact op
+    the eager interpreter runs. Both pallas strategies accumulate the same
+    exact integers, so strategy choice can never change the results.
     """
     k, _, cg, c_out = wq.shape
     if c_out % groups or codes.shape[-1] != cg * groups:
@@ -133,6 +252,15 @@ def conv_int(codes: jnp.ndarray, wq: jnp.ndarray, stride: int,
             f"conv_int: groups={groups} must divide c_out={c_out} and "
             f"match c_in={codes.shape[-1]} against weight slice {cg}")
     if get_backend() == "pallas":
+        (plo, phi), (qlo, qhi) = pads
+        h_out = (codes.shape[1] + plo + phi - k) // stride + 1
+        w_out = (codes.shape[2] + qlo + qhi - k) // stride + 1
+        if strategy is None:
+            strategy = select_conv_strategy(h_out, w_out, codes.shape[-1],
+                                            c_out, k, stride, groups)
+        if strategy.kind == "strip":
+            return _conv_int_strip(codes, wq, stride, pads, groups, strategy,
+                                   h_out)
         b = codes.shape[0]
         if groups == 1:
             patches, h_out, w_out = _im2col(codes, k, stride, pads)
@@ -153,6 +281,46 @@ def conv_int(codes: jnp.ndarray, wq: jnp.ndarray, stride: int,
         window_strides=(stride, stride), padding=tuple(pads),
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
         feature_group_count=groups)
+
+
+def _conv_int_strip(codes: jnp.ndarray, wq: jnp.ndarray, stride: int, pads,
+                    groups: int, strat: ConvStrategy,
+                    h_out: int) -> jnp.ndarray:
+    """Raw integer accumulate through the strip-mined conv_bank kernels.
+
+    Pads the rows so ``n_strips`` strips tile exactly (zero rows contribute
+    zero partials; the surplus output rows are sliced off), then routes:
+    dense -> MXU strip kernel; depthwise -> VPU strip kernel; general
+    grouped -> one dense strip call per group slice.
+    """
+    from repro.kernels.conv_bank import strip_kernel as SK
+    k, _, cg, c_out = wq.shape
+    (plo, phi), (qlo, qhi) = pads
+    xp = SK.pad_rows_for_strips(
+        jnp.pad(codes, ((0, 0), (plo, phi), (qlo, qhi), (0, 0))),
+        k, stride, strat.strip_rows, strat.n_strips)
+    interp = default_interpret()
+    kw = dict(kk=k, stride=stride, strip_h=strat.strip_rows,
+              quantized=False, interpret=interp)
+    if groups == 1:
+        ones = jnp.ones((c_out,), jnp.float32)
+        out = SK.conv_strip_kernel(xp, wq.astype(jnp.float32), ones, **kw)
+    elif cg == 1 and groups == codes.shape[-1] and c_out == groups:
+        # plain depthwise (multiplier 1) — the VPU tap-accumulate kernel;
+        # channel-multiplier depthwise (c_out = m*groups) falls through to
+        # the per-group loop below (each group is a 1-in m-out dense conv)
+        ones = jnp.ones((c_out,), jnp.float32)
+        out = SK.conv_strip_depthwise_kernel(
+            xp, wq.reshape(k * k, c_out).astype(jnp.float32), ones, **kw)
+    else:
+        og = c_out // groups
+        ones = jnp.ones((og,), jnp.float32)
+        out = jnp.concatenate([
+            SK.conv_strip_kernel(
+                xp[..., g * cg:(g + 1) * cg],
+                wq[..., g * og:(g + 1) * og].astype(jnp.float32), ones, **kw)
+            for g in range(groups)], axis=-1)
+    return out[:, :h_out]
 
 
 def _im2col(codes: jnp.ndarray, k: int, stride: int, pads):

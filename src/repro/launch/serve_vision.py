@@ -138,6 +138,12 @@ def main(argv=None):
     r = plan.report
     print(f"[serve_vision] {name} {scheme.name} batch={args.batch} "
           f"depth={args.depth} compile={t_compile * 1e3:.1f}ms")
+    if r.conv_strategy:
+        strat = " ".join(
+            f"{n}={v['kind']}" + (f"({v['n_strips']}x{v['strip_rows']}rows)"
+                                  if v["kind"] == "strip" else "")
+            for n, v in r.conv_strategy.items())
+        print(f"[serve_vision] conv strategy: {strat}")
     print(f"[serve_vision] measured {fps:,.0f} frames/s on "
           f"{jax.default_backend()} | device model: "
           f"{r.fps:,.0f} FPS, {r.avg_power_w:.2f} W, "

@@ -1,0 +1,197 @@
+"""Conv strategy selection (resident vs strip-mined) across the stack:
+the dispatch heuristic, env overrides, plan/report recording, and
+end-to-end bit-identity of strip-mined plans on large frames."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import plan as plan_mod
+from repro.core.accelerator import ConvSpec
+from repro.core.quant import W4A4
+from repro.kernels import dispatch
+from repro.models.vision import vgg16_ir
+
+
+# -- heuristic ---------------------------------------------------------------
+
+def test_small_frames_stay_resident():
+    s = dispatch.select_conv_strategy(32, 32, 64, 64, 3)
+    assert s == dispatch.ConvStrategy("resident")
+
+
+def test_large_frames_go_strip():
+    # vgg16 conv2: the per-frame im2col patch matrix is ~115 MB
+    s = dispatch.select_conv_strategy(224, 224, 64, 64, 3)
+    assert s.kind == "strip"
+    assert 1 <= s.strip_rows <= 224
+    assert s.strip_rows * s.n_strips >= 224
+    # the input strip + halo actually fits in half the budget
+    wp = 223 + 3
+    rows_in = s.strip_rows - 1 + 3
+    assert rows_in * wp * 64 * 4 <= dispatch.conv_vmem_budget() // 2
+
+
+def test_depthwise_always_strips_on_auto():
+    s = dispatch.select_conv_strategy(16, 16, 3, 3, 3, groups=3)
+    assert s.kind == "strip"
+
+
+def test_env_override_and_validation(monkeypatch):
+    monkeypatch.setenv("REPRO_CONV_STRATEGY", "resident")
+    assert dispatch.select_conv_strategy(224, 224, 64, 64, 3).kind == \
+        "resident"
+    monkeypatch.setenv("REPRO_CONV_STRATEGY", "strip")
+    assert dispatch.select_conv_strategy(8, 8, 2, 2, 3).kind == "strip"
+    monkeypatch.setenv("REPRO_CONV_STRATEGY", "bogus")
+    with pytest.raises(ValueError, match="REPRO_CONV_STRATEGY"):
+        dispatch.conv_strategy_mode()
+    monkeypatch.delenv("REPRO_CONV_STRATEGY")
+    with pytest.raises(ValueError, match="unknown conv strategy"):
+        dispatch.select_conv_strategy(8, 8, 2, 2, 3, mode="bogus")
+
+
+def test_budget_env_shrinks_strips(monkeypatch):
+    wide = dispatch.select_conv_strategy(256, 256, 8, 8, 3, mode="strip")
+    monkeypatch.setenv("REPRO_CONV_VMEM_BUDGET", str(64 * 1024))
+    narrow = dispatch.select_conv_strategy(256, 256, 8, 8, 3, mode="strip")
+    assert narrow.strip_rows < wide.strip_rows
+    # and a small budget flips the auto decision to strip
+    assert dispatch.select_conv_strategy(32, 32, 8, 8, 3).kind == "strip"
+    monkeypatch.setenv("REPRO_CONV_VMEM_BUDGET", "-3")
+    with pytest.raises(ValueError, match="REPRO_CONV_VMEM_BUDGET"):
+        dispatch.conv_vmem_budget()
+
+
+# -- plan / report recording -------------------------------------------------
+
+def test_vgg16_plan_records_mixed_strategies():
+    """The Fig. 10 model compiles with per-layer strategies: early 224x224
+    convs strip-mined, late 14x14 convs resident — all in plan AND report."""
+    plan = plan_mod.compile_model(tuple(vgg16_ir()), (1, 224, 224, 3), W4A4)
+    conv_steps = {s.name: s for s in plan.steps
+                  if isinstance(s, plan_mod.ConvStep)}
+    assert conv_steps["conv1"].strategy.kind == "strip"
+    assert conv_steps["conv13"].strategy.kind == "resident"
+    kinds = {k: v.strategy.kind for k, v in conv_steps.items()}
+    assert "strip" in kinds.values() and "resident" in kinds.values()
+    # the power report carries the same record (serving surfaces print it)
+    assert plan.report.conv_strategy == {
+        k: dataclasses.asdict(v.strategy) for k, v in conv_steps.items()}
+
+
+def test_plan_cache_keys_on_strategy_env(monkeypatch):
+    layers = (ConvSpec("c", 1, 4, kernel=3),)
+    monkeypatch.delenv("REPRO_CONV_STRATEGY", raising=False)
+    p_auto = plan_mod.compile_model(layers, (1, 16, 16, 1), W4A4)
+    assert p_auto.steps[0].strategy.kind == "resident"
+    monkeypatch.setenv("REPRO_CONV_STRATEGY", "strip")
+    p_strip = plan_mod.compile_model(layers, (1, 16, 16, 1), W4A4)
+    assert p_strip is not p_auto            # env is part of the cache key
+    assert p_strip.steps[0].strategy.kind == "strip"
+    monkeypatch.delenv("REPRO_CONV_STRATEGY")
+    assert plan_mod.compile_model(layers, (1, 16, 16, 1), W4A4) is p_auto
+
+
+def test_eager_report_matches_compiled_under_forced_strip(monkeypatch):
+    """Report equality with run_eager holds for every strategy env."""
+    from repro.core.accelerator import LightatorDevice
+    from repro.models.vision import lenet_ir, init_vision
+    monkeypatch.setenv("REPRO_CONV_STRATEGY", "strip")
+    layers = lenet_ir()
+    params = init_vision(jax.random.PRNGKey(0), layers)
+    img = jax.random.uniform(jax.random.PRNGKey(1), (2, 28, 28, 1))
+    dev = LightatorDevice()
+    logits_e, report_e = dev.run_eager(layers, params, img, W4A4)
+    logits_c, report_c = dev.run(layers, params, img, W4A4)
+    assert all(v["kind"] == "strip" for v in report_c.conv_strategy.values())
+    np.testing.assert_array_equal(np.asarray(logits_e), np.asarray(logits_c))
+    assert dataclasses.asdict(report_e) == dataclasses.asdict(report_c)
+
+
+# -- end-to-end bit-identity on large frames ---------------------------------
+
+def test_conv_int_auto_strips_256_frame_bit_identical():
+    """dispatch.conv_int at 256x256: auto picks strip under a tight budget,
+    and the pallas strip path equals the reference backend exactly."""
+    codes = jnp.round(jax.random.uniform(jax.random.PRNGKey(0),
+                                         (1, 256, 256, 2)) * 15)
+    wq = jnp.round(jax.random.uniform(jax.random.PRNGKey(1),
+                                      (3, 3, 2, 8)) * 14) - 7
+    pads = ((1, 1), (1, 1))
+    strat = dispatch.select_conv_strategy(256, 256, 2, 8, 3)
+    assert strat.kind == "strip"
+    with dispatch.use_backend("reference"):
+        ref = dispatch.conv_int(codes, wq, 1, pads)
+    with dispatch.use_backend("pallas"):
+        pal = dispatch.conv_int(codes, wq, 1, pads)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(pal))
+
+
+def test_strip_plan_execute_large_frame_matches_reference_backend():
+    """A compiled single-conv plan on a 256x256 frame: executing through the
+    pallas strip kernels returns bit-identical output to the reference."""
+    layers = (ConvSpec("edge", 2, 4, kernel=3, act="abs"),)
+    frames = jax.random.uniform(jax.random.PRNGKey(2), (1, 256, 256, 2))
+    params = {"edge": {"w": jax.random.normal(jax.random.PRNGKey(3),
+                                              (3, 3, 2, 4)) * 0.2}}
+    plan = plan_mod.compile_model(layers, frames.shape, W4A4)
+    assert plan.steps[0].strategy.kind == "strip"
+    with dispatch.use_backend("reference"):
+        ref = plan_mod.execute(plan, params, frames)
+    with dispatch.use_backend("pallas"):
+        pal = plan_mod.execute(plan, params, frames)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(pal))
+
+
+def test_strided_valid_exact_tiling_no_crash():
+    """Strided VALID conv with surplus input rows and strips tiling h_out
+    exactly: the row-padding helper must not go negative (regression — this
+    crashed jnp.pad before pad_rows_for_strips clamped it)."""
+    codes = jnp.round(jax.random.uniform(jax.random.PRNGKey(6),
+                                         (1, 34, 34, 2)) * 15)
+    wq = jnp.round(jax.random.uniform(jax.random.PRNGKey(7),
+                                      (3, 3, 2, 4)) * 14) - 7
+    pads = ((0, 0), (0, 0))                   # VALID, stride 2: h_out = 16
+    strat = dispatch.ConvStrategy("strip", strip_rows=16, n_strips=1)
+    with dispatch.use_backend("reference"):
+        ref = dispatch.conv_int(codes, wq, 2, pads)
+    with dispatch.use_backend("pallas"):
+        pal = dispatch.conv_int(codes, wq, 2, pads, strategy=strat)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(pal))
+
+
+def test_channel_multiplier_depthwise_strip_matches_reference():
+    """Depthwise with a channel multiplier (c_out = 2*groups): not the VPU
+    depthwise kernel's shape — must route through the per-group strip loop
+    (regression: this crashed the depthwise branch before the c_out guard)."""
+    codes = jnp.round(jax.random.uniform(jax.random.PRNGKey(8),
+                                         (1, 16, 16, 3)) * 15)
+    wq = jnp.round(jax.random.uniform(jax.random.PRNGKey(9),
+                                      (3, 3, 1, 6)) * 14) - 7
+    pads = ((1, 1), (1, 1))
+    with dispatch.use_backend("reference"):
+        ref = dispatch.conv_int(codes, wq, 1, pads, groups=3)
+    with dispatch.use_backend("pallas"):
+        pal = dispatch.conv_int(codes, wq, 1, pads, groups=3)  # auto: strip
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(pal))
+
+
+def test_grouped_strip_matches_reference():
+    """General grouped conv (1 < cg < c_in) through the per-group strip path."""
+    codes = jnp.round(jax.random.uniform(jax.random.PRNGKey(4),
+                                         (1, 20, 20, 4)) * 15)
+    wq = jnp.round(jax.random.uniform(jax.random.PRNGKey(5),
+                                      (3, 3, 2, 6)) * 14) - 7
+    pads = ((1, 1), (1, 1))
+    strat = dispatch.select_conv_strategy(20, 20, 4, 6, 3, groups=2,
+                                          mode="strip")
+    with dispatch.use_backend("reference"):
+        ref = dispatch.conv_int(codes, wq, 1, pads, groups=2)
+    with dispatch.use_backend("pallas"):
+        pal = dispatch.conv_int(codes, wq, 1, pads, groups=2,
+                                strategy=strat)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(pal))

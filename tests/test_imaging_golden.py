@@ -1,0 +1,51 @@
+"""Golden-image regression: every imaging pipeline vs stored arrays.
+
+The analytic identities in test_imaging.py prove the filters' math on
+special inputs (constants, steps, impulses); these tests pin the *complete*
+output on a textured batch, so any unintended numerics change anywhere in
+the stack — filter weights, plan compile/execute, quantization, upsample —
+shows up as a diff against ``tests/golden/<pipeline>.npz``.
+
+Regenerate after an intentional numerics change:
+``PYTHONPATH=src python scripts/gen_golden.py`` (see docs/imaging.md).
+"""
+
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import plan as plan_mod
+from repro.core.quant import W4A4
+from repro.imaging import PIPELINES, apply_float
+from repro.kernels import dispatch
+
+GOLDEN_DIR = Path(__file__).resolve().parent / "golden"
+
+
+def test_every_pipeline_has_a_golden_file():
+    missing = [n for n in PIPELINES
+               if not (GOLDEN_DIR / f"{n}.npz").exists()]
+    assert not missing, (f"no golden arrays for {missing}; run "
+                         f"scripts/gen_golden.py")
+
+
+@pytest.mark.parametrize("name", sorted(PIPELINES))
+def test_pipeline_matches_golden(name):
+    data = np.load(GOLDEN_DIR / f"{name}.npz")
+    frames = data["frames"]            # goldens are self-contained
+    layers, params = PIPELINES[name].build(int(data["hw"]), int(data["hw"]),
+                                           3)
+    got_float = np.asarray(apply_float(layers, params, frames), np.float32)
+    np.testing.assert_allclose(got_float, data["float_out"],
+                               rtol=1e-5, atol=1e-5,
+                               err_msg=f"{name}: float path drifted from "
+                                       f"golden")
+    with dispatch.use_backend("reference"):
+        plan = plan_mod.compile_model(layers, frames.shape, W4A4)
+        got_quant = np.asarray(plan_mod.execute(plan, params, frames),
+                               np.float32)
+    np.testing.assert_allclose(got_quant, data["quant_out"],
+                               rtol=1e-5, atol=1e-5,
+                               err_msg=f"{name}: quantized device path "
+                                       f"drifted from golden")
