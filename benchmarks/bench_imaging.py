@@ -1,7 +1,8 @@
 """Imaging pipelines: frames/s + quantized-vs-float quality per scheme.
 
 For every pipeline in ``repro.imaging.PIPELINES`` x [W:A] scheme, compiles
-the plan, measures compiled frames/s on the host backend, and scores the
+through the Program/Options/Executable front door, measures compiled
+frames/s on the host backend, and scores the
 quantized device output against the float reference path (PSNR/SSIM); recon
 pipelines are additionally scored against the original grayscale frame
 (reconstruction quality). Writes ``BENCH_imaging.json`` next to this file.
@@ -15,7 +16,7 @@ from pathlib import Path
 
 import jax.numpy as jnp
 
-from repro.core import plan as plan_mod
+import repro
 from repro.core.quant import W4A4, MX_43
 from repro.data.synthetic import synthetic_textures
 from repro.imaging import PIPELINES, apply_float, gray_target, psnr, ssim
@@ -48,21 +49,20 @@ def run(csv: bool = True, pipelines=None):
     out_lines = []
     for name in names:
         pipe = PIPELINES[name]
-        layers, params = pipe.build(HW, HW, 3)
-        ref = apply_float(layers, params, frames)
+        prog = pipe.program(HW, HW, 3)
+        ref = apply_float(prog.layers, prog.params, frames)
         per_scheme = {}
         for sname, scheme in SCHEMES.items():
-            plan = plan_mod.compile_model(layers, frames.shape, scheme)
-            out = plan_mod.execute(plan, params, frames)
-            t = _time_loop(lambda: plan_mod.execute(plan, params, frames)
-                           .block_until_ready())
+            exe = prog.compile(repro.Options(scheme=scheme))
+            out = exe.run(frames)
+            t = _time_loop(lambda: exe.run(frames).block_until_ready())
             fps = BATCH / t
             entry = {
                 "fps": fps,
                 "psnr_db": float(psnr(ref, out)),
                 "ssim": float(ssim(ref, out)),
-                "device_fps": plan.report.fps,
-                "device_kfps_per_w": plan.report.kfps_per_w,
+                "device_fps": exe.report.fps,
+                "device_kfps_per_w": exe.report.kfps_per_w,
             }
             if pipe.kind == "recon":
                 tgt = gray_target(frames)

@@ -1,12 +1,16 @@
-"""Eager-vs-compiled device pipeline: frames/s over a batch sweep.
+"""Eager-vs-compiled device pipeline: frames/s + compile-time trajectory.
 
-The refactor under test (core.plan): the seed ``LightatorDevice.run`` was an
-eager per-layer interpreter that re-scheduled and re-ran the power model on
-every frame; the compiled path resolves all of that once and executes under
-a single jax.jit. This benchmark measures both on the LeNet smoke model at
-batch 1/8/32, asserts the logits stay bit-identical, and writes
-``BENCH_pipeline.json`` next to this file so future PRs have a perf
-trajectory to compare against.
+Two things are tracked in ``BENCH_pipeline.json``:
+
+* **throughput** — the seed ``LightatorDevice.run_eager`` per-layer
+  interpreter vs the compiled path (one cached plan, one jit) on the LeNet
+  smoke model at batch 1/8/32, with a bit-identity assertion between the
+  two;
+* **API-layer compile overhead** (schema v2) — per model, the cold
+  ``Program.compile`` (scheduling + power model from scratch) vs a
+  cached-plan re-compile (pure front-door overhead: options resolution +
+  cache hit). Keeps the Program/Options/Executable layer honest: the
+  cached path must stay microseconds.
 """
 
 from __future__ import annotations
@@ -18,13 +22,15 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 
+import repro
 from repro.core import plan as plan_mod
 from repro.core.accelerator import LightatorDevice
 from repro.core.quant import W4A4
-from repro.models.vision import lenet_ir, init_vision
+from repro.models.vision import lenet_ir, init_vision, vision_program
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 BATCHES = (1, 8, 32)
+COMPILE_MODELS = ("lenet", "vgg9", "vgg16")
 OUT_PATH = Path(__file__).resolve().parent / "BENCH_pipeline.json"
 
 
@@ -40,18 +46,35 @@ def _time_loop(fn, min_reps: int = 3, min_time_s: float = 0.3) -> float:
             return dt / reps
 
 
+def _compile_times(model: str, options: repro.Options) -> dict:
+    """Cold (empty plan cache) vs cached-plan compile milliseconds."""
+    # params={} skips weight init — compile timing only needs the IR
+    prog = vision_program(model, params={})
+    plan_mod.clear_plan_cache()
+    t0 = time.perf_counter()
+    prog.compile(options)
+    cold_ms = (time.perf_counter() - t0) * 1e3
+    t0 = time.perf_counter()
+    prog.compile(options)
+    cached_ms = (time.perf_counter() - t0) * 1e3
+    assert plan_mod.plan_cache_stats()["hits"] >= 1
+    return {"cold_ms": cold_ms, "cached_ms": cached_ms}
+
+
 def run(csv: bool = True, batches=BATCHES):
     layers = lenet_ir()
     params = init_vision(jax.random.PRNGKey(0), layers)
+    prog = repro.Program(layers, params, (28, 28, 1), name="lenet")
+    options = repro.Options(scheme=W4A4)
     dev = LightatorDevice()
     results = {}
     out_lines = []
     for bs in batches:
         frames = jax.random.uniform(jax.random.PRNGKey(1), (bs, 28, 28, 1))
-        plan = dev.compile(layers, frames.shape, W4A4)
+        exe = prog.compile(options)
 
         le, _ = dev.run_eager(layers, params, frames, W4A4)
-        lc = plan_mod.execute(plan, params, frames)
+        lc = exe.run(frames)
         identical = bool(jnp.array_equal(le, lc))
         if not identical:
             raise RuntimeError(
@@ -62,9 +85,7 @@ def run(csv: bool = True, batches=BATCHES):
         t_eager = _time_loop(
             lambda: dev.run_eager(layers, params, frames, W4A4)[0]
             .block_until_ready())
-        t_comp = _time_loop(
-            lambda: plan_mod.execute(plan, params, frames)
-            .block_until_ready())
+        t_comp = _time_loop(lambda: exe.run(frames).block_until_ready())
         eager_fps = bs / t_eager
         comp_fps = bs / t_comp
         speedup = comp_fps / eager_fps
@@ -79,22 +100,30 @@ def run(csv: bool = True, batches=BATCHES):
             f"eager_fps={eager_fps:.0f};compiled_fps={comp_fps:.0f};"
             f"speedup={speedup:.2f}x;identical={identical}")
 
+    compile_ms = {m: _compile_times(m, options) for m in COMPILE_MODELS}
+    for m, t in compile_ms.items():
+        out_lines.append(
+            f"bench_pipeline.compile.{m},{t['cold_ms'] * 1e3:.0f},"
+            f"cold_ms={t['cold_ms']:.2f};cached_ms={t['cached_ms']:.4f}")
+
     payload = {
         "schema_version": SCHEMA_VERSION,
         "model": "lenet",
         "scheme": "w4a4",
         "backend": jax.default_backend(),
         "batches": results,
+        "compile_ms": compile_ms,
     }
     # merge with prior runs so a --quick sweep doesn't drop trajectory
     # points recorded at other batch sizes — but only when the prior file
-    # describes the same model/scheme/backend (mixed hardware would corrupt
-    # the trajectory)
+    # describes the same model/scheme/backend AND schema (mixed hardware or
+    # schema generations would corrupt the trajectory)
     if OUT_PATH.exists():
         try:
             prior = json.loads(OUT_PATH.read_text())
-            same_config = all(prior.get(k) == payload[k]
-                              for k in ("model", "scheme", "backend"))
+            same_config = all(
+                prior.get(k) == payload[k]
+                for k in ("schema_version", "model", "scheme", "backend"))
             if same_config:
                 merged = prior.get("batches", {})
                 merged.update(payload["batches"])

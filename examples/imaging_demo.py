@@ -1,50 +1,69 @@
 """Versatile image processing on the Lightator device — all pipelines.
 
-    PYTHONPATH=src python examples/imaging_demo.py
+    PYTHONPATH=src python examples/imaging_demo.py [--quick]
 
 Runs every fixed-function pipeline in ``repro.imaging.PIPELINES`` on a
 synthetic RGB scene, twice: through the float reference path and through
-the compiled quantized device path ([4:4]). Prints a quality/power table,
-then trains the compress_recon_deconv head and shows the reconstruction
-PSNR improvement over plain bilinear.
+the compiled quantized device path ([4:4]) — all via the unified
+``Program.compile(Options) -> Executable`` API. Prints a quality/power
+table, shows a denoise->edge chain fused into one compiled plan, then
+trains the compress_recon_deconv head and shows the reconstruction PSNR
+improvement over plain bilinear. ``--quick`` shrinks frames/steps for CI
+smoke runs.
 """
+
+import argparse
 
 import jax.numpy as jnp
 
-from repro.core import plan as plan_mod
+import repro
 from repro.core.quant import W4A4
 from repro.data.synthetic import synthetic_textures
 from repro.imaging import (PIPELINES, apply_float, fit_recon_head,
                            gray_target, psnr, ssim)
 
-HW, BATCH = 64, 8
 
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small frames / few training steps (CI smoke)")
+    args = ap.parse_args(argv)
+    hw, batch, steps = (32, 2, 30) if args.quick else (64, 8, 150)
 
-def main():
-    imgs, _ = synthetic_textures(BATCH, hw=HW, seed=0)
+    imgs, _ = synthetic_textures(batch, hw=hw, seed=0)
     frames = jnp.asarray(imgs)
+    options = repro.Options(scheme=W4A4)
 
     print(f"{'pipeline':24s} {'out':>14s} {'PSNR':>8s} {'SSIM':>7s} "
           f"{'dev FPS':>12s} {'kFPS/W':>9s}")
     for name, pipe in PIPELINES.items():
-        layers, params = pipe.build(HW, HW, 3)
-        plan = plan_mod.compile_model(layers, frames.shape, W4A4)
-        out = plan_mod.execute(plan, params, frames)
-        ref = apply_float(layers, params, frames)
-        r = plan.report
+        prog = pipe.program(hw, hw, 3)
+        exe = prog.compile(options)
+        out = exe.run(frames)
+        ref = apply_float(prog.layers, prog.params, frames)
+        r = exe.report
         print(f"{name:24s} {str(tuple(out.shape[1:])):>14s} "
               f"{float(psnr(ref, out)):7.2f}d {float(ssim(ref, out)):7.4f} "
               f"{r.fps:12,.0f} {r.kfps_per_w:9.1f}")
 
+    # program composition: denoise -> edge detect as ONE compiled plan
+    chain = (PIPELINES["denoise_gauss"].program(hw, hw, 3)
+             .then(PIPELINES["edge_detect"].program(hw, hw, 3)))
+    exe = chain.compile(options)
+    out = exe.run(frames)
+    ref = apply_float(chain.layers, chain.params, frames)
+    print(f"\n[chain] {chain.name}: {len(exe.plan.schedules)} schedules in "
+          f"one plan, PSNR {float(psnr(ref, out)):.2f} dB, "
+          f"{exe.report.fps:,.0f} dev FPS")
+
     # learned reconstruction: fit the deconv head, compare against bilinear
-    pipe = PIPELINES["compress_recon_deconv"]
-    layers, params = pipe.build(HW, HW, 3)
+    prog = PIPELINES["compress_recon_deconv"].program(hw, hw, 3)
     tgt = gray_target(frames)
-    before = apply_float(layers, params, frames)
-    fitted = fit_recon_head(layers, params, frames, steps=150)
-    after = apply_float(layers, fitted, frames)
-    plan = plan_mod.compile_model(layers, frames.shape, W4A4)
-    dev_after = plan_mod.execute(plan, fitted, frames)
+    before = apply_float(prog.layers, prog.params, frames)
+    fitted = fit_recon_head(prog.layers, prog.params, frames, steps=steps)
+    after = apply_float(prog.layers, fitted, frames)
+    dev_after = repro.Program(prog.layers, fitted, prog.input_hwc,
+                              name=prog.name).compile(options).run(frames)
     print(f"\n[recon] bilinear       {float(psnr(tgt, before)):.2f} dB vs "
           f"original (float)")
     print(f"[recon] + trained head {float(psnr(tgt, after)):.2f} dB vs "

@@ -4,19 +4,18 @@
 
 1. capture a frame, run the ADC-less CRC + Compressive Acquisitor
 2. run a photonic-quantized MVM through the Pallas kernel (== oracle)
-3. execute LeNet on the LightatorDevice and read the power report
+3. compile + run LeNet through the unified Program/Options/Executable API
 4. spin up an assigned LM arch (smoke size) with photonic quantization
 """
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.accelerator import LightatorDevice
+import repro
 from repro.core.compressive import compressive_acquire
 from repro.core.quant import W4A4, MX_43
 from repro.kernels.photonic_mvm.ops import photonic_mvm
 from repro.kernels.photonic_mvm.ref import photonic_mvm_ref
-from repro.models.vision import lenet_ir, init_vision
 
 key = jax.random.PRNGKey(0)
 
@@ -34,24 +33,29 @@ y_oracle = photonic_mvm_ref(x, w, W4A4)
 print(f"photonic_mvm [4:4]: max|kernel - oracle| = "
       f"{float(jnp.max(jnp.abs(y_kernel - y_oracle))):.2e}")
 
-# -- 3. a full model on the device simulator --------------------------------
-# run() = cached compile pass + single-jit batched execute pass (core.plan)
-layers = lenet_ir()
-params = init_vision(jax.random.PRNGKey(2), layers)
+# -- 3. a full model through the one front door -----------------------------
+# Program (layer IR + params + frame shape) -> compile(Options) -> Executable
+prog = repro.Program.from_model("lenet", key=jax.random.PRNGKey(2))
+exe = prog.compile(repro.Options(scheme=MX_43))
 digit = jax.random.uniform(jax.random.PRNGKey(3), (1, 28, 28, 1))
-dev = LightatorDevice()
-logits, report = dev.run(layers, params, digit, MX_43)
+logits = exe.run(digit)
+r = exe.report
 print(f"LeNet on Lightator-MX: logits {logits.shape}, "
-      f"{report.exec_time_s * 1e6:.2f} us/frame, "
-      f"{report.avg_power_w:.2f} W, {report.kfps_per_w:.0f} kFPS/W")
+      f"{r.exec_time_s * 1e6:.2f} us/frame, "
+      f"{r.avg_power_w:.2f} W, {r.kfps_per_w:.0f} kFPS/W")
 
-# the two passes can also be driven directly — compile once, stream batches
-from repro.core import plan as plan_mod
+# the plan is cached: streaming any batch size reuses the same Executable
 frames = jax.random.uniform(jax.random.PRNGKey(6), (8, 28, 28, 1))
-plan = dev.compile(layers, frames.shape, MX_43)
-batch_logits = plan_mod.execute(plan, params, frames)
-print(f"compiled plan: {len(plan.schedules)} schedules cached, "
+batch_logits = exe.run(frames)
+print(f"compiled plan: {len(exe.plan.schedules)} schedules cached, "
       f"batched logits {batch_logits.shape}")
+
+# imaging pipelines are Programs too — and chain into ONE compiled plan
+chain = (repro.Program.from_pipeline("denoise_box", 64, 64, 3)
+         .then(repro.Program.from_pipeline("edge_detect", 64, 64, 3)))
+out = chain.compile(repro.Options(scheme=W4A4)).run(
+    jax.random.uniform(jax.random.PRNGKey(7), (2, 64, 64, 3)))
+print(f"chained {chain.name}: {out.shape} in a single plan")
 
 # -- 4. the paper's technique on an assigned LM architecture ----------------
 import dataclasses

@@ -18,9 +18,15 @@ python scripts/check_docs.py
 # conv kernels again with the strip-mined strategy forced (large-frame path)
 REPRO_CONV_STRATEGY=strip python -m pytest tests/test_kernels_conv_bank.py -q
 
-# end-to-end serving smoke (2 batches each): imaging pipeline + CNN
+# end-to-end serving smoke (2 batches each): imaging pipeline + CNN,
+# exercising the Options-mapped CLI flags
 python -m repro.launch.serve_vision --pipeline edge_detect --batch 2 \
-    --batches 2 --size 32
+    --batches 2 --size 32 --backend reference --conv-strategy auto
 python -m repro.launch.serve_vision --model lenet --batch 2 --batches 2
+
+# example smoke: the Program/Options/Executable walkthroughs must keep
+# running as written in the docs
+python examples/quickstart.py
+python examples/imaging_demo.py --quick
 
 echo "ci.sh: OK"

@@ -18,11 +18,10 @@ from pathlib import Path
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import plan as plan_mod
+import repro
 from repro.core.quant import W4A4
 from repro.data.synthetic import synthetic_textures
 from repro.imaging import PIPELINES, apply_float
-from repro.kernels import dispatch
 
 GOLDEN_DIR = Path(__file__).resolve().parent.parent / "tests" / "golden"
 BATCH, HW, SEED = 2, 32, 0
@@ -38,22 +37,20 @@ def main() -> None:
     frames = golden_frames()
     # pin the backend: goldens describe the reference numerics (the pallas
     # path is regression-tested bit-identical to it elsewhere)
-    with dispatch.use_backend("reference"):
-        for name, pipe in sorted(PIPELINES.items()):
-            layers, params = pipe.build(HW, HW, 3)
-            float_out = np.asarray(apply_float(layers, params, frames),
-                                   np.float32)
-            plan = plan_mod.compile_model(layers, frames.shape, W4A4)
-            quant_out = np.asarray(plan_mod.execute(plan, params, frames),
-                                   np.float32)
-            # the input frames ride along so the goldens are self-contained
-            # (the test needs no access to the generator's input recipe)
-            path = GOLDEN_DIR / f"{name}.npz"
-            np.savez_compressed(path, frames=np.asarray(frames, np.float32),
-                                float_out=float_out, quant_out=quant_out,
-                                batch=BATCH, hw=HW, seed=SEED, scheme="w4a4")
-            print(f"wrote {path} float{float_out.shape} "
-                  f"quant{quant_out.shape}")
+    options = repro.Options(scheme=W4A4, backend="reference")
+    for name, pipe in sorted(PIPELINES.items()):
+        prog = pipe.program(HW, HW, 3)
+        float_out = np.asarray(apply_float(prog.layers, prog.params, frames),
+                               np.float32)
+        quant_out = np.asarray(prog.compile(options).run(frames), np.float32)
+        # the input frames ride along so the goldens are self-contained
+        # (the test needs no access to the generator's input recipe)
+        path = GOLDEN_DIR / f"{name}.npz"
+        np.savez_compressed(path, frames=np.asarray(frames, np.float32),
+                            float_out=float_out, quant_out=quant_out,
+                            batch=BATCH, hw=HW, seed=SEED, scheme="w4a4")
+        print(f"wrote {path} float{float_out.shape} "
+              f"quant{quant_out.shape}")
 
 
 if __name__ == "__main__":

@@ -15,3 +15,14 @@ Layers:
 """
 
 __version__ = "1.0.0"
+
+__all__ = ["Program", "Options", "Executable"]
+
+
+def __getattr__(name):
+    # Lazy re-export of the program-level front door (core.program) so that
+    # `import repro` stays free of jax import cost for the config-only users.
+    if name in __all__:
+        from repro.core import program
+        return getattr(program, name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

@@ -13,6 +13,9 @@
 - plan:           static compile pass (cached CompiledPlan: specs, schedules,
                   power report) + jitted batched execute pass that dispatches
                   to the Pallas kernels.
+- program:        Program / Options / Executable — the unified front door
+                  over both passes for CNNs and imaging pipelines alike
+                  (the old compile_model/execute remain as deprecated shims).
 """
 
 from repro.core.quant import (
@@ -46,9 +49,11 @@ from repro.core.photonics import (
 )
 from repro.core.power_model import PowerModel, LayerSchedule
 from repro.core.plan import CompiledPlan, compile_model, execute
+from repro.core.program import Executable, Options, Program
 
 __all__ = [
     "CompiledPlan", "compile_model", "execute",
+    "Program", "Options", "Executable",
     "WASpec", "MixedPrecisionScheme",
     "crc_quantize_act", "fake_quant_act", "fake_quant_weight",
     "quantize_weight", "weight_scale",

@@ -170,7 +170,7 @@ class LightatorDevice:
                 scheme: WASpec | MixedPrecisionScheme):
         """Static pass: layers + input shape -> cached ``CompiledPlan``."""
         from repro.core import plan as plan_mod
-        return plan_mod.compile_model(
+        return plan_mod._compile_model(
             tuple(layers), tuple(input_shape), scheme, oc=self.oc,
             circuit=self.power.c, profile=self.power.profile,
             weight_sram_kb=self.power.weight_sram_kb,
@@ -181,14 +181,20 @@ class LightatorDevice:
             scheme: WASpec | MixedPrecisionScheme) -> Tuple[jnp.ndarray, pmod.ModelReport]:
         """image: [B,H,W,C] float in [0,1]. Returns (logits, report).
 
-        Compatibility wrapper: compile (cached) + jitted batched execute.
-        Bit-identical to ``run_eager``.
+        Deprecated compatibility wrapper (cached compile + jitted batched
+        execute, bit-identical to ``run_eager``) — the front door is now
+        ``repro.Program(layers, params, hwc).compile(Options(...))``, which
+        also exposes the report without recomputation.
         """
         import copy
 
         from repro.core import plan as plan_mod
+        plan_mod._warn_deprecated(
+            "LightatorDevice.run",
+            "repro.Program(layers, params, input_hwc)"
+            ".compile(repro.Options(scheme=...)).run(image)")
         plan = self.compile(layers, image.shape, scheme)
-        logits = plan_mod.execute(plan, params, image)
+        logits = plan_mod._execute(plan, params, image)
         # deep copy: the plan (and its report) is shared via the global plan
         # cache; callers mutating their report must not corrupt future runs
         return logits, copy.deepcopy(plan.report)

@@ -36,11 +36,16 @@ layer IR, the [W:A] scheme, and the input shape. This module splits it out:
 ``LightatorDevice.run`` is now a thin compatibility wrapper over these two
 passes; ``launch.serve_vision`` streams frame batches through a compiled
 plan and reports measured frames/s next to the model's simulated FPS/W.
+
+The public front door over both passes is ``repro.core.program``:
+``Program.compile(Options) -> Executable`` — ``compile_model`` / ``execute``
+remain as deprecated bit-identical shims (see docs/api.md).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -222,14 +227,16 @@ def clear_plan_cache() -> None:
     _CACHE_STATS["misses"] = 0
 
 
-def compile_model(layers: Sequence, input_shape: Tuple[int, ...],
-                  scheme: WASpec | MixedPrecisionScheme,
-                  oc: ocore.OCConfig = ocore.DEFAULT_OC,
-                  circuit: pmod.CircuitConstants = pmod.DEFAULT_CIRCUIT,
-                  profile: pmod.AcceleratorProfile = pmod.LIGHTATOR_PROFILE,
-                  weight_sram_kb: float = 512.0,
-                  act_sram_kb: float = 256.0,
-                  fc_batch: int = 1) -> CompiledPlan:
+def _compile_model(layers: Sequence, input_shape: Tuple[int, ...],
+                   scheme: WASpec | MixedPrecisionScheme,
+                   oc: ocore.OCConfig = ocore.DEFAULT_OC,
+                   circuit: pmod.CircuitConstants = pmod.DEFAULT_CIRCUIT,
+                   profile: pmod.AcceleratorProfile = pmod.LIGHTATOR_PROFILE,
+                   weight_sram_kb: float = 512.0,
+                   act_sram_kb: float = 256.0,
+                   fc_batch: int = 1,
+                   conv_strategy: Optional[str] = None,
+                   conv_vmem_budget: Optional[int] = None) -> CompiledPlan:
     """Resolve specs, shapes, OC schedules and the power report — once.
 
     ``input_shape`` is the frame shape, batched [B, H, W, C] or per-frame
@@ -247,6 +254,12 @@ def compile_model(layers: Sequence, input_shape: Tuple[int, ...],
     ``fc_batch``); only the amortized terms change — per-cycle power
     breakdowns are scale-invariant in the batch. The default (1) is the
     seed's per-frame semantics, bit-identical to ``run_eager`` reports.
+
+    ``conv_strategy`` / ``conv_vmem_budget`` pin the conv execution
+    strategy explicitly (what ``repro.Options`` passes down); ``None``
+    defers to the ``REPRO_CONV_STRATEGY`` / ``REPRO_CONV_VMEM_BUDGET`` env
+    defaults. The cache key holds the *resolved* values, so an explicit
+    option equal to the ambient env default hits the same cached plan.
     """
     from repro.core.accelerator import (CASpec, ConvSpec, DenseSpec,
                                         FlattenSpec, UpsampleSpec)
@@ -257,8 +270,12 @@ def compile_model(layers: Sequence, input_shape: Tuple[int, ...],
     if len(frame_shape) != 3:
         raise ValueError(f"input_shape {input_shape} must be [B,H,W,C] or "
                          f"[H,W,C]")
+    conv_mode = (conv_strategy if conv_strategy is not None
+                 else dispatch.conv_strategy_mode())
+    conv_budget = (conv_vmem_budget if conv_vmem_budget is not None
+                   else dispatch.conv_vmem_budget())
     key = (layers, frame_shape, scheme, oc, circuit, profile,
-           weight_sram_kb, act_sram_kb, fc_batch, dispatch.conv_env_key())
+           weight_sram_kb, act_sram_kb, fc_batch, (conv_mode, conv_budget))
     cached = _PLAN_CACHE.get(key)
     if cached is not None:
         _CACHE_STATS["hits"] += 1
@@ -306,7 +323,8 @@ def compile_model(layers: Sequence, input_shape: Tuple[int, ...],
             # dims — part of the plan AND the power report (serving surfaces)
             strat = dispatch.select_conv_strategy(
                 h_out, w_out, layer.c_in, layer.c_out, layer.kernel,
-                layer.stride, groups=layer.c_in if layer.depthwise else 1)
+                layer.stride, groups=layer.c_in if layer.depthwise else 1,
+                mode=conv_mode, budget=conv_budget)
             h, w, c = h_out, w_out, layer.c_out
             if layer.pool is not None:
                 kind, size = layer.pool
@@ -468,8 +486,8 @@ def _execute_steps(steps: Tuple[PlanStep, ...], params: Dict[str, Dict],
     return x * act_scale if act_scale.ndim == 0 else x
 
 
-def execute(plan: CompiledPlan, params: Dict[str, Dict],
-            frames: jnp.ndarray) -> jnp.ndarray:
+def _execute(plan: CompiledPlan, params: Dict[str, Dict],
+             frames: jnp.ndarray) -> jnp.ndarray:
     """Run ``frames`` [B, H, W, C] through a compiled plan.
 
     Returns logits [B, n] for classifier plans, or an image [B, H', W', C']
@@ -487,3 +505,54 @@ def execute(plan: CompiledPlan, params: Dict[str, Dict],
                          f"shape {plan.frame_shape}; expected "
                          f"[B, {', '.join(map(str, plan.frame_shape))}]")
     return plan.executor()(params, frames, plan.consts)
+
+
+# ---------------------------------------------------------------------------
+# Back-compat shims
+#
+# ``core.program`` (Program / Options / Executable) is the public front door;
+# these keep the PR-1 function API working, bit-identical (they call the very
+# same internals the new API calls), with a one-shot DeprecationWarning.
+# ---------------------------------------------------------------------------
+
+_DEPRECATION_WARNED: set = set()
+
+
+def _warn_deprecated(old: str, replacement: str) -> None:
+    if old in _DEPRECATION_WARNED:
+        return
+    _DEPRECATION_WARNED.add(old)
+    warnings.warn(f"{old} is deprecated; use {replacement} "
+                  f"(see docs/api.md)", DeprecationWarning, stacklevel=3)
+
+
+def compile_model(layers: Sequence, input_shape: Tuple[int, ...],
+                  scheme: WASpec | MixedPrecisionScheme,
+                  oc: ocore.OCConfig = ocore.DEFAULT_OC,
+                  circuit: pmod.CircuitConstants = pmod.DEFAULT_CIRCUIT,
+                  profile: pmod.AcceleratorProfile = pmod.LIGHTATOR_PROFILE,
+                  weight_sram_kb: float = 512.0,
+                  act_sram_kb: float = 256.0,
+                  fc_batch: int = 1) -> CompiledPlan:
+    """Deprecated shim over the compile pass — use ``repro.Program``.
+
+    ``Program(layers, params, input_hwc).compile(Options(scheme=...))``
+    resolves the same cached plan; this wrapper keeps the full PR-1
+    signature (positional calls included) for existing callers and is
+    regression-tested bit-identical to the new path.
+    """
+    _warn_deprecated(
+        "core.plan.compile_model",
+        "repro.Program(...).compile(repro.Options(scheme=...))")
+    return _compile_model(layers, input_shape, scheme, oc=oc,
+                          circuit=circuit, profile=profile,
+                          weight_sram_kb=weight_sram_kb,
+                          act_sram_kb=act_sram_kb, fc_batch=fc_batch)
+
+
+def execute(plan: CompiledPlan, params: Dict[str, Dict],
+            frames: jnp.ndarray) -> jnp.ndarray:
+    """Deprecated shim over the execute pass — use ``Executable.run``."""
+    _warn_deprecated("core.plan.execute",
+                     "repro.Program(...).compile(...).run(frames)")
+    return _execute(plan, params, frames)

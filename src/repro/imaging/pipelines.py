@@ -3,18 +3,17 @@
 
 Each pipeline is a small program in the LightatorDevice layer IR — the same
 ``CASpec``/``ConvSpec``/``UpsampleSpec`` vocabulary the CNN models use — so
-it compiles through ``core.plan.compile_model`` into a cached plan, executes
+it compiles through the plan runtime into a cached plan, executes
 batch-first through the kernel dispatch under any [W:A] scheme, and gets a
 power/latency report from the same architecture model. The filter weights
 are fixed classical kernels (``imaging.filters``); the CA provides fused
 RGB->gray acquisition and compressive downsampling; ``UpsampleSpec`` plus an
 optional learned head provides reconstruction.
 
-    pipe = PIPELINES["edge_detect"]
-    layers, params = pipe.build(64, 64, 3)
-    plan = plan_mod.compile_model(layers, (8, 64, 64, 3), W4A4)
-    edges = plan_mod.execute(plan, params, frames)        # device path
-    ref   = apply_float(layers, params, frames)           # float oracle
+    prog = PIPELINES["edge_detect"].program(64, 64, 3)
+    exe = prog.compile(repro.Options(scheme=W4A4))
+    edges = exe.run(frames)                               # device path
+    ref = apply_float(prog.layers, prog.params, frames)   # float oracle
 """
 
 from __future__ import annotations
@@ -53,6 +52,17 @@ class ImagingPipeline:
                              f"or 3 (RGB), got {c}")
         layers, params = self.builder(h, w, c)
         return tuple(layers), params
+
+    def program(self, h: int, w: int, c: int = 3):
+        """The pipeline as a ``repro.Program`` — the unified front door.
+
+        ``PIPELINES[name].program(h, w, c).compile(Options(...))`` replaces
+        the build -> compile_model -> execute triple; ``Program.then``
+        chains pipelines into one compiled plan.
+        """
+        from repro.core.program import Program
+        layers, params = self.build(h, w, c)
+        return Program(layers, params, (h, w, c), name=self.name)
 
 
 def _gray_front(c: int):

@@ -11,7 +11,9 @@ One place decides *how* the photonic integer math actually runs:
 
 Selection order:
 
-  1. ``set_backend("pallas"|"reference"|None)`` — programmatic override.
+  1. ``set_backend("pallas"|"reference"|None)`` — programmatic override
+     (``repro.Options(backend=...)`` routes through here for the duration
+     of an ``Executable.run``).
   2. ``REPRO_KERNEL_BACKEND`` env var.
   3. default: ``pallas`` on TPU, ``reference`` everywhere else.
 
@@ -45,6 +47,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import os
+import threading
 from typing import Iterator, Optional
 
 import jax
@@ -61,15 +64,25 @@ DEFAULT_CONV_VMEM_BUDGET = 4 << 20
 _TRUTHY = ("1", "true", "yes", "on")
 _FALSY = ("0", "false", "no", "off")
 
-_backend_override: Optional[str] = None
+# Programmatic overrides are *thread-local*: an Executable pinning its
+# backend/interpret for the duration of a run must not leak the pin into
+# (or have it clobbered by) a concurrently-running Executable on another
+# thread of a threaded server.
+_overrides = threading.local()
 
 
 def default_interpret() -> bool:
     """Pallas ``interpret=`` flag: False on real TPU, True elsewhere.
 
-    ``REPRO_FORCE_INTERPRET=1`` forces interpret mode even on TPU (debugging);
-    ``REPRO_FORCE_INTERPRET=0`` forces compiled mode.
+    Resolution order: ``set_interpret`` / ``use_interpret`` programmatic
+    override (what ``repro.Options(interpret=...)`` maps to; per-thread),
+    then the ``REPRO_FORCE_INTERPRET`` env var (``1`` forces interpret mode
+    even on TPU for debugging, ``0`` forces compiled mode), then the
+    platform.
     """
+    override = getattr(_overrides, "interpret", None)
+    if override is not None:
+        return override
     env = os.environ.get("REPRO_FORCE_INTERPRET", "").strip().lower()
     if env in _TRUTHY:
         return True
@@ -78,10 +91,27 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def set_interpret(value: Optional[bool]) -> None:
+    """Force the Pallas interpret flag; ``None`` restores auto-selection."""
+    _overrides.interpret = value
+
+
+@contextlib.contextmanager
+def use_interpret(value: bool) -> Iterator[None]:
+    """Context manager form of :func:`set_interpret` (per-thread)."""
+    prev = getattr(_overrides, "interpret", None)
+    set_interpret(value)
+    try:
+        yield
+    finally:
+        set_interpret(prev)
+
+
 def get_backend() -> str:
     """Resolve the active kernel backend (see module docstring)."""
-    if _backend_override is not None:
-        return _backend_override
+    override = getattr(_overrides, "backend", None)
+    if override is not None:
+        return override
     env = os.environ.get("REPRO_KERNEL_BACKEND", "").strip().lower()
     if env:
         if env not in BACKENDS:
@@ -93,16 +123,15 @@ def get_backend() -> str:
 
 def set_backend(name: Optional[str]) -> None:
     """Force a backend programmatically; ``None`` restores auto-selection."""
-    global _backend_override
     if name is not None and name not in BACKENDS:
         raise ValueError(f"unknown backend {name!r}; expected {BACKENDS}")
-    _backend_override = name
+    _overrides.backend = name
 
 
 @contextlib.contextmanager
 def use_backend(name: str) -> Iterator[None]:
-    """Context manager form of :func:`set_backend`."""
-    prev = _backend_override
+    """Context manager form of :func:`set_backend` (per-thread)."""
+    prev = getattr(_overrides, "backend", None)
     set_backend(name)
     try:
         yield
@@ -148,13 +177,6 @@ def conv_vmem_budget() -> int:
             raise ValueError(f"REPRO_CONV_VMEM_BUDGET={env!r} must be > 0")
         return budget
     return DEFAULT_CONV_VMEM_BUDGET
-
-
-def conv_env_key() -> tuple:
-    """Everything conv-strategy resolution reads from the environment —
-    goes into the plan cache key so compiled plans never serve a stale
-    strategy after the env changes."""
-    return (conv_strategy_mode(), conv_vmem_budget())
 
 
 def _strip_geometry(h_out: int, w_out: int, c_in: int, kernel: int,

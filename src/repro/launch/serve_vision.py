@@ -1,6 +1,7 @@
 """Batched streaming vision driver over the compiled device pipeline.
 
-Two serving modes, same compiled runtime:
+Two serving modes, one API (``repro.Program`` / ``Options`` /
+``Executable``):
 
     # CNN classification (the paper's Table-1 models)
     PYTHONPATH=src python -m repro.launch.serve_vision \
@@ -10,18 +11,24 @@ Two serving modes, same compiled runtime:
     PYTHONPATH=src python -m repro.launch.serve_vision \
         --pipeline edge_detect --batch 8 --batches 50
 
-Compiles once (``core.plan.compile_model``), then streams host frame batches
-through the single jitted execute pass with *double-buffered* feeding: batch
-i+1 is transferred and dispatched while batch i is still in flight, and the
-host only blocks on the oldest outstanding batch (``--depth`` controls the
-in-flight window; ``--depth 0`` forces the old synchronous feed for
-comparison). Reports measured steady-state frames/s next to the power
-model's simulated device FPS and kFPS/W — and, for imaging pipelines, the
-PSNR of the quantized device output against the float reference path.
+Compiles once (``Program.compile(Options) -> Executable``), then streams
+host frame batches through the single jitted execute pass with
+*double-buffered* feeding: batch i+1 is transferred and dispatched while
+batch i is still in flight, and the host only blocks on the oldest
+outstanding batch (``--depth`` controls the in-flight window; ``--depth 0``
+forces the old synchronous feed for comparison). Reports measured
+steady-state frames/s next to the power model's simulated device FPS and
+kFPS/W — and, for imaging pipelines, the PSNR of the quantized device
+output against the float reference path.
+
+The kernel backend and conv strategy are serving flags now (``--backend``,
+``--conv-strategy``), mapped through ``Options`` — no env vars needed —
+and the run header prints the fully *resolved* options, so the effective
+configuration is always visible in logs.
 
 FC layers are scheduled at the served batch size (``fc_batch=--batch``) so
 weight-remap DAC settles amortize across the batch; the report stays
-per-frame (see ``core.plan.compile_model``).
+per-frame (see ``docs/api.md``).
 
 NB: the CRC calibration scale is per-tensor (batch included) to stay
 bit-identical with the reference interpreter, so logits depend mildly on
@@ -40,18 +47,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import plan as plan_mod
+from repro.core.program import Executable, Options
 from repro.core.quant import W4A4, W3A4, W2A4, MX_43, MX_42
-from repro.models.vision import MODEL_INPUT_HWC, VISION_MODELS, init_vision
+from repro.kernels import dispatch
+from repro.models.vision import MODEL_INPUT_HWC, vision_program
 
 SCHEMES = {"w4a4": W4A4, "w3a4": W3A4, "w2a4": W2A4,
            "mx43": MX_43, "mx42": MX_42}
 
 
-def stream(plan: plan_mod.CompiledPlan, params,
-           host_batches: List[np.ndarray], n_batches: int,
+def stream(exe: Executable, host_batches: List[np.ndarray], n_batches: int,
            depth: int = 2) -> float:
-    """Feed ``n_batches`` host batches through the plan -> frames/s.
+    """Feed ``n_batches`` host batches through the executable -> frames/s.
 
     Double-buffered: each iteration transfers + dispatches the next batch,
     then blocks only on the result ``depth`` batches back, so host->device
@@ -62,13 +69,12 @@ def stream(plan: plan_mod.CompiledPlan, params,
     """
     batch = host_batches[0].shape[0]
     # warmup: trace + compile, and fill device caches
-    plan_mod.execute(plan, params,
-                     jnp.asarray(host_batches[0])).block_until_ready()
+    exe.run(jnp.asarray(host_batches[0])).block_until_ready()
     inflight: collections.deque = collections.deque()
     t0 = time.perf_counter()
     for i in range(n_batches):
         frames = jax.device_put(host_batches[i % len(host_batches)])
-        out = plan_mod.execute(plan, params, frames)
+        out = exe.run(frames)
         inflight.append(out)
         if len(inflight) > depth:
             inflight.popleft().block_until_ready()
@@ -99,6 +105,17 @@ def main(argv=None):
                     help="imaging frame height/width (pipeline mode)")
     ap.add_argument("--depth", type=int, default=2,
                     help="in-flight batches (0 = synchronous feeding)")
+    ap.add_argument("--backend", default=None,
+                    choices=sorted(dispatch.BACKENDS),
+                    help="kernel backend (default: REPRO_KERNEL_BACKEND / "
+                         "auto: pallas on TPU, reference elsewhere)")
+    ap.add_argument("--conv-strategy", default=None,
+                    choices=sorted(dispatch.CONV_STRATEGIES),
+                    help="conv execution strategy (default: "
+                         "REPRO_CONV_STRATEGY / auto VMEM heuristic)")
+    ap.add_argument("--shard-batch", action="store_true",
+                    help="shard the batch axis over local devices "
+                         "(no-op on 1 device)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.batch < 1 or args.batches < 1:
@@ -106,38 +123,36 @@ def main(argv=None):
     if args.depth < 0:
         ap.error("--depth must be >= 0")
 
-    scheme = SCHEMES[args.scheme]
+    options = Options(scheme=SCHEMES[args.scheme], fc_batch=args.batch,
+                      backend=args.backend, conv_strategy=args.conv_strategy,
+                      shard_batch=args.shard_batch)
 
     if args.pipeline is not None:
         from repro.imaging import PIPELINES, apply_float, psnr
         if args.pipeline not in PIPELINES:
             ap.error(f"unknown pipeline {args.pipeline!r}; "
                      f"choose from {sorted(PIPELINES)}")
-        pipe = PIPELINES[args.pipeline]
-        h = w = args.size
-        c = 3
-        layers, params = pipe.build(h, w, c)
+        prog = PIPELINES[args.pipeline].program(args.size, args.size, 3)
         host_batches = [_imaging_frames(args.batch, args.size, args.seed + i)
                         for i in range(2)]
-        name = f"pipeline={pipe.name}"
+        name = f"pipeline={prog.name}"
     else:
-        h, w, c = MODEL_INPUT_HWC[args.model]
-        layers = VISION_MODELS[args.model]()
-        params = init_vision(jax.random.PRNGKey(args.seed), layers)
+        prog = vision_program(args.model, key=jax.random.PRNGKey(args.seed))
+        h, w, c = prog.input_hwc
         rng = np.random.default_rng(args.seed + 1)
         host_batches = [rng.random((args.batch, h, w, c), np.float32)
                         for _ in range(2)]
         name = f"model={args.model}"
 
     t0 = time.perf_counter()
-    plan = plan_mod.compile_model(tuple(layers), (args.batch, h, w, c),
-                                  scheme, fc_batch=args.batch)
+    exe = prog.compile(options)
     t_compile = time.perf_counter() - t0
-    fps = stream(plan, params, host_batches, args.batches, depth=args.depth)
+    fps = stream(exe, host_batches, args.batches, depth=args.depth)
 
-    r = plan.report
-    print(f"[serve_vision] {name} {scheme.name} batch={args.batch} "
-          f"depth={args.depth} compile={t_compile * 1e3:.1f}ms")
+    r = exe.report
+    print(f"[serve_vision] {name} batch={args.batch} depth={args.depth} "
+          f"compile={t_compile * 1e3:.1f}ms")
+    print(f"[serve_vision] options: {options.describe()}")
     if r.conv_strategy:
         strat = " ".join(
             f"{n}={v['kind']}" + (f"({v['n_strips']}x{v['strip_rows']}rows)"
@@ -150,10 +165,10 @@ def main(argv=None):
           f"{r.kfps_per_w:.1f} kFPS/W")
     if args.pipeline is not None:
         frames = jnp.asarray(host_batches[0])
-        out = plan_mod.execute(plan, params, frames)
-        ref = apply_float(layers, params, frames)
+        out = exe.run(frames)
+        ref = apply_float(prog.layers, prog.params, frames)
         print(f"[serve_vision] quantized-vs-float PSNR "
-              f"{float(psnr(ref, out)):.2f} dB ({pipe.description})")
+              f"{float(psnr(ref, out)):.2f} dB")
     return fps
 
 

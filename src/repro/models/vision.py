@@ -151,6 +151,25 @@ MODEL_INPUT_HWC = {
 }
 
 
+def vision_program(name: str, key=None, params: Optional[Dict] = None):
+    """A paper CNN as a ``repro.Program`` (the unified front door).
+
+    ``params`` reuses trained weights; otherwise the model is initialized
+    from ``key`` (default ``PRNGKey(0)``). Only the executable IRs appear —
+    alexnet stays schedule-only (see ``MODEL_INPUT_HWC``).
+    """
+    from repro.core.program import Program
+    if name not in MODEL_INPUT_HWC:
+        raise ValueError(
+            f"unknown or schedule-only model {name!r}; executable models: "
+            f"{sorted(MODEL_INPUT_HWC)}")
+    layers = tuple(VISION_MODELS[name]())
+    if params is None:
+        params = init_vision(key if key is not None else jax.random.PRNGKey(0),
+                             layers)
+    return Program(layers, params, MODEL_INPUT_HWC[name], name=name)
+
+
 # ---------------------------------------------------------------------------
 # Trainable QAT forward (application level)
 # ---------------------------------------------------------------------------

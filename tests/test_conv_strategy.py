@@ -9,11 +9,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import repro
 from repro.core import plan as plan_mod
 from repro.core.accelerator import ConvSpec
 from repro.core.quant import W4A4
 from repro.kernels import dispatch
-from repro.models.vision import vgg16_ir
+from repro.models.vision import vision_program
 
 
 # -- heuristic ---------------------------------------------------------------
@@ -71,7 +72,9 @@ def test_budget_env_shrinks_strips(monkeypatch):
 def test_vgg16_plan_records_mixed_strategies():
     """The Fig. 10 model compiles with per-layer strategies: early 224x224
     convs strip-mined, late 14x14 convs resident — all in plan AND report."""
-    plan = plan_mod.compile_model(tuple(vgg16_ir()), (1, 224, 224, 3), W4A4)
+    # params={} skips weight init: the plan (and this test) only needs the IR
+    exe = vision_program("vgg16", params={}).compile(repro.Options(scheme=W4A4))
+    plan = exe.plan
     conv_steps = {s.name: s for s in plan.steps
                   if isinstance(s, plan_mod.ConvStep)}
     assert conv_steps["conv1"].strategy.kind == "strip"
@@ -84,16 +87,21 @@ def test_vgg16_plan_records_mixed_strategies():
 
 
 def test_plan_cache_keys_on_strategy_env(monkeypatch):
-    layers = (ConvSpec("c", 1, 4, kernel=3),)
+    prog = repro.Program((ConvSpec("c", 1, 4, kernel=3),), {}, (16, 16, 1))
+    opts = repro.Options(scheme=W4A4)
     monkeypatch.delenv("REPRO_CONV_STRATEGY", raising=False)
-    p_auto = plan_mod.compile_model(layers, (1, 16, 16, 1), W4A4)
+    p_auto = prog.compile(opts).plan
     assert p_auto.steps[0].strategy.kind == "resident"
     monkeypatch.setenv("REPRO_CONV_STRATEGY", "strip")
-    p_strip = plan_mod.compile_model(layers, (1, 16, 16, 1), W4A4)
+    p_strip = prog.compile(opts).plan
     assert p_strip is not p_auto            # env is part of the cache key
     assert p_strip.steps[0].strategy.kind == "strip"
+    # an explicit Options strategy beats the env and keys the cache the
+    # same way the equivalent env setting does
+    assert prog.compile(repro.Options(
+        scheme=W4A4, conv_strategy="strip")).plan is p_strip
     monkeypatch.delenv("REPRO_CONV_STRATEGY")
-    assert plan_mod.compile_model(layers, (1, 16, 16, 1), W4A4) is p_auto
+    assert prog.compile(opts).plan is p_auto
 
 
 def test_eager_report_matches_compiled_under_forced_strip(monkeypatch):
@@ -138,13 +146,13 @@ def test_strip_plan_execute_large_frame_matches_reference_backend():
     frames = jax.random.uniform(jax.random.PRNGKey(2), (1, 256, 256, 2))
     params = {"edge": {"w": jax.random.normal(jax.random.PRNGKey(3),
                                               (3, 3, 2, 4)) * 0.2}}
-    plan = plan_mod.compile_model(layers, frames.shape, W4A4)
-    assert plan.steps[0].strategy.kind == "strip"
-    with dispatch.use_backend("reference"):
-        ref = plan_mod.execute(plan, params, frames)
-    with dispatch.use_backend("pallas"):
-        pal = plan_mod.execute(plan, params, frames)
-    np.testing.assert_array_equal(np.asarray(ref), np.asarray(pal))
+    prog = repro.Program(layers, params, (256, 256, 2))
+    ref_exe = prog.compile(repro.Options(scheme=W4A4, backend="reference"))
+    pal_exe = prog.compile(repro.Options(scheme=W4A4, backend="pallas"))
+    assert ref_exe.plan is pal_exe.plan     # backend is not a compile key
+    assert ref_exe.plan.steps[0].strategy.kind == "strip"
+    np.testing.assert_array_equal(np.asarray(ref_exe.run(frames)),
+                                  np.asarray(pal_exe.run(frames)))
 
 
 def test_strided_valid_exact_tiling_no_crash():

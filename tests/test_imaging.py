@@ -11,7 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import plan as plan_mod
+import repro
 from repro.core.accelerator import ConvSpec, UpsampleSpec
 from repro.core.quant import W4A4
 from repro.imaging import (PIPELINES, apply_float, fit_recon_head,
@@ -127,17 +127,16 @@ PSNR_FLOORS = {
 
 @pytest.mark.parametrize("name", sorted(PIPELINES))
 def test_quantized_tracks_float(frames, name):
-    pipe = PIPELINES[name]
-    layers, params = pipe.build(HW, HW, 3)
-    plan = plan_mod.compile_model(layers, frames.shape, W4A4)
-    out = plan_mod.execute(plan, params, frames)
-    ref = apply_float(layers, params, frames)
+    exe = PIPELINES[name].program(HW, HW, 3).compile(
+        repro.Options(scheme=W4A4))
+    out = exe.run(frames)
+    ref = apply_float(exe.program.layers, exe.program.params, frames)
     assert out.shape == ref.shape
     p = float(psnr(ref, out))
     assert p > PSNR_FLOORS[name], f"{name}: PSNR {p:.2f} dB under floor"
     assert float(ssim(ref, out)) > 0.5
     # image-valued plans report spatial outputs, power report is populated
-    assert out.ndim == 4 and plan.report.fps > 0
+    assert out.ndim == 4 and exe.report.fps > 0
 
 
 def test_registry_entries_consistent():
@@ -151,10 +150,9 @@ def test_registry_entries_consistent():
 def test_pipelines_accept_grayscale_input(frames):
     gray = gray_target(frames)
     for name in ("edge_detect", "denoise_box", "compress_recon"):
-        layers, params = PIPELINES[name].build(HW, HW, 1)
-        plan = plan_mod.compile_model(layers, gray.shape, W4A4)
-        out = plan_mod.execute(plan, params, gray)
-        ref = apply_float(layers, params, gray)
+        prog = PIPELINES[name].program(HW, HW, 1)
+        out = prog.compile(repro.Options(scheme=W4A4)).run(gray)
+        ref = apply_float(prog.layers, prog.params, gray)
         assert out.shape == ref.shape
         assert float(psnr(ref, out)) > 15.0
 
@@ -193,30 +191,30 @@ def test_depthwise_conv_int_backends_agree():
 def test_depthwise_requires_matching_channels():
     layers = (ConvSpec("dw", 3, 4, kernel=3, depthwise=True),)
     with pytest.raises(ValueError, match="depthwise"):
-        plan_mod.compile_model(layers, (1, 8, 8, 3), W4A4)
+        repro.Program(layers, {}, (8, 8, 3)).compile()
 
 
 def test_upsample_step_shapes_and_schedule():
     from repro.core.compressive import upsample_reconstruct
     layers = (UpsampleSpec(factor=2, method="bilinear"),)
-    plan = plan_mod.compile_model(layers, (1, 8, 8, 1), W4A4)
-    assert plan.schedules[-1].kind == "ca"          # preset banks, no remaps
-    assert plan.schedules[-1].weight_remaps == 0
+    exe = repro.Program(layers, {}, (8, 8, 1)).compile(
+        repro.Options(scheme=W4A4))
+    assert exe.plan.schedules[-1].kind == "ca"      # preset banks, no remaps
+    assert exe.plan.schedules[-1].weight_remaps == 0
     x = jax.random.uniform(jax.random.PRNGKey(4), (1, 8, 8, 1))
-    out = plan_mod.execute(plan, {}, x)
+    out = exe.run(x)
     assert out.shape == (1, 16, 16, 1)
     # quantization aside, the step is the shared upsample_reconstruct
     ref = upsample_reconstruct(x, 2, "bilinear")
     assert float(psnr(ref, out)) > 25.0
     with pytest.raises(ValueError, match="method"):
-        plan_mod.compile_model((UpsampleSpec(2, "bicubic"),), (1, 8, 8, 1),
-                               W4A4)
+        repro.Program((UpsampleSpec(2, "bicubic"),), {}, (8, 8, 1)).compile()
     # multi-channel upsample: windows (and the report's cycle count) scale
     # with C — each channel interpolates independently on the preset banks
-    p3 = plan_mod.compile_model(layers, (1, 8, 8, 3), W4A4)
-    assert p3.schedules[-1].cycles == 3 * plan.schedules[-1].cycles
-    out3 = plan_mod.execute(p3, {}, jax.random.uniform(
-        jax.random.PRNGKey(5), (1, 8, 8, 3)))
+    e3 = repro.Program(layers, {}, (8, 8, 3)).compile(
+        repro.Options(scheme=W4A4))
+    assert e3.plan.schedules[-1].cycles == 3 * exe.plan.schedules[-1].cycles
+    out3 = e3.run(jax.random.uniform(jax.random.PRNGKey(5), (1, 8, 8, 3)))
     assert out3.shape == (1, 16, 16, 3)
 
 

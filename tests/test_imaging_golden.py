@@ -15,10 +15,9 @@ from pathlib import Path
 import numpy as np
 import pytest
 
-from repro.core import plan as plan_mod
+import repro
 from repro.core.quant import W4A4
 from repro.imaging import PIPELINES, apply_float
-from repro.kernels import dispatch
 
 GOLDEN_DIR = Path(__file__).resolve().parent / "golden"
 
@@ -34,17 +33,15 @@ def test_every_pipeline_has_a_golden_file():
 def test_pipeline_matches_golden(name):
     data = np.load(GOLDEN_DIR / f"{name}.npz")
     frames = data["frames"]            # goldens are self-contained
-    layers, params = PIPELINES[name].build(int(data["hw"]), int(data["hw"]),
-                                           3)
-    got_float = np.asarray(apply_float(layers, params, frames), np.float32)
+    prog = PIPELINES[name].program(int(data["hw"]), int(data["hw"]), 3)
+    got_float = np.asarray(apply_float(prog.layers, prog.params, frames),
+                           np.float32)
     np.testing.assert_allclose(got_float, data["float_out"],
                                rtol=1e-5, atol=1e-5,
                                err_msg=f"{name}: float path drifted from "
                                        f"golden")
-    with dispatch.use_backend("reference"):
-        plan = plan_mod.compile_model(layers, frames.shape, W4A4)
-        got_quant = np.asarray(plan_mod.execute(plan, params, frames),
-                               np.float32)
+    exe = prog.compile(repro.Options(scheme=W4A4, backend="reference"))
+    got_quant = np.asarray(exe.run(frames), np.float32)
     np.testing.assert_allclose(got_quant, data["quant_out"],
                                rtol=1e-5, atol=1e-5,
                                err_msg=f"{name}: quantized device path "
