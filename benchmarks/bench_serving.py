@@ -1,0 +1,156 @@
+"""Serving-runtime benchmark: latency/throughput under offered load.
+
+Three measurements into ``BENCH_serving.json`` (all on the deterministic
+``reference`` backend so the numbers are comparable across machines):
+
+* **capacity** — the service ceiling: closed-loop saturation (every
+  submit under backpressure, server permanently backlogged) through the
+  full micro-batching scheduler, per program.
+* **offered-load sweep** — open-loop Poisson arrivals at fractions of
+  that capacity; per point: p50/p95/p99 client-side latency, achieved
+  request rate, sheds/rejections, padding waste. The latency curve's
+  knee as offered load crosses capacity is the serving story.
+* **batch-bucket ablation** — the acceptance gate: the same saturating
+  workload served request-at-a-time (``max_batch=1``, buckets ``(1,)``)
+  vs micro-batched; micro-batching must sustain >= 2x the frames/s.
+
+Run: ``PYTHONPATH=src python -m benchmarks.bench_serving [--quick]``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import sys
+from pathlib import Path
+
+import jax
+import numpy as np
+
+import repro
+from repro import serve
+from repro.core.quant import W4A4
+
+SCHEMA_VERSION = 1
+OUT_PATH = Path(__file__).resolve().parent / "BENCH_serving.json"
+LOAD_FRACTIONS = (0.25, 0.5, 1.0, 1.5)
+PROGRAMS = ("lenet", "edge_detect")
+
+
+def _program(name: str) -> repro.Program:
+    if name == "lenet":
+        return repro.Program.from_model("lenet",
+                                        key=jax.random.PRNGKey(0))
+    return repro.Program.from_pipeline(name, 32, 32, 3)
+
+
+def _pool(prog: repro.Program, n: int = 32, seed: int = 0) -> np.ndarray:
+    h, w, c = prog.input_hwc
+    rng = np.random.default_rng(seed)
+    return rng.random((n, h, w, c)).astype(np.float32)
+
+
+def _server(progs, max_batch: int, buckets=None,
+            max_wait_ms: float = 2.0) -> serve.Server:
+    srv = serve.Server(serve.ServeConfig(
+        max_batch=max_batch, max_wait_ms=max_wait_ms,
+        max_queue=max(16 * max_batch, 128)))
+    options = repro.Options(scheme=W4A4, backend="reference")
+    for name, prog in progs.items():
+        srv.register(name, prog, options, buckets=buckets)
+    return srv.start(warm=True)
+
+
+def run(csv: bool = True, quick: bool = False,
+        max_batch: int = 16, n_requests: int = 300):
+    if quick:
+        n_requests = 80
+    progs = {name: _program(name) for name in PROGRAMS}
+    pools = {name: _pool(prog) for name, prog in progs.items()}
+    out_lines = []
+
+    # -- capacity: closed-loop saturation through the micro-batcher --------
+    capacity = {}
+    for name in PROGRAMS:
+        srv = _server({name: progs[name]}, max_batch)
+        # best of two: the first saturation still pays residual process
+        # warm-up (allocator growth, first host->device copies), which
+        # would understate the capacity the sweep loads are scaled from
+        fps = max(
+            serve.saturate(srv, name, pools[name],
+                           n_requests=n_requests).achieved_fps
+            for _ in range(2))
+        srv.stop()
+        capacity[name] = fps
+        out_lines.append(
+            f"bench_serving.capacity.{name},{1e6 / fps:.0f},fps={fps:.0f}")
+
+    # -- offered-load sweep (Poisson, open loop) on the primary program ----
+    primary = PROGRAMS[0]
+    sweep = []
+    for frac in LOAD_FRACTIONS:
+        rate = frac * capacity[primary]
+        srv = _server({primary: progs[primary]}, max_batch)
+        rep = serve.poisson_load(srv, primary, pools[primary],
+                                 rate_rps=rate, n_requests=n_requests,
+                                 seed=7)
+        snap = srv.stats()["programs"][primary]
+        srv.stop()
+        point = dataclasses.asdict(rep)
+        point["load_fraction"] = frac
+        point["padding_waste"] = snap["padding_waste"]
+        point["avg_batch"] = snap["avg_batch"]
+        sweep.append(point)
+        lat = rep.latency_ms
+        out_lines.append(
+            f"bench_serving.sweep.{primary}.x{frac:g},"
+            f"{lat.get('p50', 0) * 1e3:.0f},"
+            f"offered={rate:.0f}rps;achieved={rep.achieved_rps:.0f}rps;"
+            f"p50={lat.get('p50', 0):.2f}ms;p95={lat.get('p95', 0):.2f}ms;"
+            f"p99={lat.get('p99', 0):.2f}ms;shed={rep.shed};"
+            f"rejected={rep.rejected};avg_batch={snap['avg_batch']:.1f}")
+
+    # -- ablation: request-at-a-time vs micro-batched at saturation --------
+    srv1 = _server({primary: progs[primary]}, max_batch=1, buckets=(1,))
+    rep1 = serve.saturate(srv1, primary, pools[primary],
+                          n_requests=n_requests)
+    srv1.stop()
+    srvN = _server({primary: progs[primary]}, max_batch)
+    repN = serve.saturate(srvN, primary, pools[primary],
+                          n_requests=n_requests)
+    snapN = srvN.stats()["programs"][primary]
+    srvN.stop()
+    speedup = repN.achieved_fps / max(rep1.achieved_fps, 1e-9)
+    ablation = {
+        "program": primary,
+        "batch1_fps": rep1.achieved_fps,
+        "microbatch_fps": repN.achieved_fps,
+        "max_batch": max_batch,
+        "avg_batch": snapN["avg_batch"],
+        "speedup": speedup,
+    }
+    out_lines.append(
+        f"bench_serving.ablation.{primary},"
+        f"{1e6 / repN.achieved_fps:.0f},"
+        f"batch1_fps={rep1.achieved_fps:.0f};"
+        f"microbatch_fps={repN.achieved_fps:.0f};speedup={speedup:.2f}x")
+
+    payload = {
+        "schema_version": SCHEMA_VERSION,
+        "backend": "reference",
+        "host": jax.default_backend(),
+        "max_batch": max_batch,
+        "n_requests": n_requests,
+        "capacity_fps": capacity,
+        "sweep": sweep,
+        "ablation": ablation,
+    }
+    OUT_PATH.write_text(json.dumps(payload, indent=2) + "\n")
+    if csv:
+        print("\n".join(out_lines))
+        print(f"bench_serving.json,0.0,path={OUT_PATH}")
+    return payload
+
+
+if __name__ == "__main__":
+    run(quick="--quick" in sys.argv)

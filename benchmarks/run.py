@@ -8,6 +8,7 @@
 #   bench_kernels   Pallas kernels vs oracles
 #   bench_pipeline  eager vs compiled device pipeline frames/s (core.plan)
 #   bench_imaging   imaging pipelines frames/s + PSNR/SSIM per scheme
+#   bench_serving   serving runtime: offered-load sweep + batching ablation
 
 import sys
 
@@ -15,7 +16,8 @@ import sys
 def main() -> None:
     from benchmarks import (bench_table1, bench_fig8, bench_fig9,
                             bench_fig10, bench_accuracy, bench_kernels,
-                            bench_lm_photonic, bench_pipeline, bench_imaging)
+                            bench_lm_photonic, bench_pipeline, bench_imaging,
+                            bench_serving)
     bench_table1.run()
     bench_fig8.run()
     bench_fig9.run()
@@ -28,6 +30,7 @@ def main() -> None:
     bench_pipeline.run(batches=(1, 8) if quick else bench_pipeline.BATCHES)
     bench_imaging.run(pipelines=("edge_detect", "compress_recon")
                       if quick else None)
+    bench_serving.run(quick=quick)
 
 
 if __name__ == '__main__':

@@ -15,8 +15,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import smoke_variant
-from repro.launch.serve import generate
 from repro.models import lm as lm_mod
+from repro.models.lm import greedy_generate as generate
 
 
 def main():

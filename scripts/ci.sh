@@ -6,6 +6,14 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
+# repo hygiene: bytecode caches must never be tracked (.gitignore covers
+# them, but files committed before the ignore rule — or force-added —
+# slip through silently)
+if git ls-files | grep -E '(^|/)__pycache__/|\.pyc$'; then
+    echo "ci.sh: FAIL — git-tracked __pycache__/*.pyc above; git rm them" >&2
+    exit 1
+fi
+
 if [[ "${1:-}" == "--slow" ]]; then
     python -m pytest -x -q -m ""
 else
@@ -18,11 +26,17 @@ python scripts/check_docs.py
 # conv kernels again with the strip-mined strategy forced (large-frame path)
 REPRO_CONV_STRATEGY=strip python -m pytest tests/test_kernels_conv_bank.py -q
 
-# end-to-end serving smoke (2 batches each): imaging pipeline + CNN,
-# exercising the Options-mapped CLI flags
+# end-to-end serving smoke: imaging pipeline + CNN through the repro.serve
+# micro-batching runtime, exercising the Options-mapped CLI flags
 python -m repro.launch.serve_vision --pipeline edge_detect --batch 2 \
     --batches 2 --size 32 --backend reference --conv-strategy auto
 python -m repro.launch.serve_vision --model lenet --batch 2 --batches 2
+
+# serve-runtime smoke: ~32 async Poisson requests through the scheduler;
+# serve_vision asserts every request is accounted for (served + shed +
+# rejected) before printing the latency percentiles
+python -m repro.launch.serve_vision --model lenet --load 200 --requests 32 \
+    --batch 4 --backend reference
 
 # example smoke: the Program/Options/Executable walkthroughs must keep
 # running as written in the docs

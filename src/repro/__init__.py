@@ -8,6 +8,8 @@ Layers:
                 compressive acquisition, bank-mapped convolution)
   imaging/      fixed-function image-processing pipelines (optical filters +
                 CA compression/reconstruction) compiled on the plan runtime
+  serve/        production serving runtime: multi-program router + async
+                micro-batching scheduler over compiled Executables
   distributed/  sharding rules, collectives, fault tolerance, elastic scaling
   optim/, checkpoint/, data/   training substrate
   configs/      assigned architectures + the paper's own CNNs

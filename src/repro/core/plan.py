@@ -82,10 +82,26 @@ def _nofma(x: jnp.ndarray) -> jnp.ndarray:
     return jnp.nextafter(x, x)
 
 
-def _crc_requant_traced(x: jnp.ndarray, a_qmax: jnp.ndarray):
-    """`accelerator._crc_requant` with the divisor as a traced scalar."""
+def _crc_requant_traced(x: jnp.ndarray, a_qmax: jnp.ndarray,
+                        per_frame: bool = False):
+    """`accelerator._crc_requant` with the divisor as a traced scalar.
+
+    ``per_frame=False`` is the seed semantics: ONE scale from a max over the
+    whole tensor, batch axis included — a frame's codes depend on the other
+    frames in its batch. ``per_frame=True`` reduces the max over each
+    frame's own axes instead (scale shape [B, 1, ...]), the hardware's
+    frame-per-pass calibration: every frame's numerics become independent
+    of batch composition, which is what lets the serving micro-batcher
+    coalesce and pad requests without perturbing anyone's results. At
+    batch 1 the two modes are the same reduction — bit-identical.
+    """
     x = jnp.maximum(x, 0.0)
-    scale = jnp.maximum(jnp.max(x), 1e-8) / a_qmax
+    if per_frame:
+        axes = tuple(range(1, x.ndim))
+        amax = jnp.max(x, axis=axes, keepdims=True)
+    else:
+        amax = jnp.max(x)
+    scale = jnp.maximum(amax, 1e-8) / a_qmax
     codes = jnp.clip(jnp.round(x / scale), 0, (1 << ACT_BITS) - 1)
     return codes, scale
 
@@ -191,20 +207,24 @@ class CompiledPlan:
     _exec_fns: Dict[str, object] = dataclasses.field(default_factory=dict,
                                                      repr=False)
 
-    def executor(self):
+    def executor(self, per_frame: bool = False):
         """The jitted (params, frames) -> logits function for this plan.
 
         Keyed by the active kernel backend AND the Pallas interpret flag:
         both are baked in at trace time, so switching either (set_backend /
         REPRO_KERNEL_BACKEND / REPRO_FORCE_INTERPRET) gets its own jitted
         executable instead of silently reusing the old trace.
+
+        ``per_frame`` keys a third trace family: the per-frame-calibrated
+        executor (CRC requant scales reduced per frame, not per tensor)
+        that the serving micro-batcher runs — see ``_crc_requant_traced``.
         """
-        key = (dispatch.get_backend(), dispatch.default_interpret())
+        key = (dispatch.get_backend(), dispatch.default_interpret(), per_frame)
         fn = self._exec_fns.get(key)
         if fn is None:
             fn = jax.jit(
                 lambda params, frames, consts: _execute_steps(
-                    self.steps, params, frames, consts))
+                    self.steps, params, frames, consts, per_frame=per_frame))
             self._exec_fns[key] = fn
         return fn
 
@@ -419,7 +439,8 @@ def _compile_model(layers: Sequence, input_shape: Tuple[int, ...],
 # ---------------------------------------------------------------------------
 
 def _execute_steps(steps: Tuple[PlanStep, ...], params: Dict[str, Dict],
-                   frames: jnp.ndarray, consts: Dict[str, object]) -> jnp.ndarray:
+                   frames: jnp.ndarray, consts: Dict[str, object],
+                   per_frame: bool = False) -> jnp.ndarray:
     """The device forward, batch-first, kernels via ``kernels.dispatch``.
 
     Numerics contract: bit-identical to ``LightatorDevice.run_eager`` (on
@@ -429,11 +450,20 @@ def _execute_steps(steps: Tuple[PlanStep, ...], params: Dict[str, Dict],
     every dequant/activation/requant expression keeps the eager path's
     association order, with traced divisors + ``_nofma`` guards
     neutralizing the jit-only rewrites (see module-top note).
+
+    ``per_frame`` switches every CRC requant to per-frame calibration
+    (scale shape [B, 1, ...] instead of a batch-shared scalar): each
+    frame's result becomes a pure function of that frame alone — the
+    invariant the serving micro-batcher's pad/coalesce soundness rests on.
+    Everything between requants is already per-frame independent (the MAC
+    accumulates are exact integers, the dequant/activation chain is
+    elementwise), so a frame served at any batch position is bit-identical
+    to the same frame run at batch 1.
     """
     from repro.core.accelerator import _activation
 
     a_qmax = consts["a_qmax"]
-    codes, act_scale = _crc_requant_traced(frames, a_qmax)
+    codes, act_scale = _crc_requant_traced(frames, a_qmax, per_frame)
     x = codes
     for step in steps:
         if isinstance(step, CAStep):
@@ -441,7 +471,7 @@ def _execute_steps(steps: Tuple[PlanStep, ...], params: Dict[str, Dict],
             g = dispatch.ca_acquire(intens, step.pool, step.rgb_to_gray)
             if g.ndim == 3:
                 g = g[..., None]
-            x, act_scale = _crc_requant_traced(g, a_qmax)
+            x, act_scale = _crc_requant_traced(g, a_qmax, per_frame)
         elif isinstance(step, ConvStep):
             p = params[step.name]
             wq, ws = _quantize_weight_traced(p["w"], step.wa,
@@ -458,16 +488,16 @@ def _execute_steps(steps: Tuple[PlanStep, ...], params: Dict[str, Dict],
                 b_, h_, w_, c_ = y.shape
                 yr = y.reshape(b_, h_ // size, size, w_ // size, size, c_)
                 y = yr.max(axis=(2, 4)) if kind == "max" else yr.mean(axis=(2, 4))
-            x, act_scale = _crc_requant_traced(y, a_qmax)
+            x, act_scale = _crc_requant_traced(y, a_qmax, per_frame)
         elif isinstance(step, UpsampleStep):
             from repro.core.compressive import upsample_reconstruct
             intens = x * act_scale
             up = upsample_reconstruct(intens, step.factor, step.method)
-            x, act_scale = _crc_requant_traced(up, a_qmax)
+            x, act_scale = _crc_requant_traced(up, a_qmax, per_frame)
         elif isinstance(step, FlattenStep):
             intens = x * act_scale
             flat = intens.reshape(intens.shape[0], -1)
-            x, act_scale = _crc_requant_traced(flat, a_qmax)
+            x, act_scale = _crc_requant_traced(flat, a_qmax, per_frame)
         elif isinstance(step, DenseStep):
             p = params[step.name]
             wq, ws = _quantize_weight_traced(p["w"], step.wa,
@@ -478,21 +508,29 @@ def _execute_steps(steps: Tuple[PlanStep, ...], params: Dict[str, Dict],
                 out = _nofma(out) + p["b"]
             if step.act != "none":
                 y = _activation(out, step.act)
-                x, act_scale = _crc_requant_traced(y, a_qmax)
+                x, act_scale = _crc_requant_traced(y, a_qmax, per_frame)
             else:
                 x, act_scale = out, jnp.asarray(1.0)
         else:
             raise TypeError(f"unknown plan step {step!r}")
-    return x * act_scale if act_scale.ndim == 0 else x
+    # dequantize the final stage (act_scale is 1.0 after a no-act dense, a
+    # scalar per-tensor scale, or a [B, 1, ...] per-frame scale — all
+    # broadcast-exact, and the per-tensor multiply is the seed expression)
+    return x * act_scale
 
 
 def _execute(plan: CompiledPlan, params: Dict[str, Dict],
-             frames: jnp.ndarray) -> jnp.ndarray:
+             frames: jnp.ndarray, per_frame: bool = False) -> jnp.ndarray:
     """Run ``frames`` [B, H, W, C] through a compiled plan.
 
     Returns logits [B, n] for classifier plans, or an image [B, H', W', C']
     for plans whose last step is spatial (the ``repro.imaging`` pipelines) —
     the dequantized intensities of the final CRC stage.
+
+    ``per_frame`` selects the per-frame-calibrated executor (the serving
+    micro-batcher's batch-composition-independent semantics — see
+    ``_crc_requant_traced``); the default is the seed's per-tensor
+    calibration.
 
     The underlying function is jitted once per plan; repeated calls with the
     same frame shape reuse the XLA executable (no re-tracing, no
@@ -504,7 +542,7 @@ def _execute(plan: CompiledPlan, params: Dict[str, Dict],
         raise ValueError(f"frames {frames.shape} do not match plan frame "
                          f"shape {plan.frame_shape}; expected "
                          f"[B, {', '.join(map(str, plan.frame_shape))}]")
-    return plan.executor()(params, frames, plan.consts)
+    return plan.executor(per_frame)(params, frames, plan.consts)
 
 
 # ---------------------------------------------------------------------------
@@ -518,12 +556,15 @@ def _execute(plan: CompiledPlan, params: Dict[str, Dict],
 _DEPRECATION_WARNED: set = set()
 
 
-def _warn_deprecated(old: str, replacement: str) -> None:
+def _warn_deprecated(old: str, replacement: str,
+                     doc: str = "docs/api.md") -> None:
+    """One-shot-per-process DeprecationWarning (the shared shim helper —
+    ``launch.serve`` reuses it with its own ``doc``)."""
     if old in _DEPRECATION_WARNED:
         return
     _DEPRECATION_WARNED.add(old)
     warnings.warn(f"{old} is deprecated; use {replacement} "
-                  f"(see docs/api.md)", DeprecationWarning, stacklevel=3)
+                  f"(see {doc})", DeprecationWarning, stacklevel=3)
 
 
 def compile_model(layers: Sequence, input_shape: Tuple[int, ...],

@@ -353,6 +353,15 @@ class Executable:
             self._report_copy = copy.deepcopy(self._plan.report)
         return self._report_copy
 
+    def _pinned(self) -> contextlib.ExitStack:
+        """Enter the options' backend/interpret pins (per-thread)."""
+        stack = contextlib.ExitStack()
+        if self.options.backend is not None:
+            stack.enter_context(dispatch.use_backend(self.options.backend))
+        if self.options.interpret is not None:
+            stack.enter_context(dispatch.use_interpret(self.options.interpret))
+        return stack
+
     def run(self, frames) -> jnp.ndarray:
         """Execute ``frames`` [B, H, W, C] (or one [H, W, C] frame).
 
@@ -363,17 +372,77 @@ class Executable:
         ambient ``set_backend`` / env state, exactly like the old path.
         """
         frames = jnp.asarray(frames)
-        with contextlib.ExitStack() as stack:
-            if self.options.backend is not None:
-                stack.enter_context(dispatch.use_backend(self.options.backend))
-            if self.options.interpret is not None:
-                stack.enter_context(
-                    dispatch.use_interpret(self.options.interpret))
+        with self._pinned():
             frames, params = self._shard(frames)
             return plan_mod._execute(self._plan, params, frames)
 
     def __call__(self, frames) -> jnp.ndarray:
         return self.run(frames)
+
+    # -- serving: per-frame calibration + batch buckets -------------------
+
+    def run_per_frame(self, frames) -> jnp.ndarray:
+        """Execute with *per-frame* CRC calibration (serving semantics).
+
+        The seed-faithful :meth:`run` reduces every CRC requant scale over
+        the whole tensor, batch axis included, so a frame's output depends
+        on its batch neighbours. This variant reduces each scale over the
+        frame's own axes instead — the hardware's frame-per-pass
+        calibration: every frame's result is a pure function of that frame,
+        so batch composition (and zero-padding) can never perturb it, and
+        each frame is bit-identical to the same frame at batch 1 under
+        either method. This is the executor ``repro.serve``'s micro-batcher
+        coalesces requests onto.
+        """
+        frames = jnp.asarray(frames)
+        with self._pinned():
+            frames, params = self._shard(frames)
+            return plan_mod._execute(self._plan, params, frames,
+                                     per_frame=True)
+
+    def run_padded(self, frames, bucket: int) -> jnp.ndarray:
+        """Padded-run helper: execute ``frames`` at a fixed batch bucket.
+
+        Zero-pads the batch up to ``bucket`` (batches beyond it run in
+        ``bucket``-sized chunks), executes per-frame-calibrated, and slices
+        the real results back out — so a server always hits one of a few
+        pre-compiled batch shapes instead of jit-tracing every queue
+        length. Per-frame calibration severs every cross-frame data path,
+        so the padding frames provably cannot change the real frames'
+        results (bit-identical to batch-1 :meth:`run` calls per frame;
+        regression-tested in tests/test_serve.py).
+        """
+        if bucket < 1:
+            raise ValueError(f"bucket must be >= 1, got {bucket}")
+        frames = np.asarray(frames, np.float32)
+        if frames.ndim == 3:
+            frames = frames[None]
+        n = frames.shape[0]
+        outs = []
+        for off in range(0, n, bucket):
+            chunk = frames[off:off + bucket]
+            real = chunk.shape[0]
+            if real < bucket:
+                chunk = np.concatenate(
+                    [chunk, np.zeros((bucket - real, *chunk.shape[1:]),
+                                     np.float32)])
+            outs.append(self.run_per_frame(chunk)[:real])
+        return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
+
+    def warm(self, buckets: Sequence[int] = (1,)) -> "Executable":
+        """Trace + compile the per-frame executor at each bucket size.
+
+        Serving warm-up: the first request at a new batch shape otherwise
+        pays the full jit trace. Runs a zero batch per bucket and blocks,
+        so device caches are primed too. Returns ``self`` for chaining.
+        """
+        h, w, c = self.program.input_hwc
+        for b in sorted({int(b) for b in buckets}):
+            if b < 1:
+                raise ValueError(f"bucket must be >= 1, got {b}")
+            self.run_per_frame(
+                jnp.zeros((b, h, w, c), jnp.float32)).block_until_ready()
+        return self
 
     # -- batch sharding ---------------------------------------------------
 

@@ -1,5 +1,7 @@
 """launch — production mesh, multi-pod dry-run, roofline, train/serve drivers.
 
-``serve_vision`` streams frame batches through the compiled device pipeline
-(core.plan) and reports measured frames/s next to the simulated FPS/W.
+``serve_vision`` hosts compiled programs in the ``repro.serve`` runtime
+(async micro-batching scheduler, admission control, latency metrics) and
+reports measured frames/s next to the simulated FPS/W; ``serve`` is the
+retired pre-``repro.serve`` LM stub, kept as a deprecation shim.
 """

@@ -1,11 +1,16 @@
-"""Batched serving driver: prefill + decode with the photonic-quantized path.
+"""Deprecated shim — the pre-``repro.serve`` LM serving stub.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
-        --batch 4 --prompt-len 32 --gen 16 --quant w4a4
+This module predates the Program API and the serving runtime: it ran a
+one-off prefill+decode loop with no queueing, batching, or metrics.
+Serving now goes through ``repro.serve`` (async micro-batching server
+over compiled Executables, driven by ``repro.launch.serve_vision``); the
+photonic-quantized LM generation demo lives in
+``examples/serve_quantized_lm.py`` on top of
+``repro.models.lm.greedy_generate``.
 
-Serving runs weights in photonic storage (int-carrier wq + scales) when
---quant is set — the Lightator deployment mode: weights live at w_bits
-(4x smaller HBM footprint at w4), activations quantize through the CRC path.
+Kept as a one-shot-``DeprecationWarning`` shim (the PR-4 convention):
+``generate``/``main`` still work, bit-identically, by calling the moved
+internals.
 """
 
 from __future__ import annotations
@@ -19,27 +24,29 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, smoke_variant
+from repro.core.plan import _warn_deprecated
 from repro.models import lm as lm_mod
 
 
 def generate(params, cfg, prompt: jnp.ndarray, steps: int):
-    """Greedy decode. prompt: [B, T0] -> tokens [B, T0+steps]."""
-    b, t0 = prompt.shape
-    cache = lm_mod.init_cache(cfg, b, t0 + steps + 1)
-    step_fn = jax.jit(lambda p, c, t: lm_mod.decode_step(p, c, t, cfg))
-    toks = prompt
-    # prefill by stepping (simple; a production path uses batched prefill)
-    logits = None
-    for i in range(t0):
-        logits, cache = step_fn(params, cache, toks[:, i:i + 1])
-    for _ in range(steps):
-        nxt = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-        toks = jnp.concatenate([toks, nxt], axis=1)
-        logits, cache = step_fn(params, cache, nxt)
-    return toks
+    """Deprecated shim — use ``repro.models.lm.greedy_generate``."""
+    _warn_deprecated("launch.serve.generate",
+                     "repro.models.lm.greedy_generate",
+                     doc="docs/serving.md")
+    return lm_mod.greedy_generate(params, cfg, prompt, steps)
 
 
 def main(argv=None):
+    """Deprecated shim — the LM decode smoke, unchanged behaviour.
+
+    For production serving (micro-batching, backpressure, latency
+    metrics) use ``repro.serve`` / ``python -m repro.launch.serve_vision``.
+    """
+    _warn_deprecated(
+        "launch.serve.main",
+        "repro.serve (python -m repro.launch.serve_vision) for serving, "
+        "examples/serve_quantized_lm.py for the LM demo",
+        doc="docs/serving.md")
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
     ap.add_argument("--smoke", action="store_true")
@@ -60,7 +67,7 @@ def main(argv=None):
                                       (args.batch, args.prompt_len)),
                          jnp.int32)
     t0 = time.time()
-    toks = generate(params, cfg, prompt, args.gen)
+    toks = lm_mod.greedy_generate(params, cfg, prompt, args.gen)
     dt = time.time() - t0
     n_new = args.batch * args.gen
     print(f"[serve] arch={cfg.name} quant={cfg.quant_scheme} "

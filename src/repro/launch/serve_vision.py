@@ -1,9 +1,9 @@
-"""Batched streaming vision driver over the compiled device pipeline.
+"""Vision/imaging serving driver over the ``repro.serve`` runtime.
 
-Two serving modes, one API (``repro.Program`` / ``Options`` /
-``Executable``):
+Three serving modes, one API (``repro.Program`` / ``Options`` /
+``Executable`` hosted in a ``repro.serve.Server``):
 
-    # CNN classification (the paper's Table-1 models)
+    # CNN classification throughput (closed-loop saturation)
     PYTHONPATH=src python -m repro.launch.serve_vision \
         --model lenet --scheme mx43 --batch 8 --batches 50
 
@@ -11,43 +11,40 @@ Two serving modes, one API (``repro.Program`` / ``Options`` /
     PYTHONPATH=src python -m repro.launch.serve_vision \
         --pipeline edge_detect --batch 8 --batches 50
 
-Compiles once (``Program.compile(Options) -> Executable``), then streams
-host frame batches through the single jitted execute pass with
-*double-buffered* feeding: batch i+1 is transferred and dispatched while
-batch i is still in flight, and the host only blocks on the oldest
-outstanding batch (``--depth`` controls the in-flight window; ``--depth 0``
-forces the old synchronous feed for comparison). Reports measured
-steady-state frames/s next to the power model's simulated device FPS and
-kFPS/W — and, for imaging pipelines, the PSNR of the quantized device
-output against the float reference path.
+    # open-loop Poisson load (latency under offered load)
+    PYTHONPATH=src python -m repro.launch.serve_vision \
+        --model lenet --load 500 --requests 200 --deadline-ms 100
 
-The kernel backend and conv strategy are serving flags now (``--backend``,
-``--conv-strategy``), mapped through ``Options`` — no env vars needed —
-and the run header prints the fully *resolved* options, so the effective
-configuration is always visible in logs.
+Each run compiles once (``Server.register`` -> ``Executable``), warms
+every batch bucket, then streams *single-frame requests* through the
+async micro-batching scheduler: requests are coalesced up to
+``--batch`` / ``--max-wait-ms``, padded to the nearest compiled bucket,
+executed with per-frame CRC calibration (results bit-identical to
+per-request ``Executable.run``), and completed on a separate thread while
+the next batch is being collected — the serving-runtime descendant of the
+old double-buffered feeder (its ``--depth`` knob is now
+``ServeConfig.max_inflight``).
 
-FC layers are scheduled at the served batch size (``fc_batch=--batch``) so
-weight-remap DAC settles amortize across the batch; the report stays
-per-frame (see ``docs/api.md``).
-
-NB: the CRC calibration scale is per-tensor (batch included) to stay
-bit-identical with the reference interpreter, so logits depend mildly on
-batch composition — evaluate accuracy at the batch size you serve at
-(see core.plan.CompiledPlan).
+The default mode reports sustained frames/s under full backlog next to
+the power model's simulated device FPS and kFPS/W — and, for imaging
+pipelines, the PSNR of the quantized device output against the float
+reference. ``--load`` switches to the open-loop Poisson generator and
+reports p50/p95/p99 latency, achieved rate, and sheds at the offered
+load. The kernel backend and conv strategy stay serving flags
+(``--backend``, ``--conv-strategy``) mapped through ``Options``, and the
+run header prints the fully *resolved* options.
 """
 
 from __future__ import annotations
 
 import argparse
-import collections
 import time
-from typing import List
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.program import Executable, Options
+from repro import serve
+from repro.core.program import Options
 from repro.core.quant import W4A4, W3A4, W2A4, MX_43, MX_42
 from repro.kernels import dispatch
 from repro.models.vision import MODEL_INPUT_HWC, vision_program
@@ -56,38 +53,10 @@ SCHEMES = {"w4a4": W4A4, "w3a4": W3A4, "w2a4": W2A4,
            "mx43": MX_43, "mx42": MX_42}
 
 
-def stream(exe: Executable, host_batches: List[np.ndarray], n_batches: int,
-           depth: int = 2) -> float:
-    """Feed ``n_batches`` host batches through the executable -> frames/s.
-
-    Double-buffered: each iteration transfers + dispatches the next batch,
-    then blocks only on the result ``depth`` batches back, so host->device
-    transfer of batch i+1 overlaps compute of batch i (the ROADMAP's async
-    frame-feeding item). ``depth=0`` degenerates to the synchronous
-    dispatch-then-block loop. Timing starts after a warmup batch, so the
-    rate is steady-state (no jit trace included).
-    """
-    batch = host_batches[0].shape[0]
-    # warmup: trace + compile, and fill device caches
-    exe.run(jnp.asarray(host_batches[0])).block_until_ready()
-    inflight: collections.deque = collections.deque()
-    t0 = time.perf_counter()
-    for i in range(n_batches):
-        frames = jax.device_put(host_batches[i % len(host_batches)])
-        out = exe.run(frames)
-        inflight.append(out)
-        if len(inflight) > depth:
-            inflight.popleft().block_until_ready()
-    while inflight:
-        inflight.popleft().block_until_ready()
-    dt = time.perf_counter() - t0
-    return n_batches * batch / dt
-
-
 def _imaging_frames(batch: int, size: int, seed: int) -> np.ndarray:
     from repro.data.synthetic import synthetic_textures
     imgs, _ = synthetic_textures(batch, hw=size, seed=seed)
-    return imgs
+    return np.asarray(imgs, np.float32)
 
 
 def main(argv=None):
@@ -99,12 +68,21 @@ def main(argv=None):
     ap.add_argument("--pipeline", default=None,
                     help="serve a repro.imaging pipeline instead of a CNN")
     ap.add_argument("--scheme", default="mx43", choices=sorted(SCHEMES))
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--batches", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8,
+                    help="scheduler max_batch (largest micro-batch)")
+    ap.add_argument("--batches", type=int, default=50,
+                    help="device batches worth of frames to stream "
+                         "(total frames = batch * batches)")
     ap.add_argument("--size", type=int, default=64,
                     help="imaging frame height/width (pipeline mode)")
-    ap.add_argument("--depth", type=int, default=2,
-                    help="in-flight batches (0 = synchronous feeding)")
+    ap.add_argument("--max-wait-ms", type=float, default=2.0,
+                    help="micro-batch collection window")
+    ap.add_argument("--load", type=float, default=None,
+                    help="open-loop Poisson mode: offered requests/s")
+    ap.add_argument("--requests", type=int, default=64,
+                    help="requests to offer in --load mode")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline (late requests are shed)")
     ap.add_argument("--backend", default=None,
                     choices=sorted(dispatch.BACKENDS),
                     help="kernel backend (default: REPRO_KERNEL_BACKEND / "
@@ -118,39 +96,42 @@ def main(argv=None):
                          "(no-op on 1 device)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
-    if args.batch < 1 or args.batches < 1:
-        ap.error("--batch and --batches must be >= 1")
-    if args.depth < 0:
-        ap.error("--depth must be >= 0")
+    if args.batch < 1 or args.batches < 1 or args.requests < 1:
+        ap.error("--batch, --batches and --requests must be >= 1")
+    if args.load is not None and args.load <= 0:
+        ap.error("--load must be > 0 requests/s")
 
     options = Options(scheme=SCHEMES[args.scheme], fc_batch=args.batch,
                       backend=args.backend, conv_strategy=args.conv_strategy,
                       shard_batch=args.shard_batch)
 
     if args.pipeline is not None:
-        from repro.imaging import PIPELINES, apply_float, psnr
+        from repro.imaging import PIPELINES
         if args.pipeline not in PIPELINES:
             ap.error(f"unknown pipeline {args.pipeline!r}; "
                      f"choose from {sorted(PIPELINES)}")
         prog = PIPELINES[args.pipeline].program(args.size, args.size, 3)
-        host_batches = [_imaging_frames(args.batch, args.size, args.seed + i)
-                        for i in range(2)]
+        pool = _imaging_frames(max(2 * args.batch, 8), args.size, args.seed)
         name = f"pipeline={prog.name}"
     else:
         prog = vision_program(args.model, key=jax.random.PRNGKey(args.seed))
         h, w, c = prog.input_hwc
         rng = np.random.default_rng(args.seed + 1)
-        host_batches = [rng.random((args.batch, h, w, c), np.float32)
-                        for _ in range(2)]
+        pool = rng.random((max(2 * args.batch, 8), h, w, c), np.float32)
         name = f"model={args.model}"
 
+    server = serve.Server(serve.ServeConfig(
+        max_batch=args.batch, max_wait_ms=args.max_wait_ms,
+        max_queue=max(8 * args.batch, 64),
+        default_deadline_ms=args.deadline_ms))
     t0 = time.perf_counter()
-    exe = prog.compile(options)
+    hosted = server.register(prog.name, prog, options)
     t_compile = time.perf_counter() - t0
-    fps = stream(exe, host_batches, args.batches, depth=args.depth)
+    server.start(warm=True)
 
-    r = exe.report
-    print(f"[serve_vision] {name} batch={args.batch} depth={args.depth} "
+    r = hosted.executable.report
+    print(f"[serve_vision] {name} max_batch={args.batch} "
+          f"buckets={list(hosted.buckets)} wait={args.max_wait_ms}ms "
           f"compile={t_compile * 1e3:.1f}ms")
     print(f"[serve_vision] options: {options.describe()}")
     if r.conv_strategy:
@@ -159,16 +140,44 @@ def main(argv=None):
                                   if v["kind"] == "strip" else "")
             for n, v in r.conv_strategy.items())
         print(f"[serve_vision] conv strategy: {strat}")
+
+    if args.load is not None:
+        rep = serve.poisson_load(server, prog.name, pool, rate_rps=args.load,
+                                 n_requests=args.requests, seed=args.seed,
+                                 deadline_ms=args.deadline_ms)
+        assert rep.submitted + rep.rejected == args.requests
+        assert rep.served + rep.shed == rep.submitted, \
+            f"unaccounted requests: {rep}"
+        lat = rep.latency_ms
+        print(f"[serve_vision] offered {rep.offered_rps:,.0f} req/s x "
+              f"{args.requests}: served {rep.served} "
+              f"(shed {rep.shed}, rejected {rep.rejected}) at "
+              f"{rep.achieved_rps:,.0f} req/s")
+        if lat.get("count"):
+            print(f"[serve_vision] latency p50={lat['p50']:.2f}ms "
+                  f"p95={lat['p95']:.2f}ms p99={lat['p99']:.2f}ms "
+                  f"max={lat['max']:.2f}ms")
+        fps = rep.achieved_fps
+    else:
+        rep = serve.saturate(server, prog.name, pool,
+                             n_requests=args.batches * args.batch)
+        fps = rep.achieved_fps
+    snap = server.stats()["programs"][prog.name]
     print(f"[serve_vision] measured {fps:,.0f} frames/s on "
-          f"{jax.default_backend()} | device model: "
+          f"{jax.default_backend()} (avg_batch "
+          f"{snap['avg_batch']:.1f}, padding waste "
+          f"{snap['padding_waste']:.1%}) | device model: "
           f"{r.fps:,.0f} FPS, {r.avg_power_w:.2f} W, "
           f"{r.kfps_per_w:.1f} kFPS/W")
+
     if args.pipeline is not None:
-        frames = jnp.asarray(host_batches[0])
-        out = exe.run(frames)
+        from repro.imaging import apply_float, psnr
+        frames = pool[:args.batch]
+        out = hosted.executable.run_per_frame(frames)
         ref = apply_float(prog.layers, prog.params, frames)
         print(f"[serve_vision] quantized-vs-float PSNR "
-              f"{float(psnr(ref, out)):.2f} dB")
+              f"{float(psnr(ref, out)):.2f} dB (per-frame calibration)")
+    server.stop()
     return fps
 
 

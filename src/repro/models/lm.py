@@ -440,6 +440,30 @@ def decode_step(params, cache: Dict, token: jnp.ndarray, cfg: ModelConfig):
     return logits, {"pos": pos + 1, "layers": new_layer_cache}
 
 
+def greedy_generate(params, cfg: ModelConfig, prompt: jnp.ndarray,
+                    steps: int) -> jnp.ndarray:
+    """Greedy decode. prompt: [B, T0] -> tokens [B, T0+steps].
+
+    The batched prefill+decode demo loop (previously ``launch.serve``,
+    now retired onto the ``repro.serve`` runtime for the vision/imaging
+    side — see examples/serve_quantized_lm.py for the photonic-quantized
+    LM deployment mode this helper drives).
+    """
+    b, t0 = prompt.shape
+    cache = init_cache(cfg, b, t0 + steps + 1)
+    step_fn = jax.jit(lambda p, c, t: decode_step(p, c, t, cfg))
+    toks = prompt
+    # prefill by stepping (simple; a production path uses batched prefill)
+    logits = None
+    for i in range(t0):
+        logits, cache = step_fn(params, cache, toks[:, i:i + 1])
+    for _ in range(steps):
+        nxt = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        toks = jnp.concatenate([toks, nxt], axis=1)
+        logits, cache = step_fn(params, cache, nxt)
+    return toks
+
+
 # ---------------------------------------------------------------------------
 # Photonic serving storage (the Lightator deployment mode)
 # ---------------------------------------------------------------------------

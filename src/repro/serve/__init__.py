@@ -1,0 +1,38 @@
+"""repro.serve — production serving runtime over compiled Executables.
+
+Turns any :class:`repro.Program` / :class:`repro.Executable` into a
+long-lived service: a multi-program router with an async micro-batching
+scheduler (collect up to ``max_batch`` / ``max_wait_ms``, pad to the
+nearest compiled batch bucket, split results per request — bit-identical
+to direct per-request ``Executable.run``), bounded-queue admission
+control with backpressure, deadline-based shedding, and a stats snapshot
+API (p50/p95/p99 latency, achieved frames/s, padding waste, modeled
+device kFPS/W). See docs/serving.md.
+
+    from repro import serve
+
+    with serve.Server(serve.ServeConfig(max_batch=16)) as _:
+        ...   # register before start; or the explicit form:
+
+    server = serve.Server()
+    server.register("lenet", repro.Program.from_model("lenet"))
+    server.start()
+    out = server.submit("lenet", frame).result()
+    print(server.stats()["programs"]["lenet"]["latency_ms"])
+    server.stop()
+"""
+
+from repro.serve.batcher import (padded_slots, pick_bucket,
+                                 power_of_two_buckets, split_results)
+from repro.serve.loadgen import LoadReport, poisson_load, saturate
+from repro.serve.metrics import ProgramMetrics, latency_summary
+from repro.serve.server import (AdmissionError, DeadlineExceeded,
+                                HostedProgram, ServeConfig, Server,
+                                ServerClosed)
+
+__all__ = [
+    "AdmissionError", "DeadlineExceeded", "HostedProgram", "LoadReport",
+    "ProgramMetrics", "ServeConfig", "Server", "ServerClosed",
+    "latency_summary", "padded_slots", "pick_bucket", "poisson_load",
+    "power_of_two_buckets", "saturate", "split_results",
+]

@@ -1,0 +1,70 @@
+"""Micro-batching primitives: batch buckets, padding accounting, splitting.
+
+Pure, thread-free helpers the scheduler (``serve.server``) composes:
+
+* a server compiles each hosted program at a small set of **batch
+  buckets** (powers of two up to ``max_batch`` by default) instead of
+  jit-tracing every queue length it ever observes;
+* a collected micro-batch of ``n`` frames is padded up to the smallest
+  bucket that holds it (``Executable.run_padded`` does the zero-padding —
+  per-frame calibration makes the pad frames provably inert);
+* results come back as one array and are **split** per-request by each
+  request's frame count.
+
+The pad -> bucket -> split round trip is bit-identical to running every
+request directly (tests/test_serve.py pins it across odd sizes, mixed
+programs and both kernel backends).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import numpy as np
+
+
+def power_of_two_buckets(max_batch: int) -> Tuple[int, ...]:
+    """The default bucket ladder: 1, 2, 4, ... capped by ``max_batch``.
+
+    ``max_batch`` itself is always a bucket (so a full collection window
+    never pays padding), even when it is not a power of two.
+    """
+    if max_batch < 1:
+        raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    buckets = {max_batch}
+    b = 1
+    while b < max_batch:
+        buckets.add(b)
+        b <<= 1
+    return tuple(sorted(buckets))
+
+
+def pick_bucket(n: int, buckets: Sequence[int]) -> int:
+    """Smallest bucket holding ``n`` frames; the largest if none does
+    (the caller then runs in largest-bucket chunks — ``run_padded``)."""
+    if n < 1:
+        raise ValueError(f"cannot bucket {n} frames")
+    best = max(buckets)
+    for b in sorted(buckets):
+        if b >= n:
+            return b
+    return best
+
+
+def padded_slots(n: int, bucket: int) -> int:
+    """Device batch slots consumed serving ``n`` real frames at ``bucket``
+    (chunked when ``n > bucket``) — the padding-waste numerator's basis."""
+    return -(-n // bucket) * bucket
+
+
+def split_results(out: np.ndarray, counts: Sequence[int]) -> list:
+    """Split a stacked result [sum(counts), ...] back per request."""
+    total = int(sum(counts))
+    if out.shape[0] != total:
+        raise ValueError(
+            f"result batch {out.shape[0]} != sum of request sizes {total}")
+    parts, off = [], 0
+    for n in counts:
+        parts.append(out[off:off + n])
+        off += n
+    return parts

@@ -1,0 +1,122 @@
+"""Serving metrics: latency percentiles, throughput, padding waste.
+
+Lock-guarded counters + a bounded latency reservoir per hosted program,
+snapshotted into plain JSON-able dicts by ``Server.stats()``. The paper's
+headline efficiency axis (kFPS/W) rides along from each executable's power
+report, so a stats snapshot pairs *measured* frames/s with the *modeled*
+device FPS/W it should be judged against.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Dict, Optional
+
+import numpy as np
+
+PERCENTILES = (50.0, 95.0, 99.0)
+
+
+class ProgramMetrics:
+    """Counters + latency reservoir for one hosted program (thread-safe)."""
+
+    def __init__(self, window: int = 8192):
+        self._lock = threading.Lock()
+        self._latencies_ms: deque = deque(maxlen=window)
+        self.submitted = 0          # requests admitted to the queue
+        self.served = 0             # requests fulfilled
+        self.shed = 0               # requests dropped at a missed deadline
+        self.rejected = 0           # requests refused at admission
+        self.failed = 0             # requests failed by an execution error
+                                    # or a no-drain stop
+        self.frames_served = 0
+        self.batches = 0            # device dispatches
+        self.slots = 0              # device batch slots consumed (incl. pad)
+        self.queued_frames = 0      # gauge, maintained by the server
+        self._t_first: Optional[float] = None
+        self._t_last: Optional[float] = None
+
+    # -- recording (called from the server's threads) ----------------------
+
+    def record_admit(self, n_requests: int = 1) -> None:
+        with self._lock:
+            self.submitted += n_requests
+
+    def record_reject(self) -> None:
+        with self._lock:
+            self.rejected += 1
+
+    def record_shed(self, n: int = 1) -> None:
+        with self._lock:
+            self.shed += n
+
+    def record_failed(self, n: int = 1) -> None:
+        with self._lock:
+            self.failed += n
+
+    def record_batch(self, slots: int, t_dispatch: float) -> None:
+        with self._lock:
+            self.batches += 1
+            self.slots += slots
+            if self._t_first is None:
+                self._t_first = t_dispatch
+
+    def record_served(self, latency_s: float, frames: int,
+                      t_done: float) -> None:
+        with self._lock:
+            self.served += 1
+            self.frames_served += frames
+            self._latencies_ms.append(latency_s * 1e3)
+            self._t_last = t_done
+
+    # -- snapshot ----------------------------------------------------------
+
+    def snapshot(self) -> Dict[str, object]:
+        with self._lock:
+            lat = np.asarray(self._latencies_ms, np.float64)
+            span = ((self._t_last - self._t_first)
+                    if self._t_first is not None and self._t_last is not None
+                    and self._t_last > self._t_first else None)
+            snap = {
+                "requests": {
+                    "submitted": self.submitted,
+                    "served": self.served,
+                    "shed_deadline": self.shed,
+                    "rejected": self.rejected,
+                    "failed": self.failed,
+                    "pending": (self.submitted - self.served - self.shed
+                                - self.failed),
+                },
+                "frames_served": self.frames_served,
+                "queue_depth": self.queued_frames,
+                "batches": self.batches,
+                "avg_batch": (self.frames_served / self.batches
+                              if self.batches else 0.0),
+                # fraction of device batch slots burned on padding
+                "padding_waste": (1.0 - self.frames_served / self.slots
+                                  if self.slots else 0.0),
+                # first dispatch -> last completion: the serving window,
+                # idle tails excluded
+                "achieved_fps": (self.frames_served / span if span else 0.0),
+                "latency_ms": latency_summary(lat),
+            }
+        return snap
+
+
+def latency_summary(lat_ms: np.ndarray) -> Dict[str, float]:
+    """p50/p95/p99 + mean/max of a latency sample (empty-safe)."""
+    if lat_ms.size == 0:
+        return {"count": 0}
+    out = {"count": int(lat_ms.size),
+           "mean": float(lat_ms.mean()),
+           "max": float(lat_ms.max())}
+    for p, v in zip(PERCENTILES, np.percentile(lat_ms, PERCENTILES)):
+        out[f"p{p:g}"] = float(v)
+    return out
+
+
+def now() -> float:
+    """The one clock every serving timestamp uses (monotonic seconds)."""
+    return time.perf_counter()

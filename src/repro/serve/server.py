@@ -1,0 +1,435 @@
+"""The serving runtime: a multi-program router + async micro-batching
+scheduler over compiled :class:`repro.Executable`\\ s.
+
+Architecture (two daemon threads per :class:`Server`, plus callers)::
+
+    submit() ──> per-program FIFO queues ──> scheduler ──> inflight ──> completer
+    (any thread;   bounded: admission         (collect,      (bounded     (block on
+     returns a      control + back-            pad to         device       device,
+     Future)        pressure)                  bucket,        pipeline)    split,
+                                               dispatch                    fulfill,
+                                               async)                      metrics)
+
+* **Micro-batching** — the scheduler picks the program whose head request
+  is oldest, then holds the batch open up to ``max_wait_ms`` (measured
+  from that head request's arrival) or until ``max_batch`` frames are
+  collected, whichever comes first. The batch is padded to the nearest
+  compiled bucket and executed with *per-frame* CRC calibration
+  (``Executable.run_padded``), which makes coalescing and padding
+  provably invisible to every request: results are bit-identical to
+  per-request ``Executable.run`` calls.
+* **Async pipeline** — the scheduler dispatches to the device without
+  blocking and hands the in-flight result to a completer thread over a
+  bounded queue (``max_inflight``), so batch i+1 is collected and
+  transferred while batch i computes — the serving-runtime form of the
+  PR-2 double-buffered feeder.
+* **Admission control + backpressure** — the total queued frame count is
+  bounded by ``max_queue``: ``submit(block=False)`` raises
+  :class:`AdmissionError` when full, ``block=True`` (default) applies
+  backpressure to the producer instead.
+* **Deadline shedding** — a request carrying ``deadline_ms`` that is
+  already past due when its batch is formed is dropped with
+  :class:`DeadlineExceeded` instead of burning device time on a result
+  nobody is waiting for.
+
+Thread-safety notes: the kernel backend/interpret pins are per-thread
+(``kernels.dispatch``), so the scheduler pinning an Executable's backend
+cannot clobber concurrent callers; all metrics are lock-guarded.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue as queue_mod
+import threading
+from collections import deque
+from concurrent.futures import Future
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.program import Executable, Options, Program
+from repro.serve import batcher
+from repro.serve.metrics import ProgramMetrics, now
+
+
+class AdmissionError(RuntimeError):
+    """The bounded request queue is full (non-blocking submit, or the
+    blocking wait timed out)."""
+
+
+class DeadlineExceeded(RuntimeError):
+    """The request's deadline passed before the device got to it."""
+
+
+class ServerClosed(RuntimeError):
+    """The server is stopped (or stopping) and not accepting work."""
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    """Scheduler/queue knobs for a :class:`Server`.
+
+    ``max_batch``      largest device batch a micro-batch may collect (and
+                       the top of the default bucket ladder).
+    ``max_wait_ms``    how long the scheduler holds a batch open for more
+                       requests, measured from its oldest request's
+                       arrival. 0 dispatches every request immediately.
+    ``max_queue``      admission bound, in *frames*, summed across all
+                       hosted programs.
+    ``max_inflight``   device batches dispatched but not yet completed
+                       (the async pipeline depth; 1 = synchronous).
+    ``batch_buckets``  default compiled batch sizes per program (``None``:
+                       powers of two up to ``max_batch``).
+    ``default_deadline_ms``  deadline applied to requests that don't carry
+                       their own (``None``: no deadline).
+    """
+
+    max_batch: int = 8
+    max_wait_ms: float = 2.0
+    max_queue: int = 256
+    max_inflight: int = 2
+    batch_buckets: Optional[Tuple[int, ...]] = None
+    default_deadline_ms: Optional[float] = None
+
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.max_wait_ms < 0:
+            raise ValueError(
+                f"max_wait_ms must be >= 0, got {self.max_wait_ms}")
+        if self.max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {self.max_queue}")
+        if self.max_inflight < 1:
+            raise ValueError(
+                f"max_inflight must be >= 1, got {self.max_inflight}")
+
+
+@dataclasses.dataclass
+class _Request:
+    frames: np.ndarray                # [n, H, W, C]
+    n: int
+    future: Future
+    t_submit: float
+    deadline: Optional[float]         # absolute, metrics.now() clock
+
+
+@dataclasses.dataclass
+class HostedProgram:
+    """One program slot in the router: executable + queue + metrics."""
+
+    name: str
+    program: Program
+    executable: Executable
+    buckets: Tuple[int, ...]
+    queue: deque = dataclasses.field(default_factory=deque)
+    metrics: ProgramMetrics = dataclasses.field(default_factory=ProgramMetrics)
+
+    @property
+    def queued_frames(self) -> int:
+        return self.metrics.queued_frames
+
+
+_SENTINEL = object()
+
+
+class Server:
+    """Long-lived multi-program serving runtime (see module docstring).
+
+    Usage::
+
+        server = serve.Server(serve.ServeConfig(max_batch=16))
+        server.register("edge", repro.Program.from_pipeline("edge_detect",
+                                                            64, 64, 3),
+                        repro.Options(backend="reference"))
+        server.register("lenet", repro.Program.from_model("lenet"))
+        server.start()                        # warms every batch bucket
+        fut = server.submit("edge", frame)    # concurrent.futures.Future
+        edges = fut.result()
+        print(server.stats()["programs"]["edge"]["latency_ms"])
+        server.stop()
+
+    ``Server`` is also a context manager (``with serve.Server(...) as s:``
+    starts on enter, drains and stops on exit). Futures resolve to numpy
+    arrays; asyncio callers wrap them with ``asyncio.wrap_future``.
+    """
+
+    def __init__(self, config: Optional[ServeConfig] = None):
+        self.config = config or ServeConfig()
+        self._programs: Dict[str, HostedProgram] = {}
+        self._cond = threading.Condition()
+        self._queued_total = 0                 # frames across all programs
+        self._stopping = False
+        self._drain = True
+        self._started = False
+        self._scheduler: Optional[threading.Thread] = None
+        self._completer: Optional[threading.Thread] = None
+        self._inflight: queue_mod.Queue = queue_mod.Queue(
+            maxsize=self.config.max_inflight)
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def register(self, name: str, program: Program,
+                 options: Optional[Options] = None,
+                 buckets: Optional[Sequence[int]] = None) -> HostedProgram:
+        """Host ``program`` under ``name``: compiles it now (plan-cache
+        priming happens at registration, jit warm-up at :meth:`start`)."""
+        if self._started:
+            raise RuntimeError("register() before start()")
+        if name in self._programs:
+            raise ValueError(f"program {name!r} already registered")
+        exe = program.compile(options or Options())
+        bks = tuple(sorted({int(b) for b in buckets})) if buckets else \
+            (self.config.batch_buckets
+             or batcher.power_of_two_buckets(self.config.max_batch))
+        if min(bks) < 1:
+            raise ValueError(f"buckets must be >= 1, got {bks}")
+        hosted = HostedProgram(name, program, exe, bks)
+        self._programs[name] = hosted
+        return hosted
+
+    def start(self, warm: bool = True) -> "Server":
+        """Launch the scheduler/completer threads (idempotent guard).
+
+        ``warm`` pre-traces every hosted program's per-frame executor at
+        every batch bucket, so the first real requests don't pay jit
+        latency — the warm plan-cache/trace priming a production rollout
+        does before taking traffic.
+        """
+        if self._started:
+            raise RuntimeError("server already started")
+        if not self._programs:
+            raise RuntimeError("no programs registered")
+        if warm:
+            for hosted in self._programs.values():
+                hosted.executable.warm(hosted.buckets)
+        self._started = True
+        self._scheduler = threading.Thread(
+            target=self._scheduler_loop, name="repro-serve-scheduler",
+            daemon=True)
+        self._completer = threading.Thread(
+            target=self._completer_loop, name="repro-serve-completer",
+            daemon=True)
+        self._completer.start()
+        self._scheduler.start()
+        return self
+
+    def stop(self, drain: bool = True, timeout: Optional[float] = None) -> None:
+        """Stop the server. ``drain=True`` serves everything already
+        queued first; ``drain=False`` fails pending requests with
+        :class:`ServerClosed`."""
+        with self._cond:
+            self._stopping = True
+            self._drain = drain
+            self._cond.notify_all()
+        if self._scheduler is not None:
+            self._scheduler.join(timeout)
+            if not self._scheduler.is_alive():
+                # only retire the completer once the scheduler can no
+                # longer dispatch — a sentinel racing live dispatches
+                # would strand their futures unresolved
+                self._inflight.put(_SENTINEL)
+                self._completer.join(timeout)
+        if not drain:
+            for hosted in self._programs.values():
+                while hosted.queue:
+                    req = hosted.queue.popleft()
+                    hosted.metrics.record_failed()
+                    req.future.set_exception(ServerClosed("server stopped"))
+
+    def __enter__(self) -> "Server":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop(drain=True)
+
+    # -- request path ------------------------------------------------------
+
+    def submit(self, name: str, frames, deadline_ms: Optional[float] = None,
+               block: bool = True, timeout: Optional[float] = None) -> Future:
+        """Enqueue ``frames`` ([H, W, C] or [n, H, W, C]) for ``name``.
+
+        Returns a ``concurrent.futures.Future`` resolving to the program's
+        output for exactly those frames (numpy, batch-first) — bit-identical
+        to a direct per-request ``Executable.run``. Raises
+        :class:`AdmissionError` when the bounded queue is full
+        (``block=False``, or the backpressure wait exceeds ``timeout``),
+        :class:`ServerClosed` after :meth:`stop`, and ``ValueError`` for an
+        unknown program or a frame-shape mismatch — all in the caller's
+        thread, before anything is queued.
+        """
+        hosted = self._programs.get(name)
+        if hosted is None:
+            raise ValueError(f"unknown program {name!r}; hosted: "
+                             f"{sorted(self._programs)}")
+        frames = np.asarray(frames, np.float32)
+        if frames.ndim == 3:
+            frames = frames[None]
+        hwc = tuple(hosted.program.input_hwc)
+        if frames.ndim != 4 or tuple(frames.shape[1:]) != hwc:
+            raise ValueError(
+                f"frames {frames.shape} do not match {name!r}'s input "
+                f"[n, {', '.join(map(str, hwc))}]")
+        n = frames.shape[0]
+        if n == 0:
+            raise ValueError("request carries no frames")
+        if n > self.config.max_queue:
+            # larger than the whole admission bound: the blocking wait
+            # below could never be satisfied — fail fast instead
+            raise ValueError(
+                f"request of {n} frames exceeds max_queue="
+                f"{self.config.max_queue}; raise the bound or split the "
+                f"request")
+        if deadline_ms is None:
+            deadline_ms = self.config.default_deadline_ms
+        t_submit = now()
+        req = _Request(frames, n, Future(), t_submit,
+                       t_submit + deadline_ms / 1e3
+                       if deadline_ms is not None else None)
+        with self._cond:
+            while (self._queued_total + n > self.config.max_queue
+                   and not self._stopping):
+                if not block:
+                    hosted.metrics.record_reject()
+                    raise AdmissionError(
+                        f"queue full ({self._queued_total} frames >= "
+                        f"{self.config.max_queue})")
+                if not self._cond.wait(timeout):
+                    hosted.metrics.record_reject()
+                    raise AdmissionError(
+                        f"queue full after {timeout}s backpressure wait")
+            if self._stopping:
+                raise ServerClosed("server is stopping")
+            hosted.queue.append(req)
+            hosted.metrics.queued_frames += n
+            self._queued_total += n
+            hosted.metrics.record_admit()
+            self._cond.notify_all()
+        return req.future
+
+    # -- scheduler ---------------------------------------------------------
+
+    def _collect(self) -> Optional[Tuple[HostedProgram, list]]:
+        """One scheduling decision: pick a program, hold the batch open,
+        pop it. Returns None when stopping with nothing left to drain."""
+        cfg = self.config
+        with self._cond:
+            while True:
+                if self._stopping and not self._drain:
+                    return None
+                backlog = [h for h in self._programs.values() if h.queue]
+                if backlog:
+                    break
+                if self._stopping:
+                    return None
+                self._cond.wait()
+            # route: the program whose head request has waited longest
+            hosted = min(backlog, key=lambda h: h.queue[0].t_submit)
+            cap = min(cfg.max_batch, max(hosted.buckets))
+            close_at = hosted.queue[0].t_submit + cfg.max_wait_ms / 1e3
+            while (hosted.metrics.queued_frames < cap
+                   and not self._stopping):
+                remaining = close_at - now()
+                if remaining <= 0:
+                    break
+                self._cond.wait(remaining)
+            reqs, n = [], 0
+            while hosted.queue and n + hosted.queue[0].n <= cap:
+                req = hosted.queue.popleft()
+                reqs.append(req)
+                n += req.n
+            if not reqs and hosted.queue:
+                # head request alone exceeds the cap: dispatch it solo
+                # (run_padded chunks it through the largest bucket)
+                reqs = [hosted.queue.popleft()]
+                n = reqs[0].n
+            hosted.metrics.queued_frames -= n
+            self._queued_total -= n
+            self._cond.notify_all()        # wake backpressured submitters
+        return hosted, reqs
+
+    def _scheduler_loop(self) -> None:
+        while True:
+            picked = self._collect()
+            if picked is None:
+                return
+            hosted, reqs = picked
+            # deadline shedding: drop what is already past due
+            t = now()
+            live = []
+            for req in reqs:
+                if req.deadline is not None and t > req.deadline:
+                    hosted.metrics.record_shed()
+                    req.future.set_exception(DeadlineExceeded(
+                        f"deadline missed by {(t - req.deadline) * 1e3:.1f}ms "
+                        f"waiting for dispatch"))
+                else:
+                    live.append(req)
+            if not live:
+                continue
+            frames = (live[0].frames if len(live) == 1
+                      else np.concatenate([r.frames for r in live], axis=0))
+            bucket = batcher.pick_bucket(frames.shape[0], hosted.buckets)
+            t_dispatch = now()
+            try:
+                out = hosted.executable.run_padded(frames, bucket)
+            except Exception as e:                # noqa: BLE001 — isolate batch
+                hosted.metrics.record_failed(len(live))
+                for req in live:
+                    req.future.set_exception(e)
+                continue
+            hosted.metrics.record_batch(
+                batcher.padded_slots(frames.shape[0], bucket), t_dispatch)
+            # hand off without blocking on the device: the completer owns
+            # the block_until_ready, this thread goes back to collecting
+            self._inflight.put((hosted, live, out))
+
+    def _completer_loop(self) -> None:
+        while True:
+            item = self._inflight.get()
+            if item is _SENTINEL:
+                return
+            hosted, live, out = item
+            try:
+                out_np = np.asarray(out)           # blocks until device done
+            except Exception as e:                 # noqa: BLE001
+                hosted.metrics.record_failed(len(live))
+                for req in live:
+                    req.future.set_exception(e)
+                continue
+            t_done = now()
+            for part, req in zip(
+                    batcher.split_results(out_np, [r.n for r in live]), live):
+                req.future.set_result(part)
+                hosted.metrics.record_served(t_done - req.t_submit, req.n,
+                                             t_done)
+
+    # -- observability -----------------------------------------------------
+
+    def stats(self) -> Dict[str, object]:
+        """JSON-able snapshot: per-program counters, latency percentiles,
+        achieved frames/s, padding waste, queue depth — plus each program's
+        modeled device FPS / power / kFPS-per-W from its compiled report."""
+        programs = {}
+        totals = {"submitted": 0, "served": 0, "shed_deadline": 0,
+                  "rejected": 0, "failed": 0}
+        frames_served = 0
+        for name, hosted in self._programs.items():
+            snap = hosted.metrics.snapshot()
+            r = hosted.executable.report
+            snap["model"] = {"fps": r.fps, "avg_power_w": r.avg_power_w,
+                             "kfps_per_w": r.kfps_per_w}
+            snap["buckets"] = list(hosted.buckets)
+            programs[name] = snap
+            for k in totals:
+                totals[k] += snap["requests"][k]
+            frames_served += snap["frames_served"]
+        with self._cond:
+            depth = self._queued_total
+        return {
+            "config": dataclasses.asdict(self.config),
+            "queue_depth": depth,
+            "frames_served": frames_served,
+            "requests": totals,
+            "programs": programs,
+        }

@@ -239,11 +239,12 @@ def test_run_eager_rejects_imaging_ir(frames):
 
 # -- serving smoke -----------------------------------------------------------
 
-@pytest.mark.parametrize("depth", [0, 2])
-def test_serve_vision_pipeline_smoke(depth):
-    """The acceptance-criteria entry point, tiny: double-buffered + sync."""
+@pytest.mark.parametrize("wait_ms", ["0", "2"])
+def test_serve_vision_pipeline_smoke(wait_ms):
+    """The acceptance-criteria entry point, tiny: immediate-dispatch +
+    micro-batched collection through the repro.serve runtime."""
     from repro.launch import serve_vision
     fps = serve_vision.main(["--pipeline", "edge_detect", "--batch", "2",
                              "--batches", "2", "--size", "16",
-                             "--depth", str(depth)])
+                             "--max-wait-ms", wait_ms])
     assert fps > 0

@@ -1,0 +1,317 @@
+"""repro.serve — the serving runtime's contracts.
+
+The load-bearing one: the micro-batcher's pad -> bucket -> split round
+trip is **bit-identical** to direct per-request ``Executable.run`` across
+odd batch sizes, mixed programs and both kernel backends. That identity
+rests on per-frame CRC calibration (``Executable.run_per_frame``), which
+is itself pinned here: per-frame results are independent of batch
+composition and equal to batch-1 runs bit-for-bit, while the seed
+per-tensor path demonstrably couples batch neighbours (the reason the
+batcher cannot coalesce on the default executor).
+
+Plus the scheduler semantics: admission control / backpressure, deadline
+shedding, multi-program routing, drain/stop, stats sanity, and the
+open-loop Poisson load generator's accounting.
+"""
+
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+import repro
+from repro import serve
+from repro.core.quant import W4A4
+from repro.serve import batcher
+
+REFERENCE = repro.Options(scheme=W4A4, backend="reference")
+
+
+@pytest.fixture(scope="module")
+def lenet_exe():
+    prog = repro.Program.from_model("lenet", key=jax.random.PRNGKey(0))
+    return prog, prog.compile(REFERENCE)
+
+
+@pytest.fixture(scope="module")
+def frames28():
+    rng = np.random.default_rng(0)
+    f = rng.random((9, 28, 28, 1)).astype(np.float32)
+    f[1] *= 0.05        # a dim frame: per-tensor calibration would couple it
+    return f
+
+
+def _singles(exe, frames):
+    """Per-request ground truth: each frame through a batch-1 run."""
+    return np.concatenate(
+        [np.asarray(exe.run(frames[i][None])) for i in range(len(frames))])
+
+
+# -- per-frame calibration: the soundness base --------------------------------
+
+def test_per_frame_equals_batch1_and_isolates_neighbours(lenet_exe, frames28):
+    _, exe = lenet_exe
+    singles = _singles(exe, frames28)
+    pf = np.asarray(exe.run_per_frame(frames28))
+    np.testing.assert_array_equal(pf, singles)
+    # while the seed per-tensor path couples batch neighbours (the dim
+    # frame's codes shift under the bright frames' shared scale)
+    pt = np.asarray(exe.run(frames28))
+    assert not np.array_equal(pt, singles)
+    # at batch 1 the two calibrations are the same reduction — bit-identical
+    one = frames28[:1]
+    np.testing.assert_array_equal(np.asarray(exe.run_per_frame(one)),
+                                  np.asarray(exe.run(one)))
+
+
+@pytest.mark.parametrize("n", [1, 3, 5, 7, 9])
+def test_run_padded_round_trip_bit_identical(lenet_exe, frames28, n):
+    """Satellite property test: pad -> bucket -> split == per-request runs
+    across odd batch sizes (n=9 > bucket exercises the chunked path)."""
+    _, exe = lenet_exe
+    frames = frames28[:n]
+    out = np.asarray(exe.run_padded(frames, bucket=8))
+    np.testing.assert_array_equal(out, _singles(exe, frames))
+
+
+def test_run_padded_pad_content_is_inert(lenet_exe, frames28):
+    """The pad frames are zeros, but ANY content must be inert — prove it
+    by comparing a padded run against the same frames alone."""
+    _, exe = lenet_exe
+    a = np.asarray(exe.run_padded(frames28[:3], bucket=4))
+    b = np.asarray(exe.run_padded(frames28[:4], bucket=4))[:3]
+    np.testing.assert_array_equal(a, b)
+    with pytest.raises(ValueError, match="bucket"):
+        exe.run_padded(frames28[:2], bucket=0)
+
+
+def test_warm_traces_every_bucket(lenet_exe):
+    _, exe = lenet_exe
+    assert exe.warm((1, 2, 4)) is exe
+    with pytest.raises(ValueError, match="bucket"):
+        exe.warm((0,))
+
+
+# -- batcher helpers ----------------------------------------------------------
+
+def test_bucket_helpers():
+    assert batcher.power_of_two_buckets(8) == (1, 2, 4, 8)
+    assert batcher.power_of_two_buckets(12) == (1, 2, 4, 8, 12)
+    assert batcher.pick_bucket(3, (1, 2, 4, 8)) == 4
+    assert batcher.pick_bucket(9, (1, 2, 4, 8)) == 8     # chunked upstream
+    assert batcher.padded_slots(3, 4) == 4
+    assert batcher.padded_slots(9, 8) == 16
+    parts = batcher.split_results(np.arange(6), [1, 2, 3])
+    assert [p.tolist() for p in parts] == [[0], [1, 2], [3, 4, 5]]
+    with pytest.raises(ValueError, match="sum of request sizes"):
+        batcher.split_results(np.arange(6), [1, 2])
+    with pytest.raises(ValueError, match="max_batch"):
+        batcher.power_of_two_buckets(0)
+
+
+# -- the server: bit-identity under concurrency -------------------------------
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_server_round_trip_bit_identical_mixed_programs(backend):
+    """Acceptance: micro-batched serving == direct Executable.run, with two
+    programs interleaved (router) and odd request sizes (padding), on both
+    kernel backends (pallas runs in interpret mode off-TPU)."""
+    options = repro.Options(scheme=W4A4, backend=backend)
+    lenet = repro.Program.from_model("lenet", key=jax.random.PRNGKey(0))
+    edge = repro.Program.from_pipeline("edge_detect", 16, 16, 3)
+    rng = np.random.default_rng(1)
+    n_each = 4 if backend == "pallas" else 9
+    server = serve.Server(serve.ServeConfig(max_batch=4, max_wait_ms=2.0))
+    hl = server.register("lenet", lenet, options)
+    he = server.register("edge", edge, options)
+    server.start()
+    subs = []
+    for i in range(n_each):
+        f = rng.random((28, 28, 1), np.float32)
+        subs.append((hl.executable, f, server.submit("lenet", f)))
+        g = rng.random(((i % 3) + 1, 16, 16, 3), np.float32)   # 1..3 frames
+        subs.append((he.executable, g, server.submit("edge", g)))
+    for exe, f, fut in subs:
+        got = fut.result(timeout=120)
+        want = _singles(exe, f if f.ndim == 4 else f[None])
+        np.testing.assert_array_equal(got, want)
+    st = server.stats()
+    assert st["requests"]["served"] == 2 * n_each
+    server.stop()
+
+
+def test_server_smoke_32_requests_stats_sane(lenet_exe, frames28):
+    """The CI-smoke contract: submit 32 async requests, all served, stats
+    snapshot internally consistent."""
+    prog, exe = lenet_exe
+    server = serve.Server(serve.ServeConfig(max_batch=8, max_wait_ms=1.0))
+    server.register("lenet", prog, REFERENCE)
+    server.start()
+    futs = [server.submit("lenet", frames28[i % len(frames28)])
+            for i in range(32)]
+    outs = [f.result(timeout=120) for f in futs]
+    assert all(o.shape == (1, 10) for o in outs)
+    snap = server.stats()
+    p = snap["programs"]["lenet"]
+    assert p["requests"]["served"] == 32 == snap["requests"]["served"]
+    assert p["requests"]["pending"] == 0 and snap["queue_depth"] == 0
+    lat = p["latency_ms"]
+    assert lat["count"] == 32
+    assert 0 < lat["p50"] <= lat["p95"] <= lat["p99"] <= lat["max"]
+    assert 0.0 <= p["padding_waste"] < 1.0
+    assert p["achieved_fps"] > 0 and p["avg_batch"] >= 1.0
+    assert p["model"]["kfps_per_w"] > 0
+    server.stop()
+
+
+def test_server_validates_at_submit(lenet_exe):
+    prog, _ = lenet_exe
+    server = serve.Server()
+    server.register("lenet", prog, REFERENCE)
+    with pytest.raises(ValueError, match="unknown program"):
+        server.submit("bogus", np.zeros((28, 28, 1), np.float32))
+    with pytest.raises(ValueError, match="do not match"):
+        server.submit("lenet", np.zeros((32, 32, 3), np.float32))
+    with pytest.raises(ValueError, match="no frames"):
+        server.submit("lenet", np.zeros((0, 28, 28, 1), np.float32))
+    too_big = np.zeros((serve.ServeConfig().max_queue + 1, 28, 28, 1),
+                       np.float32)
+    with pytest.raises(ValueError, match="exceeds max_queue"):
+        server.submit("lenet", too_big)     # blocking wait is unsatisfiable
+    with pytest.raises(ValueError, match="already registered"):
+        server.register("lenet", prog, REFERENCE)
+    with pytest.raises(RuntimeError, match="no programs"):
+        serve.Server().start()
+
+
+def test_admission_control_and_backpressure(lenet_exe, frames28):
+    """Bounded queue: non-blocking submits are rejected when full, blocking
+    submits time out; starting the server drains the backlog."""
+    prog, _ = lenet_exe
+    server = serve.Server(serve.ServeConfig(max_batch=2, max_queue=2,
+                                            max_wait_ms=0.0))
+    server.register("lenet", prog, REFERENCE)
+    # not started: nothing drains the queue, so the bound must bite
+    f1 = server.submit("lenet", frames28[0])
+    f2 = server.submit("lenet", frames28[1])
+    with pytest.raises(serve.AdmissionError, match="queue full"):
+        server.submit("lenet", frames28[2], block=False)
+    t0 = time.perf_counter()
+    with pytest.raises(serve.AdmissionError, match="backpressure"):
+        server.submit("lenet", frames28[2], block=True, timeout=0.05)
+    assert time.perf_counter() - t0 >= 0.05
+    server.start()                       # backlog drains once started
+    assert f1.result(timeout=120).shape == (1, 10)
+    assert f2.result(timeout=120).shape == (1, 10)
+    assert server.stats()["programs"]["lenet"]["requests"]["rejected"] == 2
+    server.stop()
+
+
+def test_backpressure_unblocks_when_queue_drains(lenet_exe, frames28):
+    """A blocking submit into a full queue must complete once the
+    scheduler makes room — the producer-throttling path."""
+    prog, _ = lenet_exe
+    server = serve.Server(serve.ServeConfig(max_batch=1, max_queue=1,
+                                            max_wait_ms=0.0))
+    server.register("lenet", prog, REFERENCE)
+    server.start()
+    futs = []
+
+    def producer():
+        for i in range(6):
+            futs.append(server.submit("lenet", frames28[i], block=True))
+
+    t = threading.Thread(target=producer)
+    t.start()
+    t.join(timeout=120)
+    assert not t.is_alive()
+    assert all(f.result(timeout=120).shape == (1, 10) for f in futs)
+    server.stop()
+
+
+def test_deadline_shedding(lenet_exe, frames28):
+    prog, _ = lenet_exe
+    server = serve.Server(serve.ServeConfig(max_batch=4, max_wait_ms=0.0))
+    server.register("lenet", prog, REFERENCE)
+    server.start()
+    expired = server.submit("lenet", frames28[0], deadline_ms=0.0)
+    ok = server.submit("lenet", frames28[1], deadline_ms=60_000.0)
+    with pytest.raises(serve.DeadlineExceeded, match="deadline missed"):
+        expired.result(timeout=120)
+    assert ok.result(timeout=120).shape == (1, 10)
+    p = server.stats()["programs"]["lenet"]
+    assert p["requests"]["shed_deadline"] == 1
+    assert p["requests"]["served"] == 1
+    server.stop()
+
+
+def test_stop_drain_serves_backlog_and_rejects_after(lenet_exe, frames28):
+    prog, _ = lenet_exe
+    server = serve.Server(serve.ServeConfig(max_batch=4, max_wait_ms=5.0))
+    server.register("lenet", prog, REFERENCE)
+    server.start()
+    futs = [server.submit("lenet", frames28[i]) for i in range(6)]
+    server.stop(drain=True)
+    assert all(f.result(timeout=1).shape == (1, 10) for f in futs)
+    with pytest.raises(serve.ServerClosed):
+        server.submit("lenet", frames28[0])
+
+
+def test_stop_no_drain_fails_pending(lenet_exe, frames28):
+    prog, _ = lenet_exe
+    server = serve.Server(serve.ServeConfig(max_batch=4))
+    server.register("lenet", prog, REFERENCE)
+    # never started: queued requests must fail, not hang
+    fut = server.submit("lenet", frames28[0])
+    server._started = True               # allow stop() to run the teardown
+    server._scheduler = server._completer = None
+    server.stop(drain=False)
+    with pytest.raises(serve.ServerClosed):
+        fut.result(timeout=1)
+
+
+def test_context_manager_and_oversize_request(lenet_exe, frames28):
+    """Requests larger than every bucket run chunked — same results."""
+    prog, exe = lenet_exe
+    server = serve.Server(serve.ServeConfig(max_batch=4, max_wait_ms=0.0))
+    server.register("lenet", prog, REFERENCE)
+    with server:
+        fut = server.submit("lenet", frames28[:7])      # 7 > max_batch 4
+        np.testing.assert_array_equal(fut.result(timeout=120),
+                                      _singles(exe, frames28[:7]))
+
+
+# -- load generator -----------------------------------------------------------
+
+def test_poisson_load_accounting(lenet_exe, frames28):
+    prog, _ = lenet_exe
+    server = serve.Server(serve.ServeConfig(max_batch=8, max_wait_ms=1.0))
+    server.register("lenet", prog, REFERENCE)
+    server.start()
+    rep = serve.poisson_load(server, "lenet", frames28, rate_rps=400.0,
+                             n_requests=32, seed=3)
+    server.stop()
+    assert rep.submitted + rep.rejected == 32
+    assert rep.served + rep.shed == rep.submitted
+    assert rep.served == rep.latency_ms["count"] > 0
+    assert rep.achieved_rps > 0 and rep.duration_s > 0
+    with pytest.raises(ValueError, match="rate_rps"):
+        serve.poisson_load(server, "lenet", frames28, rate_rps=0,
+                           n_requests=1)
+
+
+@pytest.mark.slow
+def test_load_sweep_microbatching_speedup(lenet_exe, frames28):
+    """The long sweep (slow-marked): micro-batching must beat the batch=1
+    request-at-a-time path at saturating load. The checked-in
+    BENCH_serving.json carries the full curve; this asserts a conservative
+    floor so CI noise doesn't flake."""
+    from benchmarks import bench_serving
+    payload = bench_serving.run(csv=False, quick=True)
+    ab = payload["ablation"]
+    assert ab["microbatch_fps"] > 1.5 * ab["batch1_fps"], ab
+    for point in payload["sweep"]:
+        assert point["latency_ms"]["count"] > 0
+        assert {"p50", "p95", "p99"} <= set(point["latency_ms"])
