@@ -5,7 +5,10 @@ through the Program/Options/Executable front door, measures compiled
 frames/s on the host backend, and scores the
 quantized device output against the float reference path (PSNR/SSIM); recon
 pipelines are additionally scored against the original grayscale frame
-(reconstruction quality). Writes ``BENCH_imaging.json`` next to this file.
+(reconstruction quality). Pipelines whose conv runs fuse (``Options(fuse=)``)
+also get a megakernel ablation: per-frame frames/s with fusion forced on vs
+off (bit-identical by construction; see tests/test_fused_chain.py). Writes
+``BENCH_imaging.json`` next to this file.
 """
 
 from __future__ import annotations
@@ -21,7 +24,7 @@ from repro.core.quant import W4A4, MX_43
 from repro.data.synthetic import synthetic_textures
 from repro.imaging import PIPELINES, apply_float, gray_target, psnr, ssim
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 SCHEMES = {"w4a4": W4A4, "mx43": MX_43}
 HW = 64
 BATCH = 8
@@ -73,9 +76,29 @@ def run(csv: bool = True, pipelines=None):
                 f"bench_imaging.{name}.{sname},{t * 1e6:.0f},"
                 f"fps={fps:.0f};psnr={entry['psnr_db']:.2f}dB;"
                 f"ssim={entry['ssim']:.4f}")
+        # megakernel ablation: per-frame calibration (the fusion-legal
+        # serving case) with fusion forced on vs off
+        fused = None
+        on = prog.compile(repro.Options(fuse="on"))
+        if on.report.fused_segments:
+            off = prog.compile(repro.Options(fuse="off"))
+            t_on = _time_loop(
+                lambda: on.run_per_frame(frames).block_until_ready())
+            t_off = _time_loop(
+                lambda: off.run_per_frame(frames).block_until_ready())
+            fused = {"fps_fused": BATCH / t_on, "fps_unfused": BATCH / t_off,
+                     "speedup": t_off / t_on,
+                     "segments": ["+".join(s["names"])
+                                  for s in on.report.fused_segments]}
+            out_lines.append(
+                f"bench_imaging.{name}.fused,{t_on * 1e6 / BATCH:.0f},"
+                f"unfused_us={t_off * 1e6 / BATCH:.0f};"
+                f"speedup={fused['speedup']:.2f}x;"
+                f"segments={';'.join(fused['segments'])}")
         results[name] = {"kind": pipe.kind,
                          "description": pipe.description,
-                         "schemes": per_scheme}
+                         "schemes": per_scheme,
+                         "fused_ablation": fused}
 
     payload = {
         "schema_version": SCHEMA_VERSION,

@@ -1,6 +1,6 @@
-"""Kernel micro-benchmarks + the conv strategy sweep.
+"""Kernel micro-benchmarks + the conv strategy sweep + the fusion ablation.
 
-Two parts:
+Three parts:
 
   * micro — photonic_mvm / ca_pool / conv_bank vs their oracles (correctness
     deltas + MAC counts; absolute CPU times are interpret-mode, not TPU).
@@ -14,6 +14,14 @@ Two parts:
     multiply's float epsilon, identical for resident and strip. The
     depthwise entry compares the strip kernel against the grouped
     per-channel-im2col path it replaces (raw accumulate: err exactly 0).
+  * fused_chain — megakernel fusion ablation: the 3-stage imaging chain
+    (denoise_gauss -> edge_detect -> sharpen, 4 convs) at 256x256 compiled
+    once with ``Options(fuse="on")`` (all four convs execute as one fused
+    segment, intermediates never leave the stage loop) and once with
+    ``fuse="off"`` (one launch + requant round trip per conv). Records
+    per-frame milliseconds for both, the speedup, and asserts the outputs
+    are *bitwise* identical — fusion is a pure scheduling change.
+    ``scripts/check_bench.py`` gates the speedup ratio in CI.
 
 Writes ``BENCH_kernels.json`` (see docs/benchmarks.md for the schema) next
 to this file.
@@ -38,8 +46,9 @@ from repro.kernels.conv_bank.ref import conv_bank_quant_ref
 from repro.kernels.photonic_mvm.ops import photonic_mvm
 from repro.kernels.photonic_mvm.ref import photonic_mvm_ref
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 SWEEP_SIZES = (64, 128, 256)
+FUSED_CHAIN_HW = 256
 SWEEP_CIN, SWEEP_COUT, SWEEP_K = 8, 16, 3
 OUT_PATH = Path(__file__).resolve().parent / "BENCH_kernels.json"
 
@@ -149,17 +158,48 @@ def _conv_sweep(out, results, sizes):
                f"grouped_im2col_us={us_g:.1f};err={err:.1e}")
 
 
+def _fused_chain(out, results, hw=FUSED_CHAIN_HW):
+    """Megakernel fusion ablation on the 3-stage imaging chain."""
+    from repro.core.program import Options, Program
+    prog = Program.from_pipeline("denoise_gauss", hw, hw, 1).then(
+        Program.from_pipeline("edge_detect", hw, hw, 1)).then(
+        Program.from_pipeline("sharpen", hw, hw, 1))
+    frames = jnp.asarray(np.random.RandomState(3).rand(1, hw, hw, 1),
+                         jnp.float32)
+    # per-frame calibration is the fusion-legal serving case; B=1 keeps the
+    # timing a clean per-frame number
+    on = prog.compile(Options(backend="reference", fuse="on"))
+    off = prog.compile(Options(backend="reference", fuse="off"))
+    us_on = _time(lambda f: on.run_per_frame(f), frames, reps=10)
+    us_off = _time(lambda f: off.run_per_frame(f), frames, reps=10)
+    bitwise = bool(np.array_equal(np.asarray(on.run_per_frame(frames)),
+                                  np.asarray(off.run_per_frame(frames))))
+    assert bitwise, "fused chain output diverged from unfused (must be exact)"
+    seg, = on.plan.fused_segments      # the whole chain is one segment
+    results[str(hw)] = {
+        "fused_us": us_on, "unfused_us": us_off,
+        "speedup": us_off / us_on, "bitwise_equal": bitwise,
+        "segment_names": list(seg.names), "halo_rows": seg.halo_rows,
+        "vmem_bytes": seg.vmem_bytes,
+    }
+    out.append(f"bench_kernels.fused_chain.{hw},{us_on:.1f},"
+               f"unfused_us={us_off:.1f};speedup={us_off / us_on:.2f}x;"
+               f"segment={'+'.join(seg.names)};bitwise={bitwise}")
+
+
 def run(csv=True, sizes=SWEEP_SIZES):
     out = []
-    micro, sweep = {}, {}
+    micro, sweep, fused = {}, {}, {}
     _micro(out, micro)
     _conv_sweep(out, sweep, sizes)
+    _fused_chain(out, fused)
     payload = {
         "schema_version": SCHEMA_VERSION,
         "backend": jax.default_backend(),
         "interpret": dispatch.default_interpret(),
         "micro": micro,
         "conv_strategy_sweep": sweep,
+        "fused_chain": fused,
     }
     OUT_PATH.write_text(json.dumps(payload, indent=2) + "\n")
     if csv:

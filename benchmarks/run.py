@@ -10,7 +10,14 @@
 #   bench_imaging   imaging pipelines frames/s + PSNR/SSIM per scheme
 #   bench_serving   serving runtime: offered-load sweep + batching ablation
 
+import os
 import sys
+
+# Tuned CPU launch env: silence the XLA/TF C++ banner before jax loads.
+# scripts/ci.sh sets the same knob and additionally preloads tcmalloc when
+# it is installed (LD_PRELOAD has to be set before the process starts, so
+# it cannot be applied from here).
+os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "4")
 
 
 def main() -> None:

@@ -6,6 +6,17 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
+# tuned CPU launch env (same knobs benchmarks/run.py documents): quiet the
+# XLA/TF C++ banner noise, and when tcmalloc is installed preload it —
+# XLA's host allocator churn is measurably faster under it — with the
+# large-alloc report threshold pushed up so it never spams the log.
+export TF_CPP_MIN_LOG_LEVEL=${TF_CPP_MIN_LOG_LEVEL:-4}
+TCMALLOC=/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4
+if [[ -e "$TCMALLOC" && -z "${LD_PRELOAD:-}" ]]; then
+    export LD_PRELOAD="$TCMALLOC"
+    export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD=60000000000
+fi
+
 # repo hygiene: bytecode caches must never be tracked (.gitignore covers
 # them, but files committed before the ignore rule — or force-added —
 # slip through silently)
@@ -23,8 +34,19 @@ fi
 # docs gate: every docs/*.md referenced from README, no dead relative links
 python scripts/check_docs.py
 
+# bench gate: committed BENCH_*.json must keep their invariants (fused
+# megakernel >= 1.5x and bitwise-exact, oracle errors at float epsilon)
+# and stay inside the timing tolerance band vs the previous commit
+python scripts/check_bench.py
+
 # conv kernels again with the strip-mined strategy forced (large-frame path)
 REPRO_CONV_STRATEGY=strip python -m pytest tests/test_kernels_conv_bank.py -q
+
+# and with megakernel fusion forced: every conv run that can legally fuse
+# executes as a single pass, and the fused-chain property suite re-runs
+# under the forced strategy (bit-identity is the bar)
+REPRO_CONV_STRATEGY=fused python -m pytest \
+    tests/test_kernels_conv_bank.py tests/test_fused_chain.py -q
 
 # end-to-end serving smoke: imaging pipeline + CNN through the repro.serve
 # micro-batching runtime, exercising the Options-mapped CLI flags

@@ -221,6 +221,10 @@ class LightatorDevice:
         schedules: List[ocore.OCSchedule] = []
         spec_list: List[WASpec] = []
         conv_strategy: Dict[str, Dict] = {}
+        # chain geoms aligned with the plan's step indices (each seed-IR
+        # layer compiles to exactly one step), so the fused-segment report
+        # resolves identically to the compile pass
+        geoms: List[Optional[dispatch.ChainGeom]] = []
 
         # step 1: ADC-less imager — CRC on raw pixels
         codes, act_scale = _crc_requant(image)
@@ -238,6 +242,7 @@ class LightatorDevice:
                     "CA", h, w_, layer.pool,
                     channels=image.shape[-1], oc=self.oc))
                 spec_list.append(WASpec(4, 4))
+                geoms.append(None)
                 x, act_scale = _crc_requant(g)
             elif isinstance(layer, ConvSpec):
                 if layer.depthwise:
@@ -247,6 +252,14 @@ class LightatorDevice:
                         f"interpreter covers the seed IR")
                 wa = next(spec_iter)
                 p = params[layer.name]
+                pads = jax.lax.padtype_to_pads(
+                    (x.shape[1], x.shape[2]), (layer.kernel, layer.kernel),
+                    (layer.stride, layer.stride), layer.padding)
+                geoms.append(dispatch.ChainGeom(
+                    layer.name, x.shape[1], x.shape[2], layer.c_in,
+                    layer.c_out, layer.kernel, layer.stride,
+                    tuple((int(lo), int(hi)) for lo, hi in pads),
+                    act=layer.act, pool=layer.pool))
                 y = self._conv(x, act_scale, p["w"], p.get("b"), layer, wa)
                 # record the conv strategy the kernel path would choose for
                 # this layer's (pre-pool) output dims — same resolution as
@@ -276,8 +289,10 @@ class LightatorDevice:
             elif isinstance(layer, FlattenSpec):
                 intens = x * act_scale
                 flat = intens.reshape(intens.shape[0], -1)
+                geoms.append(None)
                 x, act_scale = _crc_requant(flat)
             elif isinstance(layer, DenseSpec):
+                geoms.append(None)
                 wa = next(spec_iter)
                 p = params[layer.name]
                 y = self._dense(x, act_scale, p["w"], p.get("b"), wa)
@@ -300,4 +315,7 @@ class LightatorDevice:
                for s, sp in zip(schedules, spec_list)]
         report = self.power.finalize_report(lps, schedules, scheme)
         report.conv_strategy = conv_strategy
+        report.fused_segments = [
+            dataclasses.asdict(f)
+            for f in dispatch.select_fused_segments(geoms)]
         return logits, report

@@ -154,6 +154,9 @@ class ConvStep:
     # resolved once at compile time from the layer's output dims and the
     # REPRO_CONV_STRATEGY / VMEM-budget environment (kernels.dispatch)
     strategy: Optional[dispatch.ConvStrategy] = None
+    # static chain geometry for the megakernel fusion pass — input dims,
+    # pads, act/pool; what select_fused_segments and conv_chain consume
+    geom: Optional[dispatch.ChainGeom] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -204,6 +207,11 @@ class CompiledPlan:
     report: pmod.ModelReport
     out_features: int
     consts: Dict[str, object] = dataclasses.field(default_factory=dict)
+    # fused megakernel segments (runs of conv steps executing as one
+    # launch each, see kernels.dispatch.select_fused_segments); resolved
+    # at compile time, applied by the executor when calibration allows
+    # (per-frame, or per-tensor at batch 1)
+    fused_segments: Tuple[dispatch.FusedSegmentSpec, ...] = ()
     _exec_fns: Dict[str, object] = dataclasses.field(default_factory=dict,
                                                      repr=False)
 
@@ -224,7 +232,8 @@ class CompiledPlan:
         if fn is None:
             fn = jax.jit(
                 lambda params, frames, consts: _execute_steps(
-                    self.steps, params, frames, consts, per_frame=per_frame))
+                    self.steps, params, frames, consts, per_frame=per_frame,
+                    segments=self.fused_segments))
             self._exec_fns[key] = fn
         return fn
 
@@ -256,7 +265,8 @@ def _compile_model(layers: Sequence, input_shape: Tuple[int, ...],
                    act_sram_kb: float = 256.0,
                    fc_batch: int = 1,
                    conv_strategy: Optional[str] = None,
-                   conv_vmem_budget: Optional[int] = None) -> CompiledPlan:
+                   conv_vmem_budget: Optional[int] = None,
+                   fuse: Optional[str] = None) -> CompiledPlan:
     """Resolve specs, shapes, OC schedules and the power report — once.
 
     ``input_shape`` is the frame shape, batched [B, H, W, C] or per-frame
@@ -280,6 +290,11 @@ def _compile_model(layers: Sequence, input_shape: Tuple[int, ...],
     defers to the ``REPRO_CONV_STRATEGY`` / ``REPRO_CONV_VMEM_BUDGET`` env
     defaults. The cache key holds the *resolved* values, so an explicit
     option equal to the ambient env default hits the same cached plan.
+
+    ``fuse`` pins the megakernel chain-fusion mode ("auto" | "on" | "off",
+    what ``Options(fuse=...)`` passes down); ``None`` derives it from the
+    resolved conv strategy mode (``dispatch.conv_fuse_mode``: forced
+    resident/strip disable fusion, ``fused`` forces it on).
     """
     from repro.core.accelerator import (CASpec, ConvSpec, DenseSpec,
                                         FlattenSpec, UpsampleSpec)
@@ -294,8 +309,10 @@ def _compile_model(layers: Sequence, input_shape: Tuple[int, ...],
                  else dispatch.conv_strategy_mode())
     conv_budget = (conv_vmem_budget if conv_vmem_budget is not None
                    else dispatch.conv_vmem_budget())
+    fuse_mode = fuse if fuse is not None else dispatch.conv_fuse_mode(conv_mode)
     key = (layers, frame_shape, scheme, oc, circuit, profile,
-           weight_sram_kb, act_sram_kb, fc_batch, (conv_mode, conv_budget))
+           weight_sram_kb, act_sram_kb, fc_batch,
+           (conv_mode, conv_budget, fuse_mode))
     cached = _PLAN_CACHE.get(key)
     if cached is not None:
         _CACHE_STATS["hits"] += 1
@@ -345,6 +362,11 @@ def _compile_model(layers: Sequence, input_shape: Tuple[int, ...],
                 h_out, w_out, layer.c_in, layer.c_out, layer.kernel,
                 layer.stride, groups=layer.c_in if layer.depthwise else 1,
                 mode=conv_mode, budget=conv_budget)
+            geom = dispatch.ChainGeom(
+                layer.name, h, w, layer.c_in, layer.c_out, layer.kernel,
+                layer.stride, pads,
+                groups=layer.c_in if layer.depthwise else 1,
+                act=layer.act, pool=layer.pool)
             h, w, c = h_out, w_out, layer.c_out
             if layer.pool is not None:
                 kind, size = layer.pool
@@ -373,7 +395,7 @@ def _compile_model(layers: Sequence, input_shape: Tuple[int, ...],
             steps.append(ConvStep(layer.name, wa, layer.kernel, layer.stride,
                                   layer.act, layer.pool, pads,
                                   groups=layer.c_in if layer.depthwise else 1,
-                                  strategy=strat))
+                                  strategy=strat, geom=geom))
         elif isinstance(layer, UpsampleSpec):
             if layer.method not in ("bilinear", "nearest"):
                 raise ValueError(f"unknown upsample method {layer.method!r}")
@@ -418,6 +440,10 @@ def _compile_model(layers: Sequence, input_shape: Tuple[int, ...],
     report.conv_strategy = {
         s.name: dataclasses.asdict(s.strategy) for s in steps
         if isinstance(s, ConvStep)}
+    fused_segments = dispatch.select_fused_segments(
+        [s.geom if isinstance(s, ConvStep) else None for s in steps],
+        mode=fuse_mode, budget=conv_budget)
+    report.fused_segments = [dataclasses.asdict(f) for f in fused_segments]
 
     # quantization divisors, fed to the executor as traced scalars (see the
     # bit-identity note at the top of this module)
@@ -429,7 +455,8 @@ def _compile_model(layers: Sequence, input_shape: Tuple[int, ...],
 
     plan = CompiledPlan(layers, frame_shape, scheme, tuple(steps),
                         tuple(schedules), tuple(spec_list), report,
-                        out_features or c, consts)
+                        out_features or c, consts,
+                        fused_segments=fused_segments)
     _PLAN_CACHE[key] = plan
     return plan
 
@@ -440,7 +467,9 @@ def _compile_model(layers: Sequence, input_shape: Tuple[int, ...],
 
 def _execute_steps(steps: Tuple[PlanStep, ...], params: Dict[str, Dict],
                    frames: jnp.ndarray, consts: Dict[str, object],
-                   per_frame: bool = False) -> jnp.ndarray:
+                   per_frame: bool = False,
+                   segments: Tuple[dispatch.FusedSegmentSpec, ...] = ()
+                   ) -> jnp.ndarray:
     """The device forward, batch-first, kernels via ``kernels.dispatch``.
 
     Numerics contract: bit-identical to ``LightatorDevice.run_eager`` (on
@@ -459,13 +488,38 @@ def _execute_steps(steps: Tuple[PlanStep, ...], params: Dict[str, Dict],
     accumulates are exact integers, the dequant/activation chain is
     elementwise), so a frame served at any batch position is bit-identical
     to the same frame run at batch 1.
+
+    ``segments`` are the plan's fused megakernel runs: when a run's start
+    index comes up, its conv steps execute as ONE launch via
+    ``dispatch.conv_chain`` (tap-loop accumulate + full fused epilogue
+    per stage), bit-identical to the step-by-step path. The inter-stage
+    CRC scale is a whole-frame reduction, so fusion applies only when
+    frames are calibration-independent — per-frame mode, or per-tensor at
+    batch 1 (the batch is static under jit, so this is a trace-time
+    fallback, not a runtime branch).
     """
     from repro.core.accelerator import _activation
 
     a_qmax = consts["a_qmax"]
     codes, act_scale = _crc_requant_traced(frames, a_qmax, per_frame)
     x = codes
-    for step in steps:
+    fuse_ok = per_frame or frames.shape[0] == 1
+    seg_at = {s.start: s for s in segments} if fuse_ok else {}
+    i, n = 0, len(steps)
+    while i < n:
+        step = steps[i]
+        seg = seg_at.get(i)
+        if seg is not None:
+            stages = []
+            for s in steps[i:i + seg.length]:
+                p = params[s.name]
+                wq, ws = _quantize_weight_traced(p["w"], s.wa,
+                                                 consts["w_qmax"][s.name])
+                stages.append((s.geom, wq, ws, p.get("b")))
+            x, act_scale = dispatch.conv_chain(x, act_scale, stages, a_qmax,
+                                               per_frame)
+            i += seg.length
+            continue
         if isinstance(step, CAStep):
             intens = x * act_scale
             g = dispatch.ca_acquire(intens, step.pool, step.rgb_to_gray)
@@ -513,6 +567,7 @@ def _execute_steps(steps: Tuple[PlanStep, ...], params: Dict[str, Dict],
                 x, act_scale = out, jnp.asarray(1.0)
         else:
             raise TypeError(f"unknown plan step {step!r}")
+        i += 1
     # dequantize the final stage (act_scale is 1.0 after a no-act dense, a
     # scalar per-tensor scale, or a [B, 1, ...] per-frame scale — all
     # broadcast-exact, and the per-tensor multiply is the seed expression)

@@ -130,6 +130,11 @@ class ModelReport:
     # eager interpreter so reports stay comparable field-for-field; empty
     # for schedule-only reports (PowerModel.model_report)
     conv_strategy: Dict[str, Dict] = dataclasses.field(default_factory=dict)
+    # fused megakernel segments (runs of conv steps executing as one
+    # launch, kernels.dispatch.select_fused_segments) — recorded by both
+    # the compile pass and the eager interpreter; empty when fusion is off
+    # or for schedule-only reports
+    fused_segments: List[Dict] = dataclasses.field(default_factory=list)
 
     def component_totals(self) -> Dict[str, float]:
         """Time-weighted component powers across the model (Fig. 9 pie)."""

@@ -81,9 +81,19 @@ class Options:
     ``interpret``       ``REPRO_FORCE_INTERPRET``  Pallas interpret flag
                         (else off on TPU)
     ``conv_strategy``   ``REPRO_CONV_STRATEGY``    ``auto`` | ``resident``
-                        (else ``auto``)            | ``strip``
+                        (else ``auto``)            | ``strip`` | ``fused``
     ``conv_vmem_budget``  ``REPRO_CONV_VMEM_BUDGET``  heuristic budget, bytes
+    ``fuse``            derived from the conv      megakernel chain fusion:
+                        strategy mode              ``auto`` | ``on`` | ``off``
     ==================  =========================  =======================
+
+    ``fuse`` controls the megakernel pass (``dispatch.
+    select_fused_segments``): runs of chainable convs execute as ONE kernel
+    launch each, bit-identical to the unfused path. ``auto`` fuses runs of
+    >= 2 stages under the channel cap + VMEM budget; ``on`` fuses every
+    legal run (singletons included); ``off`` disables. ``None`` derives the
+    mode from the conv strategy: ``fused`` -> on, forced ``resident``/
+    ``strip`` -> off, ``auto`` -> auto.
 
     ``shard_batch`` shards ``Executable.run``'s batch axis over the local
     devices (or an explicit ``mesh``) via ``NamedSharding`` — a graceful
@@ -104,6 +114,7 @@ class Options:
     interpret: Optional[bool] = None
     conv_strategy: Optional[str] = None
     conv_vmem_budget: Optional[int] = None
+    fuse: Optional[str] = None
     shard_batch: bool = False
     mesh: Optional[jax.sharding.Mesh] = None
 
@@ -121,6 +132,9 @@ class Options:
         if self.conv_vmem_budget is not None and self.conv_vmem_budget <= 0:
             raise ValueError(f"conv_vmem_budget must be > 0, got "
                              f"{self.conv_vmem_budget}")
+        if self.fuse is not None and self.fuse not in dispatch.FUSE_MODES:
+            raise ValueError(f"unknown fuse mode {self.fuse!r}; expected "
+                             f"one of {dispatch.FUSE_MODES}")
 
     def resolve(self) -> "Options":
         """Fill every ``None`` field from its env-var/auto default.
@@ -140,6 +154,8 @@ class Options:
             conv_vmem_budget=(self.conv_vmem_budget
                               if self.conv_vmem_budget is not None
                               else dispatch.conv_vmem_budget()),
+            fuse=(self.fuse if self.fuse is not None
+                  else dispatch.conv_fuse_mode(self.conv_strategy)),
         )
 
     def describe(self) -> str:
@@ -155,7 +171,7 @@ class Options:
                 else f"{r.conv_vmem_budget >> 10}KB")
         return (f"scheme={r.scheme.name} backend={r.backend} "
                 f"interpret={r.interpret} conv={r.conv_strategy}"
-                f"(vmem={vmem}) fc_batch={r.fc_batch}{shard}")
+                f"(vmem={vmem}) fuse={r.fuse} fc_batch={r.fc_batch}{shard}")
 
 
 # ---------------------------------------------------------------------------
@@ -307,7 +323,8 @@ class Program:
             weight_sram_kb=options.weight_sram_kb,
             act_sram_kb=options.act_sram_kb, fc_batch=options.fc_batch,
             conv_strategy=options.conv_strategy,
-            conv_vmem_budget=options.conv_vmem_budget)
+            conv_vmem_budget=options.conv_vmem_budget,
+            fuse=options.fuse)
         return Executable(self, options, plan)
 
 

@@ -1,0 +1,181 @@
+"""The fused conv-chain Pallas megakernel: one launch per segment.
+
+The per-layer kernels (``kernel.py``, ``strip_kernel.py``) each run one
+conv's integer accumulate and hand the epilogue (dequant -> bias ->
+activation -> pool -> CRC requant) back to XLA — so an N-stage imaging
+chain pays N kernel launches plus N HBM round trips for intermediate
+frames. This module executes a whole *fused segment* (a run of chainable
+convs picked by ``dispatch.select_fused_segments``) as ONE ``pallas_call``:
+
+  * grid = (batch,): each grid step owns one frame end to end, so the
+    input DMA for frame b+1 overlaps frame b's compute via the Pallas
+    pipeline emitter (automatic double buffering of the block operands);
+  * the stage loop is unrolled in Python at trace time from the segment's
+    static ``ChainGeom``s — every stage keeps its intermediate frame in
+    VMEM, runs the k*k tap-loop accumulate (exact integers, the same
+    arm-granular structure as the strip kernel), then the complete fused
+    epilogue *in-kernel*: dequant, bias (behind the ``nextafter`` FMA
+    guard), activation, pooling, and CRC requantization;
+  * the inter-stage CRC scale is a whole-frame max — a stage barrier
+    inside the launch. That is deliberate: requant calibration is a global
+    reduction, so a halo-grown strip pyramid could only approximate it.
+    Whole frames in VMEM keep the math bit-identical to the unfused path,
+    which is the correctness bar (``ref.conv_chain_ref`` is the oracle;
+    the VMEM budget check in ``dispatch.select_fused_segments`` keeps
+    segments inside what this layout can hold).
+
+Because each grid step reduces over its own frame only, the kernel
+computes *per-frame* calibration natively; per-tensor calibration fuses
+only at batch 1 (the same reduction), which ``dispatch.conv_chain``
+enforces.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.quant import ACT_BITS
+
+
+def _stage_compute(x, w, ws, b, scale, aq, geom):
+    """One fused stage on a single frame held in VMEM.
+
+    x [H, W, C_in] codes; w [k, k, C_in/g, C_out]; ws [C_out]; b [C_out]
+    or None; scale/aq scalars. Returns (codes [H', W', C_out], scale').
+    Every expression mirrors the unfused ``plan._execute_steps`` epilogue
+    (and ``ref.conv_chain_ref``) term for term — bit-identity depends on it.
+    """
+    from repro.core.accelerator import _activation
+    k, s = geom.kernel, geom.stride
+    (plo, phi), (qlo, qhi) = geom.pads
+    xp = jnp.pad(x, ((plo, phi), (qlo, qhi), (0, 0)))
+    hp, wp, c_in = xp.shape
+    h_out = (hp - k) // s + 1
+    w_out = (wp - k) // s + 1
+    c_out = w.shape[-1]
+    if geom.depthwise:
+        acc = jnp.zeros((h_out, w_out, c_out), jnp.float32)
+        for di in range(k):
+            for dj in range(k):
+                patch = jax.lax.slice(
+                    xp, (di, dj, 0),
+                    (di + (h_out - 1) * s + 1, dj + (w_out - 1) * s + 1,
+                     c_in), (s, s, 1))
+                acc = acc + patch * w[di, dj, 0]
+    else:
+        acc = jnp.zeros((h_out * w_out, c_out), jnp.float32)
+        for di in range(k):
+            for dj in range(k):
+                patch = jax.lax.slice(
+                    xp, (di, dj, 0),
+                    (di + (h_out - 1) * s + 1, dj + (w_out - 1) * s + 1,
+                     c_in), (s, s, 1))
+                pf = patch.reshape(h_out * w_out, c_in)
+                acc = acc + jax.lax.dot_general(
+                    pf, w[di, dj], (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+        acc = acc.reshape(h_out, w_out, c_out)
+    out = acc * (scale * ws)
+    if b is not None:
+        out = jnp.nextafter(out, out) + b
+    y = _activation(out, geom.act)
+    if geom.pool is not None:
+        kind, size = geom.pool
+        h_, w_, c_ = y.shape
+        yr = y.reshape(h_ // size, size, w_ // size, size, c_)
+        y = yr.max(axis=(1, 3)) if kind == "max" else yr.mean(axis=(1, 3))
+    y = jnp.maximum(y, 0.0)
+    amax = jnp.max(y)
+    new_scale = jnp.maximum(amax, 1e-8) / aq
+    codes = jnp.clip(jnp.round(y / new_scale), 0, (1 << ACT_BITS) - 1)
+    return codes, new_scale
+
+
+def _chain_kernel(x_ref, s_ref, aq_ref, *rest, geoms, has_bias):
+    """One frame through every fused stage (grid = (batch,))."""
+    out_ref, scale_ref = rest[-2], rest[-1]
+    stage_refs = rest[:-2]
+    x = x_ref[0]
+    scale = s_ref[0, 0]
+    aq = aq_ref[0, 0]
+    r = 0
+    for i, geom in enumerate(geoms):
+        w = stage_refs[r][...]
+        ws = stage_refs[r + 1][0]
+        r += 2
+        b = None
+        if has_bias[i]:
+            b = stage_refs[r][0]
+            r += 1
+        x, scale = _stage_compute(x, w, ws, b, scale, aq, geom)
+    out_ref[0] = x.astype(out_ref.dtype)
+    scale_ref[0, 0] = scale
+
+
+def conv_chain_kernel(codes: jnp.ndarray, act_scale, stages: Sequence,
+                      a_qmax, interpret: bool = True
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused segment as one ``pallas_call``. codes [B, H, W, C_in].
+
+    ``stages``: sequence of ``(geom: dispatch.ChainGeom, wq, ws, bias)``
+    (static geometry + traced operands). ``act_scale`` is the incoming CRC
+    scale — 0-d (per-tensor, batch 1) or [B, 1, 1, 1] (per-frame).
+    Returns ``(codes [B, H', W', C_out], scale [B, 1, 1, 1])`` after the
+    last stage's requant — bit-identical to ``ref.conv_chain_ref``.
+    """
+    b = codes.shape[0]
+    geoms = tuple(g for g, _, _, _ in stages)
+    has_bias = tuple(bias is not None for _, _, _, bias in stages)
+    s2 = jnp.asarray(act_scale, jnp.float32).reshape(-1, 1)
+    if s2.shape[0] != b:
+        s2 = jnp.broadcast_to(s2, (b, 1))
+    aq = jnp.asarray(a_qmax, jnp.float32).reshape(1, 1)
+
+    operands = [codes.astype(jnp.float32), s2, aq]
+    in_specs = [
+        pl.BlockSpec((1,) + codes.shape[1:], lambda i: (i, 0, 0, 0)),
+        pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        pl.BlockSpec((1, 1), lambda i: (0, 0)),
+    ]
+
+    def _whole(shape):
+        nd = len(shape)
+        return pl.BlockSpec(shape, lambda i, _nd=nd: (0,) * _nd)
+
+    for geom, wq, ws, bias in stages:
+        c_out = geom.c_out
+        wf = wq.astype(jnp.float32)
+        operands.append(wf)
+        in_specs.append(_whole(wf.shape))
+        # per-tensor weight specs give a size-1 ws — broadcast to the
+        # channel row the kernel expects (same f32 value, same multiply)
+        operands.append(jnp.broadcast_to(
+            ws.astype(jnp.float32).reshape(1, -1), (1, c_out)))
+        in_specs.append(_whole((1, c_out)))
+        if bias is not None:
+            operands.append(jnp.asarray(bias, jnp.float32).reshape(1, c_out))
+            in_specs.append(_whole((1, c_out)))
+
+    h_out, w_out = geoms[-1].out_hw()
+    c_out = geoms[-1].c_out
+
+    out, scale = pl.pallas_call(
+        functools.partial(_chain_kernel, geoms=geoms, has_bias=has_bias),
+        grid=(b,),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, h_out, w_out, c_out), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h_out, w_out, c_out), jnp.float32),
+            jax.ShapeDtypeStruct((b, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*operands)
+    return out, scale.reshape(b, 1, 1, 1)

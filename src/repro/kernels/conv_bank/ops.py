@@ -30,13 +30,18 @@ def conv_bank(x: jnp.ndarray, w: jnp.ndarray,
               spec: Optional[WASpec] = None,
               act_scale: float = 1.0 / 15.0,
               padding: str = "SAME", bn: int = 64,
-              strategy: Optional[str] = None) -> jnp.ndarray:
+              strategy: Optional[str] = None,
+              act: str = "none",
+              bias: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """kxk conv through the OC mapping. x [B,H,W,Cin]; w [k,k,Cin,Cout].
 
     With ``spec`` the integer photonic path runs (uint4 codes x int-w
     weights); without it, a float conv with the same tap-dot structure.
     ``strategy`` ("resident" | "strip" | "auto" | None=auto) selects the
-    resident or strip-mined kernel (see module docstring).
+    resident or strip-mined kernel (see module docstring). On the quantized
+    path ``act``/``bias`` fuse the per-layer epilogue (dequant -> bias ->
+    activation) into the kernel instead of separate XLA ops — bit-identical
+    either way (``strip_kernel._epilogue``).
     """
     kk = w.shape[0]
     pad = kk // 2 if padding == "SAME" else 0
@@ -56,14 +61,18 @@ def conv_bank(x: jnp.ndarray, w: jnp.ndarray,
                       ((0, 0), (pad, pad), (pad, pad), (0, 0)))
         wf, wsf = w.astype(jnp.float32), jnp.ones((w.shape[-1],), jnp.float32)
         quantized, act_scale = False, 1.0
+    fuse_act = act if quantized else "none"
+    fuse_bias = bias if quantized else None
     if strat.kind == "strip":
         xin = SK.pad_rows_for_strips(xin, kk, 1, strat.strip_rows,
                                      strat.n_strips)
         out = SK.conv_strip_kernel(xin, wf, wsf, kk=kk, stride=1,
                                    strip_h=strat.strip_rows, bn=bn,
                                    act_scale=act_scale, quantized=quantized,
+                                   act=fuse_act, bias=fuse_bias,
                                    interpret=default_interpret())
         return out[:, :h_out]
     return K.conv_bank_kernel(xin, wf, wsf, kk=kk, bn=bn,
                               act_scale=act_scale, quantized=quantized,
+                              act=fuse_act, bias=fuse_bias,
                               interpret=default_interpret())

@@ -6,10 +6,15 @@ VGG16/AlexNet layers of Fig. 10 where the image (let alone its im2col patch
 matrix) no longer fits on-chip. This module is the large-frame path:
 
   * the output spatial rows are tiled into strips of ``strip_h`` rows;
-  * the input stays off-chip (``memory_space=ANY``) and each grid step DMAs
-    exactly one input strip plus its (k-1)-row halo into a VMEM scratch
-    buffer (``pltpu.make_async_copy``) — the strip is fetched once and
-    reused across every output-channel block;
+  * the input stays off-chip (``memory_space=ANY``) and each strip's input
+    rows plus (k-1)-row halo are DMA'd into a VMEM scratch slot
+    (``pltpu.make_async_copy``) — fetched once per strip and reused across
+    every output-channel block;
+  * the halo DMA is **double-buffered**: the scratch holds two strip slots
+    with a DMA semaphore each, and while strip s's tap loop computes out of
+    slot s%2, the DMA for strip s+1 is already in flight into the other
+    slot — the copy latency hides behind the k*k matmul loop instead of
+    serializing in front of it (the strip for s=0 is the only cold fetch).
   * the tap loop then runs unchanged on the VMEM strip: k*k shifted
     [strip_h*W, C_in] x [C_in, bn] MXU matmuls accumulated in f32, the same
     arm-granular structure as the resident kernel, so the integer-exactness
@@ -17,6 +22,14 @@ matrix) no longer fits on-chip. This module is the large-frame path:
 
 Grid: (batch, strip, out-channel block) — the channel block innermost so one
 halo DMA serves ``C_out / bn`` compute steps (input-stationary).
+
+On the quantized path the kernels can also fuse the per-layer epilogue
+(dequant -> bias -> activation) behind the accumulate via ``act=`` /
+``bias=`` — the expressions mirror ``core.plan._execute_steps`` (including
+the ``nextafter`` FMA guard), so the fused epilogue stays bit-identical to
+the separate XLA ops it replaces. The CRC *requant* cannot fuse here: its
+scale is a whole-frame max and a strip only sees its own rows — whole-frame
+requant fusion lives in ``fused_kernel.conv_chain_kernel``.
 
 The depthwise variant keeps the strip/halo structure but replaces the MXU
 matmul with a VPU multiply-accumulate per tap (each output channel sees one
@@ -58,32 +71,76 @@ def _tap_patch(x: jnp.ndarray, di: int, dj: int, strip_h: int, w_out: int,
         (stride, stride, 1))
 
 
-def _conv_strip_kernel(x_hbm, w_ref, ws_ref, out_ref, xs_ref, sem, *,
-                       kk: int, stride: int, strip_h: int, w_out: int,
-                       c_in: int, rows_in: int, act_scale: float,
-                       quantized: bool):
+def _epilogue(acc: jnp.ndarray, act_scale: float, ws, b, act: str):
+    """The fused quantized epilogue: dequant -> bias -> activation.
+
+    Expression-for-expression the unfused ``plan._execute_steps`` recipe
+    (``nextafter(x, x)`` is its FMA guard) so fusing it into the kernel
+    cannot change a bit.
+    """
+    acc = acc * act_scale * ws
+    if b is not None:
+        acc = jnp.nextafter(acc, acc) + b
+    if act != "none":
+        from repro.core.accelerator import _activation
+        acc = _activation(acc, act)
+    return acc
+
+
+def _strip_dma(x_hbm, xs_ref, sems, b, s, *, stride: int, strip_h: int,
+               rows_in: int, n_strips: int):
+    """Double-buffered halo DMA for strip ``s`` of batch ``b``.
+
+    Waits for slot s%2 (strip s's rows + halo, started by the previous
+    strip's prefetch — or right here for the cold first strip of a batch),
+    then starts the DMA for strip s+1 into the other slot so it lands
+    while the caller's tap loop runs. Returns the ready slot index.
+    """
+    def _copy(strip, slot):
+        return pltpu.make_async_copy(
+            x_hbm.at[b, pl.ds(strip * (strip_h * stride), rows_in)],
+            xs_ref.at[slot], sems.at[slot])
+
+    slot = jax.lax.rem(s, 2)
+
+    @pl.when(s == 0)
+    def _cold_fetch():
+        _copy(0, 0).start()
+
+    _copy(s, slot).wait()
+
+    @pl.when(s + 1 < n_strips)
+    def _prefetch_next():
+        _copy(s + 1, jax.lax.rem(s + 1, 2)).start()
+
+    return slot
+
+
+def _conv_strip_kernel(x_hbm, w_ref, ws_ref, *rest, kk: int, stride: int,
+                       strip_h: int, w_out: int, c_in: int, rows_in: int,
+                       n_strips: int, act_scale: float, quantized: bool,
+                       act: str, has_bias: bool):
     """One (strip, out-channel block) output tile.
 
     x_hbm:  [B, Hp, Wp, c_in] in ANY/HBM — never blocked into VMEM whole
     w_ref:  [kk, kk, c_in, bn] VMEM        ws_ref: [1, bn]
-    xs_ref: [rows_in, Wp, c_in] VMEM scratch (strip + halo), persists across
-            the innermost grid dim; sem: DMA completion semaphore
+    xs_ref: [2, rows_in, Wp, c_in] VMEM scratch (two strip+halo slots,
+            double-buffered; persists across the innermost grid dim);
+    sems:   one DMA completion semaphore per slot
     out_ref: [1, strip_h, w_out, bn]
     """
+    b_ref = rest[0] if has_bias else None
+    out_ref, xs_ref, sems = rest[-3], rest[-2], rest[-1]
     b = pl.program_id(0)
     s = pl.program_id(1)
     n_blk = pl.program_id(2)
 
     @pl.when(n_blk == 0)
     def _fetch_strip():
-        # strip + (kk-1)-row halo; fetched once, reused for every bn block
-        cp = pltpu.make_async_copy(
-            x_hbm.at[b, pl.ds(s * (strip_h * stride), rows_in)],
-            xs_ref, sem)
-        cp.start()
-        cp.wait()
+        _strip_dma(x_hbm, xs_ref, sems, b, s, stride=stride, strip_h=strip_h,
+                   rows_in=rows_in, n_strips=n_strips)
 
-    x = xs_ref[...]
+    x = xs_ref[jax.lax.rem(s, 2)]
     bn = out_ref.shape[-1]
     acc = jnp.zeros((strip_h * w_out, bn), jnp.float32)
     for di in range(kk):
@@ -95,17 +152,19 @@ def _conv_strip_kernel(x_hbm, w_ref, ws_ref, out_ref, xs_ref, sem, *,
                 pf, wf, (((1,), (0,)), ((), ())),
                 preferred_element_type=jnp.float32)
     if quantized:
-        acc = acc * act_scale * ws_ref[...]
+        acc = _epilogue(acc, act_scale, ws_ref[...],
+                        b_ref[...] if has_bias else None, act)
     out_ref[0] = acc.reshape(strip_h, w_out, bn).astype(out_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("kk", "stride", "strip_h", "bn",
-                                             "act_scale", "quantized",
+                                             "act_scale", "quantized", "act",
                                              "interpret"))
 def conv_strip_kernel(x_padded: jnp.ndarray, w: jnp.ndarray, ws: jnp.ndarray,
                       kk: int, stride: int = 1, strip_h: int = 8,
                       bn: int = 64, act_scale: float = 1.0,
-                      quantized: bool = False,
+                      quantized: bool = False, act: str = "none",
+                      bias: jnp.ndarray | None = None,
                       interpret: bool = True) -> jnp.ndarray:
     """x_padded [B, Hp, Wp, Cin]; w [kk,kk,Cin,Cout] -> [B, H_out, W_out, Cout].
 
@@ -113,6 +172,9 @@ def conv_strip_kernel(x_padded: jnp.ndarray, w: jnp.ndarray, ws: jnp.ndarray,
     tile exactly — ``Hp == (n_strips*strip_h - 1)*stride + kk`` — i.e. the
     last strip's halo DMA ends exactly at the padded bottom edge. Output
     rows past the true h_out are the caller's padding to slice off.
+
+    On the quantized path ``act``/``bias`` fuse the per-layer epilogue
+    (dequant -> bias -> activation) into the kernel — see ``_epilogue``.
     """
     b, hp, wp, c_in = x_padded.shape
     w_out = (wp - kk) // stride + 1
@@ -131,62 +193,71 @@ def conv_strip_kernel(x_padded: jnp.ndarray, w: jnp.ndarray, ws: jnp.ndarray,
     while c_out % bn:
         bn -= 1
     ws2 = ws.reshape(1, c_out).astype(jnp.float32)
+    has_bias = bias is not None
+    operands = [x_padded.astype(jnp.float32), w.astype(jnp.float32), ws2]
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.ANY),
+        pl.BlockSpec((kk, kk, c_in, bn), lambda i, s, n: (0, 0, 0, n)),
+        pl.BlockSpec((1, bn), lambda i, s, n: (0, n)),
+    ]
+    if has_bias:
+        operands.append(jnp.asarray(bias, jnp.float32).reshape(1, c_out))
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, s, n: (0, n)))
     return pl.pallas_call(
         functools.partial(_conv_strip_kernel, kk=kk, stride=stride,
                           strip_h=strip_h, w_out=w_out, c_in=c_in,
-                          rows_in=rows_in, act_scale=act_scale,
-                          quantized=quantized),
+                          rows_in=rows_in, n_strips=n_strips,
+                          act_scale=act_scale, quantized=quantized,
+                          act=act, has_bias=has_bias),
         grid=(b, n_strips, c_out // bn),
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.ANY),
-            pl.BlockSpec((kk, kk, c_in, bn), lambda i, s, n: (0, 0, 0, n)),
-            pl.BlockSpec((1, bn), lambda i, s, n: (0, n)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, strip_h, w_out, bn),
                                lambda i, s, n: (i, s, 0, n)),
         out_shape=jax.ShapeDtypeStruct((b, n_rows, w_out, c_out),
                                        jnp.float32),
-        scratch_shapes=[pltpu.VMEM((rows_in, wp, c_in), jnp.float32),
-                        pltpu.SemaphoreType.DMA],
+        scratch_shapes=[pltpu.VMEM((2, rows_in, wp, c_in), jnp.float32),
+                        pltpu.SemaphoreType.DMA((2,))],
         interpret=interpret,
-    )(x_padded.astype(jnp.float32), w.astype(jnp.float32), ws2)
+    )(*operands)
 
 
-def _conv_strip_dw_kernel(x_hbm, w_ref, ws_ref, out_ref, xs_ref, sem, *,
-                          kk: int, stride: int, strip_h: int, w_out: int,
-                          c: int, rows_in: int, act_scale: float,
-                          quantized: bool):
+def _conv_strip_dw_kernel(x_hbm, w_ref, ws_ref, *rest, kk: int, stride: int,
+                          strip_h: int, w_out: int, c: int, rows_in: int,
+                          n_strips: int, act_scale: float, quantized: bool,
+                          act: str, has_bias: bool):
     """Depthwise strip: every channel convolves with its own kk x kk filter.
 
     w_ref: [kk*kk, c] (tap-major) — the tap loop is a VPU multiply-accumulate
     over all channels at once; no im2col, no per-channel kernel launches.
+    Same double-buffered halo DMA as the dense strip kernel.
     """
+    b_ref = rest[0] if has_bias else None
+    out_ref, xs_ref, sems = rest[-3], rest[-2], rest[-1]
     b = pl.program_id(0)
     s = pl.program_id(1)
-    cp = pltpu.make_async_copy(
-        x_hbm.at[b, pl.ds(s * (strip_h * stride), rows_in)],
-        xs_ref, sem)
-    cp.start()
-    cp.wait()
+    slot = _strip_dma(x_hbm, xs_ref, sems, b, s, stride=stride,
+                      strip_h=strip_h, rows_in=rows_in, n_strips=n_strips)
 
-    x = xs_ref[...]
+    x = xs_ref[slot]
     acc = jnp.zeros((strip_h, w_out, c), jnp.float32)
     for di in range(kk):
         for dj in range(kk):
             patch = _tap_patch(x, di, dj, strip_h, w_out, stride, c)
             acc = acc + patch.astype(jnp.float32) * w_ref[di * kk + dj]
     if quantized:
-        acc = acc * act_scale * ws_ref[0]
+        acc = _epilogue(acc, act_scale, ws_ref[0],
+                        b_ref[0] if has_bias else None, act)
     out_ref[0] = acc.astype(out_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("kk", "stride", "strip_h",
-                                             "act_scale", "quantized",
+                                             "act_scale", "quantized", "act",
                                              "interpret"))
 def conv_strip_depthwise_kernel(x_padded: jnp.ndarray, w_taps: jnp.ndarray,
                                 ws: jnp.ndarray, kk: int, stride: int = 1,
                                 strip_h: int = 8, act_scale: float = 1.0,
-                                quantized: bool = False,
+                                quantized: bool = False, act: str = "none",
+                                bias: jnp.ndarray | None = None,
                                 interpret: bool = True) -> jnp.ndarray:
     """x_padded [B, Hp, Wp, C]; w_taps [kk*kk, C] -> [B, H_out, W_out, C].
 
@@ -205,20 +276,27 @@ def conv_strip_depthwise_kernel(x_padded: jnp.ndarray, w_taps: jnp.ndarray,
     n_strips = n_rows // strip_h
     rows_in = (strip_h - 1) * stride + kk
     ws2 = ws.reshape(1, c).astype(jnp.float32)
+    has_bias = bias is not None
+    operands = [x_padded.astype(jnp.float32), w_taps.astype(jnp.float32), ws2]
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.ANY),
+        pl.BlockSpec((kk * kk, c), lambda i, s: (0, 0)),
+        pl.BlockSpec((1, c), lambda i, s: (0, 0)),
+    ]
+    if has_bias:
+        operands.append(jnp.asarray(bias, jnp.float32).reshape(1, c))
+        in_specs.append(pl.BlockSpec((1, c), lambda i, s: (0, 0)))
     return pl.pallas_call(
         functools.partial(_conv_strip_dw_kernel, kk=kk, stride=stride,
                           strip_h=strip_h, w_out=w_out, c=c, rows_in=rows_in,
-                          act_scale=act_scale, quantized=quantized),
+                          n_strips=n_strips, act_scale=act_scale,
+                          quantized=quantized, act=act, has_bias=has_bias),
         grid=(b, n_strips),
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.ANY),
-            pl.BlockSpec((kk * kk, c), lambda i, s: (0, 0)),
-            pl.BlockSpec((1, c), lambda i, s: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, strip_h, w_out, c),
                                lambda i, s: (i, s, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b, n_rows, w_out, c), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((rows_in, wp, c), jnp.float32),
-                        pltpu.SemaphoreType.DMA],
+        scratch_shapes=[pltpu.VMEM((2, rows_in, wp, c), jnp.float32),
+                        pltpu.SemaphoreType.DMA((2,))],
         interpret=interpret,
-    )(x_padded.astype(jnp.float32), w_taps.astype(jnp.float32), ws2)
+    )(*operands)

@@ -38,8 +38,29 @@ Conv strategy (pallas backend only — the reference backend is always
                budget, and always for depthwise (the strip kernel replaces
                the grouped per-channel im2col loop outright).
 
-``REPRO_CONV_STRATEGY=auto|resident|strip`` forces the choice globally;
-``REPRO_CONV_VMEM_BUDGET`` (bytes) resizes the heuristic's budget.
+``REPRO_CONV_STRATEGY=auto|resident|strip|fused`` forces the choice
+globally; ``REPRO_CONV_VMEM_BUDGET`` (bytes) resizes the heuristic's budget.
+
+Chain fusion (the megakernel path):
+
+  fused      — runs of chainable convs execute as ONE kernel launch per
+               segment: every intermediate stays in VMEM (pallas) or inside
+               one fused XLA computation (reference), with the requant +
+               activation epilogue fused after each stage instead of
+               round-tripping through HBM between layers.
+               ``select_fused_segments`` picks the runs; ``conv_chain``
+               executes one. The inter-stage CRC requant scale is a
+               *whole-frame* max, so a fused segment processes whole frames
+               stage-by-stage inside the launch (a stage barrier, not a
+               halo-grown strip pyramid) — which is also why the fused path
+               only runs under per-frame calibration or batch 1: per-tensor
+               calibration at batch > 1 couples frames through the
+               batch-wide max, and the executor falls back to the unfused
+               per-layer path (bit-identical by construction).
+               ``REPRO_CONV_STRATEGY=fused`` (or ``Options(fuse="on")``)
+               forces every legal run to fuse; ``auto`` fuses only runs
+               whose stages are small enough that the tap-loop formulation
+               also wins on the reference/CPU backend.
 """
 
 from __future__ import annotations
@@ -48,13 +69,14 @@ import contextlib
 import dataclasses
 import os
 import threading
-from typing import Iterator, Optional
+from typing import Iterator, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 BACKENDS = ("pallas", "reference")
-CONV_STRATEGIES = ("auto", "resident", "strip")
+CONV_STRATEGIES = ("auto", "resident", "strip", "fused")
+FUSE_MODES = ("auto", "on", "off")
 
 # Heuristic budget: what we let one conv's working set claim of the ~16 MB
 # VMEM. Half goes to the strip (input rows + halo), the rest covers the
@@ -215,12 +237,194 @@ def select_conv_strategy(h_out: int, w_out: int, c_in: int, c_out: int,
     budget = budget if budget is not None else conv_vmem_budget()
     if mode == "resident":
         return ConvStrategy("resident")
-    if mode == "auto":
+    if mode in ("auto", "fused"):
+        # "fused" is a *chain* mode (select_fused_segments); the per-conv
+        # fallback strategy — what runs when a conv is outside every fused
+        # segment, or fusion is disabled at runtime — resolves as auto
         depthwise = groups > 1 and groups == c_in
         patch_bytes = h_out * w_out * kernel * kernel * c_in * 4
         if not depthwise and patch_bytes <= budget:
             return ConvStrategy("resident")
     return _strip_geometry(h_out, w_out, c_in, kernel, stride, budget)
+
+
+# ---------------------------------------------------------------------------
+# Chain fusion: segment selection (the megakernel path)
+# ---------------------------------------------------------------------------
+
+# Auto-fusion channel cap: the fused tap-loop formulation (k*k shifted
+# slice-matmul accumulates) beats the per-layer conv for the small channel
+# counts of imaging chains and early CNN layers on every backend, but loses
+# to a tuned dense conv once both channel dims are large. Measured on CPU
+# XLA, the crossover sits near c_in*c_out ~ 1-2K; past it, auto leaves the
+# run unfused ("on" ignores the cap — the caller asked for one launch).
+FUSED_AUTO_CHANNEL_CAP = 2048
+
+# Activations the fused epilogue supports. tanh is excluded: the fused and
+# unfused paths must stay bit-identical, and a transcendental evaluated
+# inside a Pallas kernel is not guaranteed to match XLA's lowering bit for
+# bit the way the piecewise relu/abs/sign are.
+FUSABLE_ACTS = ("relu", "abs", "sign", "none")
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainGeom:
+    """One conv stage's static geometry, as seen by the fusion pass.
+
+    ``h_in``/``w_in`` are the stage's *input* dims (pre-padding);
+    ``pads`` is the resolved ((lo, hi), (lo, hi)) spatial padding; ``pool``
+    is the post-activation pool spec (kind, size) or None — all exactly what
+    the plan's ``ConvStep`` carries, so the compile pass and the eager
+    interpreter resolve identical segments from identical walks.
+    """
+
+    name: str
+    h_in: int
+    w_in: int
+    c_in: int
+    c_out: int
+    kernel: int
+    stride: int
+    pads: Tuple[Tuple[int, int], Tuple[int, int]]
+    groups: int = 1
+    act: str = "relu"
+    pool: Optional[Tuple[str, int]] = None
+
+    @property
+    def depthwise(self) -> bool:
+        return self.groups > 1 and self.groups == self.c_in \
+            and self.c_out == self.groups
+
+    def out_hw(self) -> Tuple[int, int]:
+        (plo, phi), (qlo, qhi) = self.pads
+        h = (self.h_in + plo + phi - self.kernel) // self.stride + 1
+        w = (self.w_in + qlo + qhi - self.kernel) // self.stride + 1
+        if self.pool is not None:
+            h, w = h // self.pool[1], w // self.pool[1]
+        return h, w
+
+    def stage_bytes(self) -> int:
+        """f32 working set of this stage inside the megakernel: padded
+        input frame + output frame + weight block."""
+        (plo, phi), (qlo, qhi) = self.pads
+        in_b = (self.h_in + plo + phi) * (self.w_in + qlo + qhi) \
+            * self.c_in * 4
+        h_out = (self.h_in + plo + phi - self.kernel) // self.stride + 1
+        w_out = (self.w_in + qlo + qhi - self.kernel) // self.stride + 1
+        out_b = h_out * w_out * self.c_out * 4
+        w_b = self.kernel * self.kernel * (self.c_in // self.groups) \
+            * self.c_out * 4
+        return in_b + out_b + w_b
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedSegmentSpec:
+    """A resolved fused run: ``length`` consecutive conv steps starting at
+    plan-step index ``start`` execute as one kernel launch.
+
+    ``halo_rows`` is the chain's input-halo growth: the extra input rows one
+    output row needs through every stage (the strip formulation's per-strip
+    overfetch — sum of (k-1) per stride-1 stage, compounded by strides and
+    pools). ``vmem_bytes`` is the peak per-stage f32 working set.
+    """
+
+    start: int
+    names: Tuple[str, ...]
+    halo_rows: int
+    vmem_bytes: int
+
+    @property
+    def length(self) -> int:
+        return len(self.names)
+
+
+def conv_fuse_mode(strategy_mode: Optional[str] = None) -> str:
+    """Resolve the chain-fusion mode from the conv strategy mode.
+
+    ``fused`` forces fusion on ("on": every legal run, any length);
+    ``resident``/``strip`` force it off (the caller pinned a per-conv
+    execution plan — honoring it means no cross-conv fusion); ``auto``
+    defers to the heuristic (runs of >= 2 cheap stages fuse).
+    """
+    mode = (strategy_mode if strategy_mode is not None
+            else conv_strategy_mode())
+    if mode == "fused":
+        return "on"
+    if mode in ("resident", "strip"):
+        return "off"
+    return "auto"
+
+
+def _chain_halo_rows(geoms: Sequence[ChainGeom]) -> int:
+    """Input rows one output row needs through the chain, minus one.
+
+    Back-substitution of the per-stage row recurrence
+    ``rows_in = (rows_out - 1) * stride + kernel`` (pool expands
+    ``rows_out`` by its window first) from the last stage to the first.
+    """
+    rows = 1
+    for g in reversed(tuple(geoms)):
+        if g.pool is not None:
+            rows *= g.pool[1]
+        rows = (rows - 1) * g.stride + g.kernel
+    return rows - 1
+
+
+def _fusable(g: ChainGeom, budget: int, auto: bool) -> bool:
+    if g.groups != 1 and not g.depthwise:
+        return False                       # general grouped convs: unfused
+    if g.act not in FUSABLE_ACTS:
+        return False
+    if g.pool is not None and g.pool[0] not in ("max", "avg"):
+        return False
+    if auto:
+        if not g.depthwise and g.c_in * g.c_out > FUSED_AUTO_CHANNEL_CAP:
+            return False
+        if g.stage_bytes() > budget:
+            return False
+    return True
+
+
+def select_fused_segments(geoms: Sequence[Optional[ChainGeom]],
+                          mode: Optional[str] = None,
+                          budget: Optional[int] = None
+                          ) -> Tuple[FusedSegmentSpec, ...]:
+    """Segment a plan's step list into fusable conv runs.
+
+    ``geoms`` is aligned with the plan's steps: a :class:`ChainGeom` for
+    every conv step, ``None`` for everything else (CA, upsample, flatten,
+    dense — all of which break a run). ``mode`` is a fuse mode ("auto" |
+    "on" | "off"; default :func:`conv_fuse_mode` from the environment):
+    auto fuses maximal runs of >= 2 stages that pass the channel cap and
+    VMEM budget; "on" fuses every legal run including singletons (the
+    epilogue still fuses into the single launch); "off" returns no
+    segments.
+    """
+    mode = mode if mode is not None else conv_fuse_mode()
+    if mode not in FUSE_MODES:
+        raise ValueError(f"unknown fuse mode {mode!r}; expected {FUSE_MODES}")
+    if mode == "off":
+        return ()
+    budget = budget if budget is not None else conv_vmem_budget()
+    auto = mode == "auto"
+    min_len = 2 if auto else 1
+    segments, run_start, run = [], 0, []
+    def _flush():
+        if len(run) >= min_len:
+            segments.append(FusedSegmentSpec(
+                run_start, tuple(g.name for g in run),
+                _chain_halo_rows(run),
+                max(g.stage_bytes() for g in run)))
+        run.clear()
+    for i, g in enumerate(geoms):
+        if g is not None and _fusable(g, budget, auto):
+            if not run:
+                run_start = i
+            run.append(g)
+        else:
+            _flush()
+    _flush()
+    return tuple(segments)
 
 
 # ---------------------------------------------------------------------------
@@ -362,6 +566,43 @@ def _im2col(codes: jnp.ndarray, k: int, stride: int, pads):
                            dj:dj + (w_out - 1) * stride + 1:stride, :])
     patches = jnp.concatenate(cols, axis=-1)
     return patches.reshape(-1, k * k * codes.shape[-1]), h_out, w_out
+
+
+def conv_chain(codes: jnp.ndarray, act_scale: jnp.ndarray, stages: Sequence,
+               a_qmax, per_frame: bool):
+    """Execute one fused conv segment as a single launch: quantized input
+    codes -> (codes, act_scale) after the last stage's CRC requant.
+
+    ``stages`` is a sequence of ``(geom, wq, ws, bias)`` tuples — the
+    :class:`ChainGeom` static geometry plus the stage's quantized weight
+    levels, weight scale and optional bias. Each stage runs the complete
+    per-layer recipe (integer tap-loop conv accumulate -> dequant -> bias ->
+    activation -> pool -> CRC requant) with expressions matching the
+    unfused ``core.plan._execute_steps`` epilogue term for term, so the
+    fused output is bit-identical to running the stages as separate steps.
+
+    The inter-stage requant scale is a whole-frame max, which is why the
+    caller must guarantee frame-independent calibration: ``per_frame=True``
+    (any batch) or batch 1 (where per-tensor and per-frame calibration are
+    the same reduction). Returns ``act_scale`` shaped [B, 1, 1, 1] when
+    ``per_frame`` else a 0-d scalar — matching the unfused path's scale
+    shapes exactly so downstream traced expressions are unchanged.
+    """
+    if not per_frame and codes.shape[0] != 1:
+        raise ValueError(
+            "conv_chain: per-tensor calibration fuses only at batch 1 "
+            f"(got batch {codes.shape[0]}); the executor should have "
+            "fallen back to the unfused path")
+    if get_backend() == "pallas":
+        from repro.kernels.conv_bank.fused_kernel import conv_chain_kernel
+        out, scale = conv_chain_kernel(codes, act_scale, stages, a_qmax,
+                                       interpret=default_interpret())
+    else:
+        from repro.kernels.conv_bank.ref import conv_chain_ref
+        out, scale = conv_chain_ref(codes, act_scale, stages, a_qmax)
+    if not per_frame:
+        scale = scale[0, 0, 0, 0]          # 0-d, like jnp.max over the tensor
+    return out, scale
 
 
 def ca_acquire(img: jnp.ndarray, pool: int,

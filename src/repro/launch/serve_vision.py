@@ -135,11 +135,24 @@ def main(argv=None):
           f"compile={t_compile * 1e3:.1f}ms")
     print(f"[serve_vision] options: {options.describe()}")
     if r.conv_strategy:
+        # annotate each conv with its fused-segment membership: a conv
+        # inside a segment executes in that segment's single launch, not
+        # under its per-conv strategy
+        seg_of = {n: i for i, seg in enumerate(r.fused_segments)
+                  for n in seg["names"]}
         strat = " ".join(
             f"{n}={v['kind']}" + (f"({v['n_strips']}x{v['strip_rows']}rows)"
                                   if v["kind"] == "strip" else "")
+            + (f"[fused#{seg_of[n]}]" if n in seg_of else "")
             for n, v in r.conv_strategy.items())
         print(f"[serve_vision] conv strategy: {strat}")
+        if r.fused_segments:
+            segs = " ".join(
+                f"#{i}:{'+'.join(seg['names'])}"
+                f"(halo={seg['halo_rows']}rows,"
+                f"vmem={seg['vmem_bytes'] >> 10}KB)"
+                for i, seg in enumerate(r.fused_segments))
+            print(f"[serve_vision] fused segments: {segs}")
 
     if args.load is not None:
         rep = serve.poisson_load(server, prog.name, pool, rate_rps=args.load,

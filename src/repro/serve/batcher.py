@@ -9,7 +9,10 @@ Pure, thread-free helpers the scheduler (``serve.server``) composes:
   bucket that holds it (``Executable.run_padded`` does the zero-padding —
   per-frame calibration makes the pad frames provably inert);
 * results come back as one array and are **split** per-request by each
-  request's frame count.
+  request's frame count;
+* a collecting batch **closes speculatively** (``should_close_early``)
+  when the device pipeline is idle — the hold-open window only pays off
+  while a previous batch is still computing.
 
 The pad -> bucket -> split round trip is bit-identical to running every
 request directly (tests/test_serve.py pins it across odd sizes, mixed
@@ -55,6 +58,26 @@ def padded_slots(n: int, bucket: int) -> int:
     """Device batch slots consumed serving ``n`` real frames at ``bucket``
     (chunked when ``n > bucket``) — the padding-waste numerator's basis."""
     return -(-n // bucket) * bucket
+
+
+def should_close_early(queued_frames: int, cap: int, inflight_batches: int,
+                       speculative: bool = True) -> bool:
+    """Close a collecting micro-batch now instead of waiting out the window?
+
+    The hold-open window (``max_wait_ms``) exists to let a batch fill while
+    the device is busy with the previous one — coalescing there is free.
+    When the device pipeline is *idle*, holding the batch open buys nothing:
+    every waited millisecond is pure added latency, because the device could
+    already be computing. So the scheduler closes speculatively as soon as
+    the queue is drained (everything currently queued is collected, i.e. the
+    batch stopped growing) and no dispatched batch is still in flight.
+
+    Pure predicate so the policy is testable without threads; the server
+    supplies its live counters and the ``ServeConfig.speculative_close``
+    switch.
+    """
+    return (speculative and inflight_batches == 0
+            and 0 < queued_frames < cap)
 
 
 def split_results(out: np.ndarray, counts: Sequence[int]) -> list:

@@ -83,6 +83,12 @@ class ServeConfig:
                        powers of two up to ``max_batch``).
     ``default_deadline_ms``  deadline applied to requests that don't carry
                        their own (``None``: no deadline).
+    ``speculative_close``  dispatch a collecting batch as soon as the queue
+                       is drained and no batch is in flight, instead of
+                       waiting out ``max_wait_ms`` — the hold-open window
+                       only helps while the device is busy, so on an idle
+                       device it is pure added latency
+                       (``batcher.should_close_early``).
     """
 
     max_batch: int = 8
@@ -91,6 +97,7 @@ class ServeConfig:
     max_inflight: int = 2
     batch_buckets: Optional[Tuple[int, ...]] = None
     default_deadline_ms: Optional[float] = None
+    speculative_close: bool = True
 
     def __post_init__(self):
         if self.max_batch < 1:
@@ -159,6 +166,7 @@ class Server:
         self._programs: Dict[str, HostedProgram] = {}
         self._cond = threading.Condition()
         self._queued_total = 0                 # frames across all programs
+        self._active_batches = 0               # dispatched, not yet completed
         self._stopping = False
         self._drain = True
         self._started = False
@@ -329,6 +337,12 @@ class Server:
             close_at = hosted.queue[0].t_submit + cfg.max_wait_ms / 1e3
             while (hosted.metrics.queued_frames < cap
                    and not self._stopping):
+                # speculative close: on an idle device, waiting for more
+                # frames is pure added latency — dispatch what we have
+                if batcher.should_close_early(hosted.metrics.queued_frames,
+                                              cap, self._active_batches,
+                                              cfg.speculative_close):
+                    break
                 remaining = close_at - now()
                 if remaining <= 0:
                     break
@@ -371,9 +385,14 @@ class Server:
                       else np.concatenate([r.frames for r in live], axis=0))
             bucket = batcher.pick_bucket(frames.shape[0], hosted.buckets)
             t_dispatch = now()
+            with self._cond:
+                self._active_batches += 1      # device busy until completed
             try:
                 out = hosted.executable.run_padded(frames, bucket)
             except Exception as e:                # noqa: BLE001 — isolate batch
+                with self._cond:
+                    self._active_batches -= 1
+                    self._cond.notify_all()
                 hosted.metrics.record_failed(len(live))
                 for req in live:
                     req.future.set_exception(e)
@@ -391,18 +410,26 @@ class Server:
                 return
             hosted, live, out = item
             try:
-                out_np = np.asarray(out)           # blocks until device done
-            except Exception as e:                 # noqa: BLE001
-                hosted.metrics.record_failed(len(live))
-                for req in live:
-                    req.future.set_exception(e)
-                continue
-            t_done = now()
-            for part, req in zip(
-                    batcher.split_results(out_np, [r.n for r in live]), live):
-                req.future.set_result(part)
-                hosted.metrics.record_served(t_done - req.t_submit, req.n,
-                                             t_done)
+                try:
+                    out_np = np.asarray(out)       # blocks until device done
+                except Exception as e:             # noqa: BLE001
+                    hosted.metrics.record_failed(len(live))
+                    for req in live:
+                        req.future.set_exception(e)
+                    continue
+                t_done = now()
+                for part, req in zip(
+                        batcher.split_results(out_np, [r.n for r in live]),
+                        live):
+                    req.future.set_result(part)
+                    hosted.metrics.record_served(t_done - req.t_submit, req.n,
+                                                 t_done)
+            finally:
+                # device idle again: wake a scheduler holding a batch open
+                # (speculative close) and any backpressured submitters
+                with self._cond:
+                    self._active_batches -= 1
+                    self._cond.notify_all()
 
     # -- observability -----------------------------------------------------
 

@@ -1,0 +1,272 @@
+"""Fused megakernel chain: bit-identity to the unfused path + segmentation.
+
+The fusion pass's correctness bar is absolute: a fused segment (one Pallas
+launch running tap-loop conv accumulates with the full in-kernel epilogue)
+must produce the SAME BITS as the step-by-step executor it replaces, on
+both backends, under both calibration modes that admit fusion (per-frame at
+any batch, per-tensor at batch 1). The property suite here drives randomly
+generated chains — lengths, kernels, strides, pools, activations, bias,
+depthwise — through Options(fuse="on") vs fuse="off" and asserts exact
+equality; the unit tests pin the segment-selection heuristic and the
+report plumbing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.accelerator import ConvSpec
+from repro.core.program import Options, Program
+from repro.kernels import dispatch
+
+
+# ---------------------------------------------------------------------------
+# Random chain generator
+# ---------------------------------------------------------------------------
+
+def _random_chain(rng: np.random.RandomState, hw: int = 32):
+    """A random fusable conv chain program + matching input frames."""
+    n_stages = rng.randint(1, 5)
+    layers, params = [], {}
+    h = w = hw
+    c = int(rng.choice([1, 2, 3]))
+    c_in0 = c
+    for i in range(n_stages):
+        name = f"conv{i}"
+        depthwise = bool(rng.rand() < 0.25)
+        k = int(rng.choice([1, 3, 5]))
+        stride = 1
+        pool = None
+        act = str(rng.choice(dispatch.FUSABLE_ACTS))
+        if depthwise:
+            c_out = c
+            wshape = (k, k, 1, c)
+        else:
+            c_out = int(rng.choice([1, 2, 4]))
+            wshape = (k, k, c, c_out)
+            # strides/pools only where the dims stay divisible
+            if h % 2 == 0 and rng.rand() < 0.3:
+                stride = 2
+            h_out = -(-h // stride)
+            if h_out % 2 == 0 and rng.rand() < 0.3:
+                pool = (str(rng.choice(["max", "avg"])), 2)
+        layers.append(ConvSpec(name, c, c_out, kernel=k, stride=stride,
+                               padding="SAME", act=act, pool=pool,
+                               depthwise=depthwise))
+        params[name] = {"w": rng.randn(*wshape).astype(np.float32) * 0.4}
+        if rng.rand() < 0.5:
+            params[name]["b"] = rng.randn(c_out).astype(np.float32) * 0.1
+        h = w = -(-h // stride) // (pool[1] if pool else 1)
+        c = c_out
+    prog = Program(tuple(layers), params, (hw, hw, c_in0),
+                   name=f"chain{n_stages}")
+    frames = rng.rand(3, hw, hw, c_in0).astype(np.float32)
+    return prog, frames
+
+
+def _assert_bitwise(a, b, msg):
+    a, b = np.asarray(a), np.asarray(b)
+    assert a.shape == b.shape, msg
+    if not np.array_equal(a, b):
+        diff = float(np.max(np.abs(a - b)))
+        raise AssertionError(f"{msg}: max |diff| = {diff:g}")
+
+
+# ---------------------------------------------------------------------------
+# Property suite: fused == unfused, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+@pytest.mark.parametrize("seed", range(6))
+def test_random_chain_fused_bit_identical(backend, seed):
+    rng = np.random.RandomState(seed)
+    prog, frames = _random_chain(rng)
+    on = prog.compile(Options(backend=backend, fuse="on"))
+    off = prog.compile(Options(backend=backend, fuse="off"))
+    assert len(on.plan.fused_segments) >= 1
+    assert not off.plan.fused_segments
+    _assert_bitwise(on.run_per_frame(frames), off.run_per_frame(frames),
+                    f"{prog.name} per-frame fused vs unfused ({backend})")
+    _assert_bitwise(on.run(frames[:1]), off.run(frames[:1]),
+                    f"{prog.name} B=1 per-tensor fused vs unfused ({backend})")
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_imaging_chain_fused_bit_identical(backend):
+    """The acceptance chain: denoise -> edge_detect -> sharpen."""
+    prog = Program.from_pipeline("denoise_gauss", 64, 64, 1).then(
+        Program.from_pipeline("edge_detect", 64, 64, 1)).then(
+        Program.from_pipeline("sharpen", 64, 64, 1))
+    frames = np.random.RandomState(7).rand(4, 64, 64, 1).astype(np.float32)
+    on = prog.compile(Options(backend=backend, fuse="on"))
+    off = prog.compile(Options(backend=backend, fuse="off"))
+    # every conv in the chain fuses into one segment = one launch
+    assert [s.names for s in on.plan.fused_segments] == \
+        [("gauss", "grad", "edge_mag", "sharpen")]
+    _assert_bitwise(on.run_per_frame(frames), off.run_per_frame(frames),
+                    f"imaging chain per-frame ({backend})")
+    _assert_bitwise(on.run(frames[:1]), off.run(frames[:1]),
+                    f"imaging chain B=1 ({backend})")
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_lenet_convs_fuse_bit_identical(backend):
+    """LeNet's two 5x5+avg-pool+bias convs fuse under auto and stay exact."""
+    prog = Program.from_model("lenet", key=jax.random.PRNGKey(0))
+    auto = prog.compile(Options(backend=backend))
+    off = prog.compile(Options(backend=backend, fuse="off"))
+    assert [s.names for s in auto.plan.fused_segments] == \
+        [("conv1", "conv2")]
+    frames = np.random.RandomState(3).rand(2, 28, 28, 1).astype(np.float32)
+    _assert_bitwise(auto.run_per_frame(frames), off.run_per_frame(frames),
+                    f"lenet per-frame ({backend})")
+    _assert_bitwise(auto.run(frames[:1]), off.run(frames[:1]),
+                    f"lenet B=1 ({backend})")
+
+
+def test_per_tensor_large_batch_falls_back_unfused():
+    """Per-tensor calibration at B>1 couples frames through the requant max:
+    the executor must run unfused (trace-time fallback) and stay exact."""
+    rng = np.random.RandomState(11)
+    prog, frames = _random_chain(rng)
+    on = prog.compile(Options(backend="reference", fuse="on"))
+    off = prog.compile(Options(backend="reference", fuse="off"))
+    _assert_bitwise(on.run(frames), off.run(frames),
+                    "B>1 per-tensor must fall back to the unfused trace")
+
+
+def test_conv_chain_rejects_coupled_batch():
+    g = dispatch.ChainGeom("c", 8, 8, 1, 1, 3, 1, ((1, 1), (1, 1)))
+    wq = jnp.ones((3, 3, 1, 1), jnp.int8)
+    ws = jnp.ones((1, 1, 1, 1), jnp.float32)
+    codes = jnp.ones((2, 8, 8, 1), jnp.float32)
+    with pytest.raises(ValueError, match="batch 1"):
+        dispatch.conv_chain(codes, jnp.float32(0.1), [(g, wq, ws, None)],
+                            jnp.float32(15.0), per_frame=False)
+
+
+# ---------------------------------------------------------------------------
+# Segment selection heuristic
+# ---------------------------------------------------------------------------
+
+def _geom(name, cin=1, cout=1, k=3, stride=1, hw=32, act="relu", pool=None,
+          groups=1):
+    return dispatch.ChainGeom(name, hw, hw, cin, cout, k, stride,
+                              ((k // 2, k // 2), (k // 2, k // 2)),
+                              groups=groups, act=act, pool=pool)
+
+
+def test_auto_needs_runs_of_two():
+    segs = dispatch.select_fused_segments([_geom("a")], mode="auto")
+    assert segs == ()
+    segs = dispatch.select_fused_segments([_geom("a"), _geom("b")],
+                                          mode="auto")
+    assert [s.names for s in segs] == [("a", "b")]
+
+
+def test_on_fuses_singletons_and_off_disables():
+    geoms = [_geom("a"), None, _geom("b")]
+    on = dispatch.select_fused_segments(geoms, mode="on")
+    assert [(s.start, s.names) for s in on] == [(0, ("a",)), (2, ("b",))]
+    assert dispatch.select_fused_segments(geoms, mode="off") == ()
+
+
+def test_non_conv_steps_break_runs():
+    geoms = [_geom("a"), _geom("b"), None, _geom("c"), _geom("d")]
+    segs = dispatch.select_fused_segments(geoms, mode="auto")
+    assert [(s.start, s.names) for s in segs] == \
+        [(0, ("a", "b")), (3, ("c", "d"))]
+
+
+def test_auto_channel_cap_and_budget_exclude_stages():
+    big = _geom("big", cin=64, cout=64)          # 4096 > channel cap
+    segs = dispatch.select_fused_segments([_geom("a"), big, _geom("b")],
+                                          mode="auto")
+    assert segs == ()                            # no adjacent runs survive
+    # "on" ignores the cap: the caller asked for one launch
+    segs = dispatch.select_fused_segments([_geom("a"), big], mode="on")
+    assert [s.names for s in segs] == [("a", "big")]
+    # budget excludes oversized frames in auto
+    huge = _geom("huge", hw=4096)
+    assert dispatch.select_fused_segments([huge, huge], mode="auto") == ()
+
+
+def test_unfusable_act_and_grouped_convs_break_runs():
+    tanh = _geom("t", act="tanh")
+    assert dispatch.select_fused_segments([_geom("a"), tanh], mode="on") \
+        == (dispatch.FusedSegmentSpec(0, ("a",), 2, _geom("a").stage_bytes()),)
+    grouped = _geom("g", cin=4, cout=4, groups=2)
+    assert dispatch.select_fused_segments([grouped], mode="on") == ()
+    dw = _geom("dw", cin=4, cout=4, groups=4)
+    assert [s.names for s in
+            dispatch.select_fused_segments([dw], mode="on")] == [("dw",)]
+
+
+def test_halo_growth_recurrence():
+    # two stride-1 3x3 stages: (k-1) rows each -> 4
+    segs = dispatch.select_fused_segments([_geom("a"), _geom("b")],
+                                          mode="auto")
+    assert segs[0].halo_rows == 4
+    # stride-2 first stage doubles the downstream halo: one output row of b
+    # needs 3 rows of its input; those 3 rows need (3-1)*2+3 = 7 of a's
+    # input -> halo 6
+    segs = dispatch.select_fused_segments(
+        [_geom("a", stride=2), _geom("b", hw=16)], mode="auto")
+    assert segs[0].halo_rows == 6
+    # pool expands rows before the conv recurrence: one output row of b
+    # needs 3 pooled rows of a = 6 pre-pool conv rows = (6-1)*1+3 = 8 input
+    # rows -> halo 7
+    segs = dispatch.select_fused_segments(
+        [_geom("a", pool=("max", 2)), _geom("b", hw=16)], mode="auto")
+    assert segs[0].halo_rows == 7
+
+
+def test_fuse_mode_derivation():
+    assert dispatch.conv_fuse_mode("fused") == "on"
+    assert dispatch.conv_fuse_mode("resident") == "off"
+    assert dispatch.conv_fuse_mode("strip") == "off"
+    assert dispatch.conv_fuse_mode("auto") == "auto"
+
+
+def test_options_validates_fuse_mode():
+    with pytest.raises(ValueError, match="fuse mode"):
+        Options(fuse="always")
+    assert Options(fuse="on").resolve().fuse == "on"
+    assert Options(conv_strategy="strip").resolve().fuse == "off"
+    assert Options(conv_strategy="fused").resolve().fuse == "on"
+
+
+# ---------------------------------------------------------------------------
+# Report plumbing
+# ---------------------------------------------------------------------------
+
+def test_report_records_fused_segments_and_cache_keys_on_fuse():
+    prog = Program.from_pipeline("edge_detect", 32, 32, 1).then(
+        Program.from_pipeline("sharpen", 32, 32, 1))
+    on = prog.compile(Options(fuse="on"))
+    off = prog.compile(Options(fuse="off"))
+    assert on.plan is not off.plan            # fuse mode is in the cache key
+    assert on.report.fused_segments == [
+        dataclasses.asdict(s) for s in on.plan.fused_segments]
+    assert off.report.fused_segments == []
+    names = [n for s in on.report.fused_segments for n in s["names"]]
+    assert set(names) <= set(on.report.conv_strategy)
+
+
+def test_eager_report_mirrors_fused_segments():
+    """run_eager resolves the same fused segments as the compile pass."""
+    from repro.core.accelerator import LightatorDevice
+    from repro.core.quant import W4A4
+    prog = Program.from_model("lenet", key=jax.random.PRNGKey(1))
+    img = np.random.RandomState(5).rand(1, 28, 28, 1).astype(np.float32)
+    dev = LightatorDevice()
+    _, report_e = dev.run_eager(prog.layers, prog.params, jnp.asarray(img),
+                                W4A4)
+    exe = prog.compile(Options())
+    assert report_e.fused_segments == exe.report.fused_segments
+    assert len(report_e.fused_segments) == 1

@@ -111,6 +111,56 @@ def test_bucket_helpers():
         batcher.power_of_two_buckets(0)
 
 
+def test_should_close_early_predicate():
+    # idle device + drained queue with a partial batch: close now
+    assert batcher.should_close_early(3, 8, inflight_batches=0)
+    # a batch is still computing: keep the window open (coalescing is free)
+    assert not batcher.should_close_early(3, 8, inflight_batches=1)
+    # feature switched off
+    assert not batcher.should_close_early(3, 8, 0, speculative=False)
+    # nothing queued / batch already full: the predicate defers to the
+    # normal collection logic
+    assert not batcher.should_close_early(0, 8, 0)
+    assert not batcher.should_close_early(8, 8, 0)
+
+
+def test_speculative_close_dispatches_before_window(lenet_exe, frames28):
+    """With a long hold-open window and an idle device, a lone request must
+    come back well before max_wait_ms — and identically to a direct run."""
+    prog, exe = lenet_exe
+    cfg = serve.ServeConfig(max_batch=8, max_wait_ms=5000.0)
+    server = serve.Server(cfg)
+    server.register("lenet", prog, REFERENCE)
+    server.start()
+    try:
+        t0 = time.monotonic()
+        out = server.submit("lenet", frames28[:1]).result(timeout=30)
+        elapsed = time.monotonic() - t0
+        assert elapsed < 2.0, (
+            f"speculative close should beat the 5s window, took {elapsed:.2f}s")
+        np.testing.assert_array_equal(out, np.asarray(exe.run(frames28[:1])))
+    finally:
+        server.stop()
+
+
+def test_speculative_close_off_waits_out_window(lenet_exe, frames28):
+    """With the feature off, the scheduler honours max_wait_ms."""
+    prog, _ = lenet_exe
+    cfg = serve.ServeConfig(max_batch=8, max_wait_ms=400.0,
+                            speculative_close=False)
+    server = serve.Server(cfg)
+    server.register("lenet", prog, REFERENCE)
+    server.start()
+    try:
+        t0 = time.monotonic()
+        server.submit("lenet", frames28[:1]).result(timeout=30)
+        elapsed = time.monotonic() - t0
+        assert elapsed >= 0.4, (
+            f"window should have held for 400ms, returned in {elapsed:.3f}s")
+    finally:
+        server.stop()
+
+
 # -- the server: bit-identity under concurrency -------------------------------
 
 @pytest.mark.parametrize("backend", ["reference", "pallas"])
