@@ -9,6 +9,7 @@
 #   bench_pipeline  eager vs compiled device pipeline frames/s (core.plan)
 #   bench_imaging   imaging pipelines frames/s + PSNR/SSIM per scheme
 #   bench_serving   serving runtime: offered-load sweep + batching ablation
+#   bench_obs       observability overhead: disabled-path cost vs raw executor
 
 import os
 import sys
@@ -23,8 +24,8 @@ os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "4")
 def main() -> None:
     from benchmarks import (bench_table1, bench_fig8, bench_fig9,
                             bench_fig10, bench_accuracy, bench_kernels,
-                            bench_lm_photonic, bench_pipeline, bench_imaging,
-                            bench_serving)
+                            bench_lm_photonic, bench_obs, bench_pipeline,
+                            bench_imaging, bench_serving)
     bench_table1.run()
     bench_fig8.run()
     bench_fig9.run()
@@ -38,6 +39,7 @@ def main() -> None:
     bench_imaging.run(pipelines=("edge_detect", "compress_recon")
                       if quick else None)
     bench_serving.run(quick=quick)
+    bench_obs.run()
 
 
 if __name__ == '__main__':

@@ -9,7 +9,11 @@ numbers they exist to pin:
      bitwise-exact and at least ``FUSED_MIN_SPEEDUP``x faster than the
      per-conv path at 256x256; kernel-vs-oracle errors stay at float
      epsilon; the depthwise raw accumulate is exactly 0 error; serving
-     micro-batching sustains ``SERVE_MIN_SPEEDUP``x request-at-a-time.
+     micro-batching sustains ``SERVE_MIN_SPEEDUP``x request-at-a-time;
+     disabled-path obs overhead stays under ``OBS_MAX_OVERHEAD_PCT``.
+     Every numeric leaf in every file must additionally be *finite* — a
+     NaN or inf scalar is always an artifact bug (empty-reservoir
+     percentile, zero-window rate), never a measurement.
   2. **Regression band** — every timing (``*_us``) and throughput
      (``fps*``) scalar is compared against the same file at a baseline git
      ref (default ``HEAD``, override with ``--base``). Timings may not be
@@ -39,10 +43,12 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
 BENCH_DIR = ROOT / "benchmarks"
-FILES = ("BENCH_kernels.json", "BENCH_imaging.json", "BENCH_serving.json")
+FILES = ("BENCH_kernels.json", "BENCH_imaging.json", "BENCH_serving.json",
+         "BENCH_obs.json")
 FUSED_MIN_SPEEDUP = 1.5   # acceptance bar for the 256x256 chain ablation
 SERVE_MIN_SPEEDUP = 2.0   # micro-batching vs request-at-a-time at saturation
 ORACLE_ERR_MAX = 1e-5     # dequant float epsilon, not a kernel bug
+OBS_MAX_OVERHEAD_PCT = 2.0  # disabled-path obs cost on the 3-stage chain
 
 
 def _baseline(name: str, ref: str):
@@ -67,6 +73,19 @@ def _scalars(obj, prefix=""):
     elif isinstance(obj, (int, float)) and not isinstance(obj, bool):
         flat[prefix[:-1]] = float(obj)
     return flat
+
+
+def check_finite(name: str, data: dict, errors: list) -> None:
+    """No NaN/inf scalar anywhere in a BENCH file (every file).
+
+    A NaN percentile (e.g. from an empty latency reservoir) or an inf
+    speedup (zero-window rate) is always an artifact bug, never a real
+    measurement — and it silently poisons the regression band.
+    """
+    import math
+    for path, v in _scalars(data).items():
+        if not math.isfinite(v):
+            errors.append(f"{name}: {path} is {v} — non-finite scalar")
 
 
 def check_invariants(name: str, data: dict, errors: list) -> None:
@@ -114,6 +133,17 @@ def check_invariants(name: str, data: dict, errors: list) -> None:
             bad(f"ablation: micro-batching speedup {abl.get('speedup')} "
                 f"< required {SERVE_MIN_SPEEDUP}x")
 
+    elif name == "BENCH_obs.json":
+        chain = data.get("chain", {})
+        if "overhead_disabled_pct" not in chain:
+            bad("chain.overhead_disabled_pct missing")
+        elif chain["overhead_disabled_pct"] >= OBS_MAX_OVERHEAD_PCT:
+            bad(f"chain.overhead_disabled_pct "
+                f"{chain['overhead_disabled_pct']:.2f}% >= "
+                f"{OBS_MAX_OVERHEAD_PCT}% — disabled tracing must be free")
+        if chain.get("frame_us_raw", 0.0) <= 0:
+            bad("chain.frame_us_raw must be > 0")
+
 
 def check_regression(name: str, data: dict, base: dict, tolerance: float,
                      errors: list, notes: list) -> None:
@@ -158,6 +188,7 @@ def main(argv=None) -> int:
             errors.append(f"{name}: missing from benchmarks/")
             continue
         data = json.loads(path.read_text())
+        check_finite(name, data, errors)
         check_invariants(name, data, errors)
         check_regression(name, data, _baseline(name, args.base),
                          args.tolerance, errors, notes)

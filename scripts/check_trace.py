@@ -1,0 +1,101 @@
+"""Validate an exported Chrome-trace JSON from ``serve_vision --trace``.
+
+The CI serving smoke (scripts/ci.sh) runs a traced Poisson load and then
+asserts the artifact is actually useful, not just parseable:
+
+  1. the file round-trips ``json.loads`` and has the Trace Event Format
+     shape (``traceEvents`` list; every event carries name/ph/pid/tid/ts,
+     duration events carry ``dur``);
+  2. there is at least one ``serve.request.device`` span — a trace with
+     zero device spans means the instrumentation hooks silently died;
+  3. at least one request has a COMPLETE timeline: all four
+     ``serve.request.*`` phases (queue_wait -> batch_assembly -> device ->
+     split) sharing one ``trace_id``, contiguous and in order — the
+     acceptance criterion's "decompose one request's latency" artifact.
+
+Usage: ``python scripts/check_trace.py out.json [--min-device-spans N]``.
+Exit 0 on success; prints every violation otherwise.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+PHASES = ("serve.request.queue_wait", "serve.request.batch_assembly",
+          "serve.request.device", "serve.request.split")
+
+
+def check(path: str, min_device_spans: int = 1) -> list:
+    errors = []
+    try:
+        data = json.loads(open(path).read())
+    except (OSError, ValueError) as e:
+        return [f"{path}: unreadable trace JSON: {e}"]
+    events = data.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return [f"{path}: no traceEvents list"]
+
+    for i, ev in enumerate(events):
+        for k in ("name", "ph", "pid", "tid"):
+            if k not in ev:
+                errors.append(f"event[{i}]: missing {k!r}")
+        if ev.get("ph") in ("X", "i") and "ts" not in ev:
+            errors.append(f"event[{i}] ({ev.get('name')}): missing ts")
+        if ev.get("ph") == "X" and "dur" not in ev:
+            errors.append(f"event[{i}] ({ev.get('name')}): X without dur")
+        if errors and len(errors) > 10:
+            errors.append("... (further schema violations suppressed)")
+            break
+
+    device = [e for e in events
+              if e.get("name") == "serve.request.device" and e.get("ph") == "X"]
+    if len(device) < min_device_spans:
+        errors.append(f"{len(device)} device spans < required "
+                      f"{min_device_spans}")
+
+    # per-request timelines: group the serve.request.* spans by trace_id
+    timelines = {}
+    for e in events:
+        if e.get("ph") != "X" or e.get("name") not in PHASES:
+            continue
+        tid = e.get("args", {}).get("trace_id")
+        if tid is not None:
+            timelines.setdefault(tid, []).append(e)
+    complete = 0
+    for tid, spans in timelines.items():
+        by_name = {s["name"]: s for s in spans}
+        if set(by_name) != set(PHASES):
+            continue
+        ordered = [by_name[p] for p in PHASES]
+        ok = all(ordered[j]["ts"] + ordered[j]["dur"]
+                 <= ordered[j + 1]["ts"] + 1.0          # 1us slack
+                 for j in range(len(ordered) - 1))
+        if ok:
+            complete += 1
+    if not complete:
+        errors.append(
+            f"no complete per-request timeline: of {len(timelines)} "
+            f"trace_ids none has all four phases in order {PHASES}")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome-trace JSON to validate")
+    ap.add_argument("--min-device-spans", type=int, default=1)
+    args = ap.parse_args(argv)
+    errors = check(args.trace, args.min_device_spans)
+    if errors:
+        for e in errors:
+            print(f"check_trace: FAIL — {e}", file=sys.stderr)
+        return 1
+    data = json.loads(open(args.trace).read())
+    n = len(data["traceEvents"])
+    print(f"check_trace: OK ({args.trace}: {n} events)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -56,9 +56,13 @@ python -m repro.launch.serve_vision --model lenet --batch 2 --batches 2
 
 # serve-runtime smoke: ~32 async Poisson requests through the scheduler;
 # serve_vision asserts every request is accounted for (served + shed +
-# rejected) before printing the latency percentiles
+# rejected) before printing the latency percentiles. Traced: the exported
+# Chrome-trace must contain device spans and at least one request whose
+# queue-wait -> batch-assembly -> device -> split timeline is complete
+# and in order (scripts/check_trace.py)
 python -m repro.launch.serve_vision --model lenet --load 200 --requests 32 \
-    --batch 4 --backend reference
+    --batch 4 --backend reference --trace /tmp/repro_serve_trace.json
+python scripts/check_trace.py /tmp/repro_serve_trace.json
 
 # example smoke: the Program/Options/Executable walkthroughs must keep
 # running as written in the docs

@@ -10,6 +10,8 @@ Layers:
                 CA compression/reconstruction) compiled on the plan runtime
   serve/        production serving runtime: multi-program router + async
                 micro-batching scheduler over compiled Executables
+  obs/          unified tracing/metrics/profiling (zero-dependency):
+                spans + Chrome-trace export, counters/gauges/histograms
   distributed/  sharding rules, collectives, fault tolerance, elastic scaling
   optim/, checkpoint/, data/   training substrate
   configs/      assigned architectures + the paper's own CNNs
@@ -27,4 +29,8 @@ def __getattr__(name):
     if name in __all__:
         from repro.core import program
         return getattr(program, name)
+    if name == "obs":
+        # zero-dependency observability layer — importable without jax
+        import repro.obs as obs
+        return obs
     raise AttributeError(f"module 'repro' has no attribute {name!r}")

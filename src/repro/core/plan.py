@@ -52,6 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import optical_core as ocore
 from repro.core import power_model as pmod
 from repro.core.quant import (ACT_BITS, WASpec, MixedPrecisionScheme,
@@ -316,9 +317,33 @@ def _compile_model(layers: Sequence, input_shape: Tuple[int, ...],
     cached = _PLAN_CACHE.get(key)
     if cached is not None:
         _CACHE_STATS["hits"] += 1
+        obs.counter("plan.cache.hit").inc()
+        if obs.enabled():
+            obs.event("plan.cache.hit",
+                      attrs={"frame_shape": list(frame_shape),
+                             "layers": len(layers)})
         return cached
     _CACHE_STATS["misses"] += 1
+    obs.counter("plan.cache.miss").inc()
+    with obs.span("plan.compile",
+                  attrs={"frame_shape": list(frame_shape),
+                         "layers": len(layers), "fc_batch": fc_batch,
+                         "conv_strategy": conv_mode, "fuse": fuse_mode}):
+        plan = _compile_model_uncached(
+            layers, frame_shape, scheme, oc, circuit, profile,
+            weight_sram_kb, act_sram_kb, fc_batch, conv_mode, conv_budget,
+            fuse_mode)
+    _PLAN_CACHE[key] = plan
+    return plan
 
+
+def _compile_model_uncached(layers, frame_shape, scheme, oc, circuit,
+                            profile, weight_sram_kb, act_sram_kb, fc_batch,
+                            conv_mode, conv_budget,
+                            fuse_mode) -> CompiledPlan:
+    """The cache-miss body of :func:`_compile_model` (span-wrapped)."""
+    from repro.core.accelerator import (CASpec, ConvSpec, DenseSpec,
+                                        FlattenSpec, UpsampleSpec)
     compute_layers = [l for l in layers if isinstance(l, (ConvSpec, DenseSpec))]
     specs = resolve_layer_specs(len(compute_layers), scheme)
     spec_iter = iter(specs)
@@ -453,12 +478,10 @@ def _compile_model(layers: Sequence, input_shape: Tuple[int, ...],
                    if isinstance(s, (ConvStep, DenseStep))},
     }
 
-    plan = CompiledPlan(layers, frame_shape, scheme, tuple(steps),
+    return CompiledPlan(layers, frame_shape, scheme, tuple(steps),
                         tuple(schedules), tuple(spec_list), report,
                         out_features or c, consts,
                         fused_segments=fused_segments)
-    _PLAN_CACHE[key] = plan
-    return plan
 
 
 # ---------------------------------------------------------------------------
@@ -504,20 +527,36 @@ def _execute_steps(steps: Tuple[PlanStep, ...], params: Dict[str, Dict],
     codes, act_scale = _crc_requant_traced(frames, a_qmax, per_frame)
     x = codes
     fuse_ok = per_frame or frames.shape[0] == 1
+    if segments and not fuse_ok:
+        # per-tensor calibration at batch > 1 couples frames through the
+        # batch-wide CRC max: the fused segments cannot run, and this
+        # whole trace falls back to the per-layer path (trace-time event —
+        # the jitted executable re-runs it for free afterwards)
+        obs.counter("dispatch.fused.fallback").inc(len(segments))
+        if obs.enabled():
+            obs.event("dispatch.fused.fallback",
+                      attrs={"segments": len(segments),
+                             "batch": int(frames.shape[0])})
     seg_at = {s.start: s for s in segments} if fuse_ok else {}
+    # NB: the spans below run at jit-TRACE time (this function executes
+    # once per (backend, shape, calibration) trace family) — they profile
+    # trace priming, one of serving's cold-start costs, not steady-state
+    # device time (that is serve.batch.* territory).
     i, n = 0, len(steps)
     while i < n:
         step = steps[i]
         seg = seg_at.get(i)
         if seg is not None:
-            stages = []
-            for s in steps[i:i + seg.length]:
-                p = params[s.name]
-                wq, ws = _quantize_weight_traced(p["w"], s.wa,
-                                                 consts["w_qmax"][s.name])
-                stages.append((s.geom, wq, ws, p.get("b")))
-            x, act_scale = dispatch.conv_chain(x, act_scale, stages, a_qmax,
-                                               per_frame)
+            with obs.span("plan.trace.fused_segment",
+                          attrs={"names": list(seg.names)}):
+                stages = []
+                for s in steps[i:i + seg.length]:
+                    p = params[s.name]
+                    wq, ws = _quantize_weight_traced(
+                        p["w"], s.wa, consts["w_qmax"][s.name])
+                    stages.append((s.geom, wq, ws, p.get("b")))
+                x, act_scale = dispatch.conv_chain(x, act_scale, stages,
+                                                   a_qmax, per_frame)
             i += seg.length
             continue
         if isinstance(step, CAStep):

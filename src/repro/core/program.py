@@ -52,6 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import optical_core as ocore
 from repro.core import plan as plan_mod
 from repro.core import power_model as pmod
@@ -85,6 +86,8 @@ class Options:
     ``conv_vmem_budget``  ``REPRO_CONV_VMEM_BUDGET``  heuristic budget, bytes
     ``fuse``            derived from the conv      megakernel chain fusion:
                         strategy mode              ``auto`` | ``on`` | ``off``
+    ``trace``           ``REPRO_TRACE``            obs span/event emission:
+                        (else ``auto``)            ``auto`` | ``on`` | ``off``
     ==================  =========================  =======================
 
     ``fuse`` controls the megakernel pass (``dispatch.
@@ -94,6 +97,15 @@ class Options:
     legal run (singletons included); ``off`` disables. ``None`` derives the
     mode from the conv strategy: ``fused`` -> on, forced ``resident``/
     ``strip`` -> off, ``auto`` -> auto.
+
+    ``trace`` mirrors ``fuse``'s tri-state: ``auto`` emits spans/events
+    only while an :func:`repro.obs.enable` collector is installed (the
+    default — zero overhead otherwise), ``on`` forces emission (lazily
+    installing a collector), ``off`` suppresses it even when a collector
+    is live. The pin is per-thread for the duration of ``compile``/``run``
+    (``obs.use_mode``) and deliberately stays OUT of the plan cache key:
+    tracing never changes what gets compiled, so traced and untraced
+    callers share the same cached plan.
 
     ``shard_batch`` shards ``Executable.run``'s batch axis over the local
     devices (or an explicit ``mesh``) via ``NamedSharding`` — a graceful
@@ -115,6 +127,7 @@ class Options:
     conv_strategy: Optional[str] = None
     conv_vmem_budget: Optional[int] = None
     fuse: Optional[str] = None
+    trace: Optional[str] = None
     shard_batch: bool = False
     mesh: Optional[jax.sharding.Mesh] = None
 
@@ -135,6 +148,9 @@ class Options:
         if self.fuse is not None and self.fuse not in dispatch.FUSE_MODES:
             raise ValueError(f"unknown fuse mode {self.fuse!r}; expected "
                              f"one of {dispatch.FUSE_MODES}")
+        if self.trace is not None and self.trace not in obs.TRACE_MODES:
+            raise ValueError(f"unknown trace mode {self.trace!r}; expected "
+                             f"one of {obs.TRACE_MODES}")
 
     def resolve(self) -> "Options":
         """Fill every ``None`` field from its env-var/auto default.
@@ -156,6 +172,8 @@ class Options:
                               else dispatch.conv_vmem_budget()),
             fuse=(self.fuse if self.fuse is not None
                   else dispatch.conv_fuse_mode(self.conv_strategy)),
+            trace=(self.trace if self.trace is not None
+                   else obs.trace_mode()),
         )
 
     def describe(self) -> str:
@@ -169,9 +187,11 @@ class Options:
         vmem = (f"{r.conv_vmem_budget >> 20}MB"
                 if r.conv_vmem_budget >= (1 << 20)
                 else f"{r.conv_vmem_budget >> 10}KB")
+        trace = f" trace={r.trace}" if r.trace != "auto" else ""
         return (f"scheme={r.scheme.name} backend={r.backend} "
                 f"interpret={r.interpret} conv={r.conv_strategy}"
-                f"(vmem={vmem}) fuse={r.fuse} fc_batch={r.fc_batch}{shard}")
+                f"(vmem={vmem}) fuse={r.fuse} "
+                f"fc_batch={r.fc_batch}{trace}{shard}")
 
 
 # ---------------------------------------------------------------------------
@@ -317,14 +337,17 @@ class Program:
     def compile(self, options: Optional[Options] = None) -> "Executable":
         """Static pass: resolve the (cached) plan under ``options``."""
         options = options or Options()
-        plan = plan_mod._compile_model(
-            self.layers, self.input_hwc, options.scheme, oc=options.oc,
-            circuit=options.circuit, profile=options.profile,
-            weight_sram_kb=options.weight_sram_kb,
-            act_sram_kb=options.act_sram_kb, fc_batch=options.fc_batch,
-            conv_strategy=options.conv_strategy,
-            conv_vmem_budget=options.conv_vmem_budget,
-            fuse=options.fuse)
+        with contextlib.ExitStack() as stack:
+            if options.trace is not None:
+                stack.enter_context(obs.use_mode(options.trace))
+            plan = plan_mod._compile_model(
+                self.layers, self.input_hwc, options.scheme, oc=options.oc,
+                circuit=options.circuit, profile=options.profile,
+                weight_sram_kb=options.weight_sram_kb,
+                act_sram_kb=options.act_sram_kb, fc_batch=options.fc_batch,
+                conv_strategy=options.conv_strategy,
+                conv_vmem_budget=options.conv_vmem_budget,
+                fuse=options.fuse)
         return Executable(self, options, plan)
 
 
@@ -371,12 +394,14 @@ class Executable:
         return self._report_copy
 
     def _pinned(self) -> contextlib.ExitStack:
-        """Enter the options' backend/interpret pins (per-thread)."""
+        """Enter the options' backend/interpret/trace pins (per-thread)."""
         stack = contextlib.ExitStack()
         if self.options.backend is not None:
             stack.enter_context(dispatch.use_backend(self.options.backend))
         if self.options.interpret is not None:
             stack.enter_context(dispatch.use_interpret(self.options.interpret))
+        if self.options.trace is not None:
+            stack.enter_context(obs.use_mode(self.options.trace))
         return stack
 
     def run(self, frames) -> jnp.ndarray:

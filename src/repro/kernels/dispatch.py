@@ -74,6 +74,8 @@ from typing import Iterator, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
+
 BACKENDS = ("pallas", "reference")
 CONV_STRATEGIES = ("auto", "resident", "strip", "fused")
 FUSE_MODES = ("auto", "on", "off")
@@ -484,6 +486,10 @@ def conv_int(codes: jnp.ndarray, wq: jnp.ndarray, stride: int,
         if strategy is None:
             strategy = select_conv_strategy(h_out, w_out, codes.shape[-1],
                                             c_out, k, stride, groups)
+        # dispatch.conv.* counters tick at jit-TRACE time: they count how
+        # many conv layers each strategy was chosen for (per compiled
+        # trace), not per-batch executions — see docs/observability.md
+        obs.counter(f"dispatch.conv.{strategy.kind}").inc()
         if strategy.kind == "strip":
             return _conv_int_strip(codes, wq, stride, pads, groups, strategy,
                                    h_out)
@@ -502,6 +508,7 @@ def conv_int(codes: jnp.ndarray, wq: jnp.ndarray, stride: int,
                                  k * k * cg, og))
             outs.append(acc.reshape(b, h_out, w_out, og))
         return jnp.concatenate(outs, axis=-1)
+    obs.counter("dispatch.conv.reference").inc()
     return jax.lax.conv_general_dilated(
         codes.astype(jnp.float32), wq.astype(jnp.float32),
         window_strides=(stride, stride), padding=tuple(pads),
@@ -593,6 +600,9 @@ def conv_chain(codes: jnp.ndarray, act_scale: jnp.ndarray, stages: Sequence,
             "conv_chain: per-tensor calibration fuses only at batch 1 "
             f"(got batch {codes.shape[0]}); the executor should have "
             "fallen back to the unfused path")
+    # one tick per conv stage executed through the fused megakernel path
+    # (trace time, like dispatch.conv.resident/strip above)
+    obs.counter("dispatch.conv.fused").inc(len(stages))
     if get_backend() == "pallas":
         from repro.kernels.conv_bank.fused_kernel import conv_chain_kernel
         out, scale = conv_chain_kernel(codes, act_scale, stages, a_qmax,

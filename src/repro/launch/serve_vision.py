@@ -33,6 +33,13 @@ reports p50/p95/p99 latency, achieved rate, and sheds at the offered
 load. The kernel backend and conv strategy stay serving flags
 (``--backend``, ``--conv-strategy``) mapped through ``Options``, and the
 run header prints the fully *resolved* options.
+
+``--trace out.json`` records the whole run through ``repro.obs`` and
+exports Chrome-trace JSON: every request's latency decomposes into
+queue-wait -> batch-assembly -> device -> split spans on its own lane
+(open the file in chrome://tracing or https://ui.perfetto.dev), and the
+run ends with the verbose per-program stats table plus the plan-cache /
+conv-dispatch footer. See docs/observability.md.
 """
 
 from __future__ import annotations
@@ -94,12 +101,21 @@ def main(argv=None):
     ap.add_argument("--shard-batch", action="store_true",
                     help="shard the batch axis over local devices "
                          "(no-op on 1 device)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record an obs trace of the whole run and export "
+                         "Chrome-trace JSON (open in chrome://tracing or "
+                         "Perfetto); also prints the verbose stats table")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.batch < 1 or args.batches < 1 or args.requests < 1:
         ap.error("--batch, --batches and --requests must be >= 1")
     if args.load is not None and args.load <= 0:
         ap.error("--load must be > 0 requests/s")
+
+    trace = None
+    if args.trace is not None:
+        from repro import obs
+        trace = obs.enable()
 
     options = Options(scheme=SCHEMES[args.scheme], fc_batch=args.batch,
                       backend=args.backend, conv_strategy=args.conv_strategy,
@@ -175,7 +191,8 @@ def main(argv=None):
         rep = serve.saturate(server, prog.name, pool,
                              n_requests=args.batches * args.batch)
         fps = rep.achieved_fps
-    snap = server.stats()["programs"][prog.name]
+    stats = server.stats(verbose=args.trace is not None)
+    snap = stats["programs"][prog.name]
     print(f"[serve_vision] measured {fps:,.0f} frames/s on "
           f"{jax.default_backend()} (avg_batch "
           f"{snap['avg_batch']:.1f}, padding waste "
@@ -191,6 +208,17 @@ def main(argv=None):
         print(f"[serve_vision] quantized-vs-float PSNR "
               f"{float(psnr(ref, out)):.2f} dB (per-frame calibration)")
     server.stop()
+    if trace is not None:
+        from repro import obs
+        obs.disable()
+        trace.export(args.trace)
+        summ = trace.summary()
+        dev = summ.get("serve.request.device", {"count": 0, "total_ms": 0.0})
+        print("[serve_vision] stats breakdown:")
+        print(serve.format_stats(stats))
+        print(f"[serve_vision] trace: {len(trace.records())} records "
+              f"({dev['count']} device spans, {dev['total_ms']:.1f} ms "
+              f"device time) -> {args.trace}")
     return fps
 
 

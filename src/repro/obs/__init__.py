@@ -1,0 +1,37 @@
+"""repro.obs — unified tracing, metrics & profiling across the runtime.
+
+One zero-dependency observability layer threaded through every
+subsystem: the compile pass (``core.plan``), kernel dispatch
+(``kernels.dispatch``), the program front door (``Options(trace=)``)
+and the serving runtime (``repro.serve``). See docs/observability.md
+for the span taxonomy and metric name registry.
+
+    from repro import obs
+
+    trace = obs.enable()                  # install a collector
+    ...                                   # compile / run / serve
+    trace.export("out.json")              # open in chrome://tracing
+    print(obs.prometheus_text())          # metrics exposition dump
+
+Everything is **off by default**: with no collector installed,
+``obs.span``/``obs.event`` return a shared no-op immediately
+(<2% end-to-end overhead on the 3-stage imaging chain, gated by
+``benchmarks/bench_obs.py`` through ``scripts/check_bench.py``), and
+recording never perturbs numerics — hooks observe, they do not touch
+arrays.
+"""
+
+from repro.obs.export import (export_metrics, prometheus_text, write_jsonl)
+from repro.obs.metrics import (Counter, Gauge, Histogram, RATIO_BUCKETS,
+                               REGISTRY, Registry, counter, gauge, histogram)
+from repro.obs.trace import (TRACE_MODES, Trace, current_trace_id, disable,
+                             enable, enabled, event, get_trace, now_ns, span,
+                             span_at, trace_mode, use_mode)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "RATIO_BUCKETS", "REGISTRY",
+    "Registry", "TRACE_MODES", "Trace", "counter", "current_trace_id",
+    "disable", "enable", "enabled", "event", "export_metrics", "gauge",
+    "get_trace", "histogram", "now_ns", "prometheus_text", "span",
+    "span_at", "trace_mode", "use_mode", "write_jsonl",
+]

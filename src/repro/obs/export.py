@@ -1,0 +1,72 @@
+"""Exporters: JSON-lines sink + Prometheus-style text exposition.
+
+Chrome-trace export lives on :meth:`obs.Trace.export`; this module
+covers the two other shapes operators consume:
+
+* :func:`write_jsonl` — append records (span dicts, stats snapshots,
+  load reports) to a JSON-lines file, one object per line — the format
+  log shippers and ``jq`` pipelines eat directly.
+* :func:`prometheus_text` — dump a :class:`obs.Registry` in the
+  Prometheus text exposition format (``# TYPE`` headers, ``_bucket``/
+  ``_sum``/``_count`` histogram series), so a scrape endpoint or a
+  node-exporter textfile collector can pick the metrics up without any
+  new dependency.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from typing import Iterable, Optional
+
+from repro.obs.metrics import Counter, Gauge, Histogram, Registry, REGISTRY
+
+_NAME_RE = re.compile(r"[^a-zA-Z0-9_:]")
+
+
+def _prom_name(name: str) -> str:
+    """Dotted registry name -> Prometheus metric name (dots become _)."""
+    return _NAME_RE.sub("_", name)
+
+
+def write_jsonl(path, records: Iterable[dict], append: bool = True) -> str:
+    """Write ``records`` to ``path`` as JSON lines; returns the path."""
+    with open(path, "a" if append else "w") as f:
+        for rec in records:
+            f.write(json.dumps(rec) + "\n")
+    return str(path)
+
+
+def prometheus_text(registry: Optional[Registry] = None) -> str:
+    """The registry in Prometheus text exposition format."""
+    registry = registry if registry is not None else REGISTRY
+    lines = []
+    with registry._lock:
+        metrics = dict(registry._metrics)
+    for name in sorted(metrics):
+        m = metrics[name]
+        pname = _prom_name(name)
+        if isinstance(m, Counter):
+            lines.append(f"# TYPE {pname} counter")
+            lines.append(f"{pname} {m.get()}")
+        elif isinstance(m, Gauge):
+            lines.append(f"# TYPE {pname} gauge")
+            lines.append(f"{pname} {m.get()}")
+        elif isinstance(m, Histogram):
+            lines.append(f"# TYPE {pname} histogram")
+            with m._lock:
+                acc = 0
+                for le, c in zip(m.buckets, m.counts):
+                    acc += c
+                    lines.append(f'{pname}_bucket{{le="{le:g}"}} {acc}')
+                lines.append(f'{pname}_bucket{{le="+Inf"}} {m.count}')
+                lines.append(f"{pname}_sum {m.sum}")
+                lines.append(f"{pname}_count {m.count}")
+    return "\n".join(lines) + "\n"
+
+
+def export_metrics(path, registry: Optional[Registry] = None) -> str:
+    """Write :func:`prometheus_text` to ``path``; returns the path."""
+    with open(path, "w") as f:
+        f.write(prometheus_text(registry))
+    return str(path)

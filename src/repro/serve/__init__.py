@@ -25,7 +25,7 @@ device kFPS/W). See docs/serving.md.
 from repro.serve.batcher import (padded_slots, pick_bucket,
                                  power_of_two_buckets, split_results)
 from repro.serve.loadgen import LoadReport, poisson_load, saturate
-from repro.serve.metrics import ProgramMetrics, latency_summary
+from repro.serve.metrics import ProgramMetrics, format_stats, latency_summary
 from repro.serve.server import (AdmissionError, DeadlineExceeded,
                                 HostedProgram, ServeConfig, Server,
                                 ServerClosed)
@@ -33,6 +33,7 @@ from repro.serve.server import (AdmissionError, DeadlineExceeded,
 __all__ = [
     "AdmissionError", "DeadlineExceeded", "HostedProgram", "LoadReport",
     "ProgramMetrics", "ServeConfig", "Server", "ServerClosed",
-    "latency_summary", "padded_slots", "pick_bucket", "poisson_load",
+    "format_stats", "latency_summary", "padded_slots", "pick_bucket",
+    "poisson_load",
     "power_of_two_buckets", "saturate", "split_results",
 ]

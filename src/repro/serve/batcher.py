@@ -25,6 +25,8 @@ from typing import Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
+
 
 def power_of_two_buckets(max_batch: int) -> Tuple[int, ...]:
     """The default bucket ladder: 1, 2, 4, ... capped by ``max_batch``.
@@ -50,7 +52,12 @@ def pick_bucket(n: int, buckets: Sequence[int]) -> int:
     best = max(buckets)
     for b in sorted(buckets):
         if b >= n:
-            return b
+            best = b
+            break
+    if obs.enabled():
+        obs.event("batcher.pick_bucket",
+                  attrs={"frames": n, "bucket": best,
+                         "pad": padded_slots(n, best) - n})
     return best
 
 
@@ -86,6 +93,9 @@ def split_results(out: np.ndarray, counts: Sequence[int]) -> list:
     if out.shape[0] != total:
         raise ValueError(
             f"result batch {out.shape[0]} != sum of request sizes {total}")
+    if obs.enabled():
+        obs.event("batcher.split",
+                  attrs={"requests": len(counts), "frames": total})
     parts, off = [], 0
     for n in counts:
         parts.append(out[off:off + n])

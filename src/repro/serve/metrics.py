@@ -1,73 +1,144 @@
 """Serving metrics: latency percentiles, throughput, padding waste.
 
-Lock-guarded counters + a bounded latency reservoir per hosted program,
-snapshotted into plain JSON-able dicts by ``Server.stats()``. The paper's
-headline efficiency axis (kFPS/W) rides along from each executable's power
-report, so a stats snapshot pairs *measured* frames/s with the *modeled*
-device FPS/W it should be judged against.
+Since the ``repro.obs`` layer landed, :class:`ProgramMetrics` is a thin
+facade over a private :class:`repro.obs.Registry` per hosted program:
+the counters/gauges/histograms are registry metrics (named
+``serve.<program>.*``, dumpable via ``obs.prometheus_text``), every
+update and the snapshot run under the registry's single lock (so a
+snapshot is internally consistent), and the ``Server.stats()`` snapshot
+shape is unchanged. The paper's headline efficiency axis (kFPS/W) rides
+along from each executable's power report, so a stats snapshot pairs
+*measured* frames/s with the *modeled* device FPS/W it should be judged
+against — and ``Server.stats`` now also reports the drift between the
+two.
+
+Consistency contract (pinned in tests/test_obs.py): the
+``queued_frames`` gauge is only ever written through :meth:`add_queued`
+(under the lock — the server thread used to mutate it bare), and
+``achieved_fps`` clamps its serving window so a single-batch run
+(``_t_first == _t_last`` at clock resolution) can never divide by zero.
 """
 
 from __future__ import annotations
 
-import threading
 import time
 from collections import deque
 from typing import Dict, Optional
 
 import numpy as np
 
+from repro import obs
+
 PERCENTILES = (50.0, 95.0, 99.0)
+
+# Occupancy/waste are ratios in [0, 1]; obs.RATIO_BUCKETS fits both.
+_MIN_WINDOW_S = 1e-9          # achieved_fps divisor clamp (clock ticks)
 
 
 class ProgramMetrics:
-    """Counters + latency reservoir for one hosted program (thread-safe)."""
+    """Counters + latency reservoir for one hosted program (thread-safe).
 
-    def __init__(self, window: int = 8192):
-        self._lock = threading.Lock()
+    A facade over ``obs`` registry metrics; the recording API and the
+    :meth:`snapshot` shape are unchanged from the pre-obs version, and
+    the legacy attribute reads (``metrics.submitted`` etc.) keep working
+    as properties.
+    """
+
+    def __init__(self, window: int = 8192, name: str = "program",
+                 registry: Optional[obs.Registry] = None):
+        # a PRIVATE registry by default: two Servers hosting the same
+        # program name must never alias each other's counters
+        self.registry = registry if registry is not None else obs.Registry()
+        self._lock = self.registry._lock
+        p = f"serve.{name}"
+        self._submitted = self.registry.counter(f"{p}.submitted")
+        self._served = self.registry.counter(f"{p}.served")
+        self._shed = self.registry.counter(f"{p}.shed_deadline")
+        self._rejected = self.registry.counter(f"{p}.rejected")
+        self._failed = self.registry.counter(f"{p}.failed")
+        self._frames_served = self.registry.counter(f"{p}.frames_served")
+        self._batches = self.registry.counter(f"{p}.batches")
+        self._slots = self.registry.counter(f"{p}.slots")
+        self._queued = self.registry.gauge(f"{p}.queued_frames")
+        self._occupancy = self.registry.histogram(f"{p}.batch_occupancy")
+        self._waste = self.registry.histogram(f"{p}.padding_waste")
         self._latencies_ms: deque = deque(maxlen=window)
-        self.submitted = 0          # requests admitted to the queue
-        self.served = 0             # requests fulfilled
-        self.shed = 0               # requests dropped at a missed deadline
-        self.rejected = 0           # requests refused at admission
-        self.failed = 0             # requests failed by an execution error
-                                    # or a no-drain stop
-        self.frames_served = 0
-        self.batches = 0            # device dispatches
-        self.slots = 0              # device batch slots consumed (incl. pad)
-        self.queued_frames = 0      # gauge, maintained by the server
         self._t_first: Optional[float] = None
         self._t_last: Optional[float] = None
+
+    # -- legacy attribute reads (kept for callers/tests) -------------------
+
+    @property
+    def submitted(self) -> int:
+        return self._submitted.get()
+
+    @property
+    def served(self) -> int:
+        return self._served.get()
+
+    @property
+    def shed(self) -> int:
+        return self._shed.get()
+
+    @property
+    def rejected(self) -> int:
+        return self._rejected.get()
+
+    @property
+    def failed(self) -> int:
+        return self._failed.get()
+
+    @property
+    def frames_served(self) -> int:
+        return self._frames_served.get()
+
+    @property
+    def batches(self) -> int:
+        return self._batches.get()
+
+    @property
+    def slots(self) -> int:
+        return self._slots.get()
+
+    @property
+    def queued_frames(self) -> int:
+        return int(self._queued.get())
 
     # -- recording (called from the server's threads) ----------------------
 
     def record_admit(self, n_requests: int = 1) -> None:
-        with self._lock:
-            self.submitted += n_requests
+        self._submitted.inc(n_requests)
 
     def record_reject(self) -> None:
-        with self._lock:
-            self.rejected += 1
+        self._rejected.inc()
 
     def record_shed(self, n: int = 1) -> None:
-        with self._lock:
-            self.shed += n
+        self._shed.inc(n)
 
     def record_failed(self, n: int = 1) -> None:
-        with self._lock:
-            self.failed += n
+        self._failed.inc(n)
 
-    def record_batch(self, slots: int, t_dispatch: float) -> None:
+    def add_queued(self, delta: int) -> None:
+        """Adjust the queued-frames gauge (the ONLY sanctioned writer —
+        takes the lock, unlike the bare ``+=`` the server used to do)."""
+        self._queued.add(delta)
+
+    def record_batch(self, slots: int, t_dispatch: float,
+                     frames: Optional[int] = None) -> None:
         with self._lock:
-            self.batches += 1
-            self.slots += slots
+            self._batches.inc()
+            self._slots.inc(slots)
+            if frames is not None and slots > 0:
+                self._occupancy.observe(frames / slots)
+                self._waste.observe(1.0 - frames / slots)
             if self._t_first is None:
                 self._t_first = t_dispatch
 
     def record_served(self, latency_s: float, frames: int,
                       t_done: float) -> None:
         with self._lock:
-            self.served += 1
-            self.frames_served += frames
+            self._served.inc()
+            self._frames_served.inc(frames)
             self._latencies_ms.append(latency_s * 1e3)
             self._t_last = t_done
 
@@ -76,37 +147,55 @@ class ProgramMetrics:
     def snapshot(self) -> Dict[str, object]:
         with self._lock:
             lat = np.asarray(self._latencies_ms, np.float64)
-            span = ((self._t_last - self._t_first)
-                    if self._t_first is not None and self._t_last is not None
-                    and self._t_last > self._t_first else None)
+            span = None
+            if self._t_first is not None and self._t_last is not None:
+                # first dispatch -> last completion: the serving window,
+                # idle tails excluded; clamped so a single-batch run
+                # (both stamps within clock resolution) stays finite
+                span = max(self._t_last - self._t_first, _MIN_WINDOW_S)
+            frames_served = self._frames_served.get()
+            batches = self._batches.get()
+            slots = self._slots.get()
+            submitted = self._submitted.get()
+            served = self._served.get()
+            shed = self._shed.get()
+            failed = self._failed.get()
             snap = {
                 "requests": {
-                    "submitted": self.submitted,
-                    "served": self.served,
-                    "shed_deadline": self.shed,
-                    "rejected": self.rejected,
-                    "failed": self.failed,
-                    "pending": (self.submitted - self.served - self.shed
-                                - self.failed),
+                    "submitted": submitted,
+                    "served": served,
+                    "shed_deadline": shed,
+                    "rejected": self._rejected.get(),
+                    "failed": failed,
+                    "pending": submitted - served - shed - failed,
                 },
-                "frames_served": self.frames_served,
-                "queue_depth": self.queued_frames,
-                "batches": self.batches,
-                "avg_batch": (self.frames_served / self.batches
-                              if self.batches else 0.0),
+                "frames_served": frames_served,
+                "queue_depth": int(self._queued.get()),
+                "batches": batches,
+                "avg_batch": (frames_served / batches if batches else 0.0),
                 # fraction of device batch slots burned on padding
-                "padding_waste": (1.0 - self.frames_served / self.slots
-                                  if self.slots else 0.0),
-                # first dispatch -> last completion: the serving window,
-                # idle tails excluded
-                "achieved_fps": (self.frames_served / span if span else 0.0),
+                "padding_waste": (1.0 - frames_served / slots
+                                  if slots else 0.0),
+                "achieved_fps": (frames_served / span if span else 0.0),
                 "latency_ms": latency_summary(lat),
             }
         return snap
 
+    def histograms(self) -> Dict[str, Dict]:
+        """Batch-occupancy / padding-waste histogram summaries
+        (``Server.stats(verbose=True)``)."""
+        return {"batch_occupancy": self._occupancy.summary(),
+                "padding_waste": self._waste.summary()}
+
 
 def latency_summary(lat_ms: np.ndarray) -> Dict[str, float]:
-    """p50/p95/p99 + mean/max of a latency sample (empty-safe)."""
+    """p50/p95/p99 + mean/max of a latency sample.
+
+    An empty reservoir returns the explicit ``{"count": 0}`` shape —
+    never NaN percentiles (``scripts/check_bench.py`` rejects NaN
+    scalars in every ``BENCH_*.json``, so a NaN here would fail CI even
+    if it slipped into an artifact).
+    """
     if lat_ms.size == 0:
         return {"count": 0}
     out = {"count": int(lat_ms.size),
@@ -120,3 +209,50 @@ def latency_summary(lat_ms: np.ndarray) -> Dict[str, float]:
 def now() -> float:
     """The one clock every serving timestamp uses (monotonic seconds)."""
     return time.perf_counter()
+
+
+def format_stats(stats: Dict[str, object]) -> str:
+    """Render ``Server.stats(verbose=True)`` as a breakdown table.
+
+    One row per program: request accounting, latency percentiles,
+    achieved fps, batching efficiency, and measured-vs-modeled kFPS/W —
+    plus the plan-cache and conv-dispatch footer. Pure formatting; the
+    numbers are the snapshot's.
+    """
+    lines = []
+    hdr = (f"{'program':<18} {'served':>7} {'shed':>5} {'fail':>5} "
+           f"{'p50ms':>8} {'p99ms':>8} {'fps':>9} {'avg_b':>6} "
+           f"{'waste':>6} {'kFPS/W':>8} {'model':>8} {'drift':>7}")
+    lines.append(hdr)
+    lines.append("-" * len(hdr))
+    for name, p in sorted(stats.get("programs", {}).items()):
+        lat = p.get("latency_ms", {})
+        model = p.get("model", {})
+        req = p.get("requests", {})
+        lines.append(
+            f"{name:<18} {req.get('served', 0):>7} "
+            f"{req.get('shed_deadline', 0):>5} {req.get('failed', 0):>5} "
+            f"{lat.get('p50', float('nan')):>8.2f} "
+            f"{lat.get('p99', float('nan')):>8.2f} "
+            f"{p.get('achieved_fps', 0.0):>9.0f} "
+            f"{p.get('avg_batch', 0.0):>6.1f} "
+            f"{p.get('padding_waste', 0.0):>6.1%} "
+            f"{p.get('measured_kfps_per_w', 0.0):>8.3f} "
+            f"{model.get('kfps_per_w', 0.0):>8.1f} "
+            f"{p.get('kfps_per_w_drift', 0.0):>7.1e}")
+        hists = p.get("histograms")
+        if hists:
+            occ = hists["batch_occupancy"]
+            lines.append(f"{'':<18}   occupancy mean={occ['mean']:.2f} "
+                         f"min={occ['min']} max={occ['max']} "
+                         f"batches={occ['count']}")
+    cache = stats.get("plan_cache")
+    if cache:
+        lines.append(f"plan cache: {cache['hits']} hits / "
+                     f"{cache['misses']} misses "
+                     f"(hit rate {cache['hit_rate']:.1%})")
+    disp = stats.get("conv_dispatch")
+    if disp:
+        lines.append("conv dispatch: " + " ".join(
+            f"{k}={v}" for k, v in sorted(disp.items())))
+    return "\n".join(lines)

@@ -40,6 +40,7 @@ cannot clobber concurrent callers; all metrics are lock-guarded.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import queue as queue_mod
 import threading
 from collections import deque
@@ -48,9 +49,17 @@ from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core.program import Executable, Options, Program
 from repro.serve import batcher
 from repro.serve.metrics import ProgramMetrics, now
+
+# Chrome-trace lane ids for per-request timelines: each request's
+# queue-wait -> batch-assembly -> device -> split spans are recorded
+# retrospectively (their life crosses three threads), so they go on a
+# synthetic per-request lane instead of overlapping any live thread's
+# span stack (see obs.trace).
+_REQ_LANE_BASE = 1 << 20
 
 
 class AdmissionError(RuntimeError):
@@ -119,6 +128,8 @@ class _Request:
     future: Future
     t_submit: float
     deadline: Optional[float]         # absolute, metrics.now() clock
+    trace_id: str = ""                # per-request id, spans every thread
+    seq: int = 0                      # request ordinal (trace lane id)
 
 
 @dataclasses.dataclass
@@ -174,6 +185,7 @@ class Server:
         self._completer: Optional[threading.Thread] = None
         self._inflight: queue_mod.Queue = queue_mod.Queue(
             maxsize=self.config.max_inflight)
+        self._req_seq = itertools.count()
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -192,7 +204,8 @@ class Server:
              or batcher.power_of_two_buckets(self.config.max_batch))
         if min(bks) < 1:
             raise ValueError(f"buckets must be >= 1, got {bks}")
-        hosted = HostedProgram(name, program, exe, bks)
+        hosted = HostedProgram(name, program, exe, bks,
+                               metrics=ProgramMetrics(name=name))
         self._programs[name] = hosted
         return hosted
 
@@ -291,9 +304,14 @@ class Server:
         if deadline_ms is None:
             deadline_ms = self.config.default_deadline_ms
         t_submit = now()
+        seq = next(self._req_seq)
         req = _Request(frames, n, Future(), t_submit,
                        t_submit + deadline_ms / 1e3
-                       if deadline_ms is not None else None)
+                       if deadline_ms is not None else None,
+                       trace_id=f"{name}/req-{seq}", seq=seq)
+        if obs.enabled():
+            obs.event("serve.submit", attrs={"program": name, "frames": n},
+                      trace_id=req.trace_id)
         with self._cond:
             while (self._queued_total + n > self.config.max_queue
                    and not self._stopping):
@@ -309,7 +327,7 @@ class Server:
             if self._stopping:
                 raise ServerClosed("server is stopping")
             hosted.queue.append(req)
-            hosted.metrics.queued_frames += n
+            hosted.metrics.add_queued(n)
             self._queued_total += n
             hosted.metrics.record_admit()
             self._cond.notify_all()
@@ -357,7 +375,7 @@ class Server:
                 # (run_padded chunks it through the largest bucket)
                 reqs = [hosted.queue.popleft()]
                 n = reqs[0].n
-            hosted.metrics.queued_frames -= n
+            hosted.metrics.add_queued(-n)
             self._queued_total -= n
             self._cond.notify_all()        # wake backpressured submitters
         return hosted, reqs
@@ -368,6 +386,7 @@ class Server:
             if picked is None:
                 return
             hosted, reqs = picked
+            t_closed = now()               # batch stopped collecting here
             # deadline shedding: drop what is already past due
             t = now()
             live = []
@@ -388,7 +407,12 @@ class Server:
             with self._cond:
                 self._active_batches += 1      # device busy until completed
             try:
-                out = hosted.executable.run_padded(frames, bucket)
+                with obs.span("serve.batch.dispatch",
+                              attrs={"program": hosted.name,
+                                     "frames": frames.shape[0],
+                                     "bucket": bucket,
+                                     "requests": len(live)}):
+                    out = hosted.executable.run_padded(frames, bucket)
             except Exception as e:                # noqa: BLE001 — isolate batch
                 with self._cond:
                     self._active_batches -= 1
@@ -398,32 +422,42 @@ class Server:
                     req.future.set_exception(e)
                 continue
             hosted.metrics.record_batch(
-                batcher.padded_slots(frames.shape[0], bucket), t_dispatch)
+                batcher.padded_slots(frames.shape[0], bucket), t_dispatch,
+                frames=frames.shape[0])
             # hand off without blocking on the device: the completer owns
             # the block_until_ready, this thread goes back to collecting
-            self._inflight.put((hosted, live, out))
+            self._inflight.put((hosted, live, out, t_closed, t_dispatch,
+                                bucket))
 
     def _completer_loop(self) -> None:
         while True:
             item = self._inflight.get()
             if item is _SENTINEL:
                 return
-            hosted, live, out = item
+            hosted, live, out, t_closed, t_dispatch, bucket = item
             try:
                 try:
-                    out_np = np.asarray(out)       # blocks until device done
+                    with obs.span("serve.batch.wait",
+                                  attrs={"program": hosted.name,
+                                         "bucket": bucket}):
+                        out_np = np.asarray(out)   # blocks until device done
                 except Exception as e:             # noqa: BLE001
                     hosted.metrics.record_failed(len(live))
                     for req in live:
                         req.future.set_exception(e)
                     continue
-                t_done = now()
+                t_ready = now()
                 for part, req in zip(
                         batcher.split_results(out_np, [r.n for r in live]),
                         live):
                     req.future.set_result(part)
+                    t_done = now()
                     hosted.metrics.record_served(t_done - req.t_submit, req.n,
                                                  t_done)
+                    if obs.enabled():
+                        self._emit_request_timeline(
+                            hosted, req, bucket, t_closed, t_dispatch,
+                            t_ready, t_done)
             finally:
                 # device idle again: wake a scheduler holding a batch open
                 # (speculative close) and any backpressured submitters
@@ -431,12 +465,41 @@ class Server:
                     self._active_batches -= 1
                     self._cond.notify_all()
 
+    @staticmethod
+    def _emit_request_timeline(hosted: HostedProgram, req: _Request,
+                               bucket: int, t_closed: float,
+                               t_dispatch: float, t_ready: float,
+                               t_done: float) -> None:
+        """Stitch one request's end-to-end latency decomposition into the
+        trace: queue-wait -> batch-assembly -> device -> split, all
+        carrying the request's ``trace_id`` on its own synthetic lane, so
+        the exported Chrome trace shows one contiguous row per request
+        even though the spans were measured on three different threads.
+        """
+        lane = _REQ_LANE_BASE + req.seq
+        attrs = {"program": hosted.name, "frames": req.n, "bucket": bucket}
+        for name, t0, t1 in (
+                ("serve.request.queue_wait", req.t_submit, t_closed),
+                ("serve.request.batch_assembly", t_closed, t_dispatch),
+                ("serve.request.device", t_dispatch, t_ready),
+                ("serve.request.split", t_ready, t_done)):
+            obs.span_at(name, t0, t1, attrs=attrs, trace_id=req.trace_id,
+                        lane_tid=lane, lane=req.trace_id)
+
     # -- observability -----------------------------------------------------
 
-    def stats(self) -> Dict[str, object]:
+    def stats(self, verbose: bool = False) -> Dict[str, object]:
         """JSON-able snapshot: per-program counters, latency percentiles,
         achieved frames/s, padding waste, queue depth — plus each program's
-        modeled device FPS / power / kFPS-per-W from its compiled report."""
+        modeled device FPS / power / kFPS-per-W from its compiled report,
+        the measured-vs-modeled kFPS/W drift, the process-wide plan-cache
+        hit rate and per-strategy conv dispatch counts (``repro.obs``).
+
+        ``verbose=True`` adds the batch-occupancy / padding-waste
+        histograms per program and the full global ``obs`` registry dump
+        — the breakdown ``serve.format_stats`` renders as a table.
+        """
+        from repro.core.plan import plan_cache_stats
         programs = {}
         totals = {"submitted": 0, "served": 0, "shed_deadline": 0,
                   "rejected": 0, "failed": 0}
@@ -444,19 +507,49 @@ class Server:
         for name, hosted in self._programs.items():
             snap = hosted.metrics.snapshot()
             r = hosted.executable.report
-            snap["model"] = {"fps": r.fps, "avg_power_w": r.avg_power_w,
-                             "kfps_per_w": r.kfps_per_w}
+            # modeled energy per frame (J) from the power report: the
+            # measured-vs-modeled efficiency axis. "Measured" kFPS/W
+            # re-uses the modeled device power with the *achieved* rate —
+            # the drift isolates host/scheduling losses from the model.
+            e_frame = (r.avg_power_w / r.fps) if r.fps else 0.0
+            fps = snap["achieved_fps"]
+            measured_kfps_per_w = ((fps / 1e3) / r.avg_power_w
+                                   if r.avg_power_w else 0.0)
+            snap["model"] = {
+                "fps": r.fps, "avg_power_w": r.avg_power_w,
+                "kfps_per_w": r.kfps_per_w,
+                "energy_per_frame_j": e_frame,
+                "modeled_energy_j": e_frame * snap["frames_served"],
+            }
+            snap["measured_kfps_per_w"] = measured_kfps_per_w
+            snap["kfps_per_w_drift"] = (measured_kfps_per_w / r.kfps_per_w
+                                        if r.kfps_per_w else 0.0)
             snap["buckets"] = list(hosted.buckets)
+            if verbose:
+                snap["histograms"] = hosted.metrics.histograms()
             programs[name] = snap
             for k in totals:
                 totals[k] += snap["requests"][k]
             frames_served += snap["frames_served"]
         with self._cond:
             depth = self._queued_total
-        return {
+        cache = plan_cache_stats()
+        lookups = cache["hits"] + cache["misses"]
+        strategies = {
+            kind: c.get() for kind in ("resident", "strip", "fused",
+                                       "reference")
+            if (c := obs.REGISTRY.get(f"dispatch.conv.{kind}")) is not None}
+        out = {
             "config": dataclasses.asdict(self.config),
             "queue_depth": depth,
             "frames_served": frames_served,
             "requests": totals,
+            "plan_cache": {**cache,
+                           "hit_rate": (cache["hits"] / lookups
+                                        if lookups else 0.0)},
+            "conv_dispatch": strategies,
             "programs": programs,
         }
+        if verbose:
+            out["obs"] = obs.REGISTRY.snapshot()
+        return out

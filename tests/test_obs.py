@@ -1,0 +1,428 @@
+"""repro.obs — tracing/metrics contracts, and the serving integration.
+
+The load-bearing contracts:
+
+* spans on one tid always **nest, never interleave** — including across
+  the serving scheduler/completer thread boundary (each thread keeps its
+  own span stack; cross-thread request timelines go on synthetic lanes);
+* a request's ``trace_id`` survives the whole pad -> bucket -> split trip
+  and its four ``serve.request.*`` spans reassemble into one contiguous,
+  ordered timeline;
+* the exported Chrome-trace JSON round-trips ``json.loads`` and passes
+  the same schema check the CI smoke runs (scripts/check_trace.py);
+* the disabled path records nothing and ``Options(trace=)`` maps onto
+  the per-thread mode pin;
+* ``ProgramMetrics`` (now an obs-registry facade) keeps its snapshot
+  shape, its empty-reservoir ``{"count": 0}`` latency summary and a
+  finite ``achieved_fps`` even on a degenerate zero-width window;
+* ``scripts/check_bench.py`` rejects NaN/inf scalars in BENCH files.
+"""
+
+import importlib.util
+import json
+import sys
+import threading
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import repro
+from repro import obs, serve
+from repro.core.quant import W4A4
+from repro.serve.metrics import ProgramMetrics, latency_summary
+
+ROOT = Path(__file__).resolve().parent.parent
+REFERENCE = repro.Options(scheme=W4A4, backend="reference")
+
+
+@pytest.fixture()
+def collector():
+    """A fresh installed collector; always uninstalled afterwards."""
+    trace = obs.enable()
+    try:
+        yield trace
+    finally:
+        obs.disable()
+
+
+def _load_script(name):
+    spec = importlib.util.spec_from_file_location(
+        name, ROOT / "scripts" / f"{name}.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# ---------------------------------------------------------------------------
+# Trace core
+# ---------------------------------------------------------------------------
+
+class TestTrace:
+    def test_disabled_records_nothing(self):
+        assert obs.get_trace() is None
+        with obs.span("t.outer", attrs={"k": 1}):
+            obs.event("t.inner")
+        assert obs.get_trace() is None          # no lazy install in auto
+
+    def test_span_nesting_single_thread(self, collector):
+        with obs.span("t.outer"):
+            with obs.span("t.mid"):
+                with obs.span("t.leaf"):
+                    pass
+        spans = {s["name"]: s for s in collector.spans()}
+        assert spans["t.leaf"]["parent"] == spans["t.mid"]["id"]
+        assert spans["t.mid"]["parent"] == spans["t.outer"]["id"]
+        assert spans["t.outer"]["parent"] is None
+        # children close inside the parent's window
+        for child, parent in (("t.leaf", "t.mid"), ("t.mid", "t.outer")):
+            assert spans[parent]["t0_ns"] <= spans[child]["t0_ns"]
+            assert spans[child]["t1_ns"] <= spans[parent]["t1_ns"]
+
+    def test_spans_never_interleave_per_tid(self, collector):
+        """On every tid, spans form a proper nesting (no partial overlap) —
+        pinned with concurrent recording threads."""
+        def worker(i):
+            for _ in range(20):
+                with obs.span(f"t.w{i}.outer"):
+                    with obs.span(f"t.w{i}.inner"):
+                        pass
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        _assert_tid_spans_nest(collector.spans())
+
+    def test_trace_id_inherits_to_children_and_events(self, collector):
+        with obs.span("t.outer", trace_id="req-7"):
+            with obs.span("t.child"):
+                obs.event("t.evt")
+        child = collector.spans("t.child")[0]
+        evt = collector.events("t.evt")[0]
+        assert child["trace_id"] == "req-7"
+        assert evt["trace_id"] == "req-7"
+        assert obs.current_trace_id() is None   # restored on exit
+
+    def test_use_mode_off_suppresses_while_collecting(self, collector):
+        with obs.use_mode("off"):
+            with obs.span("t.hidden"):
+                obs.event("t.hidden_evt")
+        assert collector.records() == []
+
+    def test_use_mode_on_installs_collector(self):
+        assert obs.get_trace() is None
+        try:
+            with obs.use_mode("on"):
+                assert obs.enabled()
+                with obs.span("t.forced"):
+                    pass
+            trace = obs.get_trace()
+            assert trace is not None
+            assert trace.spans("t.forced")
+        finally:
+            obs.disable()
+
+    def test_chrome_export_roundtrip(self, tmp_path, collector):
+        with obs.span("t.outer", attrs={"n": 3}):
+            obs.event("t.mark")
+        collector.add_span("t.lane", 100, 200, trace_id="req-0",
+                           tid=999_000, lane="req-0")
+        path = tmp_path / "trace.json"
+        collector.export(path)
+        data = json.loads(path.read_text())
+        evs = data["traceEvents"]
+        assert data["displayTimeUnit"] == "ms"
+        by_ph = {}
+        for e in evs:
+            by_ph.setdefault(e["ph"], []).append(e)
+            assert "name" in e and "pid" in e and "tid" in e
+            if e["ph"] == "X":
+                assert "ts" in e and "dur" in e and e["dur"] >= 0
+        assert {"X", "i", "M"} <= set(by_ph)
+        lane_meta = [e for e in by_ph["M"] if e["args"]["name"] == "req-0"]
+        assert lane_meta and lane_meta[0]["tid"] == 999_000
+
+    def test_summary_rollup(self, collector):
+        collector.add_span("t.a", 0, 2_000_000)
+        collector.add_span("t.a", 0, 1_000_000)
+        collector.add_span("t.b", 0, 500_000)
+        s = collector.summary()
+        assert s["t.a"]["count"] == 2
+        assert s["t.a"]["total_ms"] == pytest.approx(3.0)
+        assert s["t.b"]["total_ms"] == pytest.approx(0.5)
+
+
+def _assert_tid_spans_nest(spans):
+    by_tid = {}
+    for s in spans:
+        by_tid.setdefault(s["tid"], []).append(s)
+    for tid, ss in by_tid.items():
+        for a in ss:
+            for b in ss:
+                if a is b:
+                    continue
+                # any two spans on one tid: disjoint or fully nested
+                disjoint = (a["t1_ns"] <= b["t0_ns"]
+                            or b["t1_ns"] <= a["t0_ns"])
+                nested = ((a["t0_ns"] >= b["t0_ns"]
+                           and a["t1_ns"] <= b["t1_ns"])
+                          or (b["t0_ns"] >= a["t0_ns"]
+                              and b["t1_ns"] <= a["t1_ns"]))
+                assert disjoint or nested, (
+                    f"tid {tid}: spans {a['name']} and {b['name']} "
+                    f"interleave")
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry
+# ---------------------------------------------------------------------------
+
+class TestRegistry:
+    def test_counter_gauge_histogram(self):
+        reg = obs.Registry()
+        c = reg.counter("c")
+        c.inc()
+        c.inc(4)
+        assert c.get() == 5
+        g = reg.gauge("g")
+        g.set(3.0)
+        g.add(-1.0)
+        assert g.get() == 2.0
+        h = reg.histogram("h", buckets=(0.5, 1.0))
+        for v in (0.2, 0.7, 2.0):
+            h.observe(v)
+        s = h.summary()
+        assert s["count"] == 3
+        assert s["sum"] == pytest.approx(2.9)
+        assert s["min"] == pytest.approx(0.2)
+        assert s["max"] == pytest.approx(2.0)
+
+    def test_same_name_same_metric_type_mismatch_raises(self):
+        reg = obs.Registry()
+        assert reg.counter("x") is reg.counter("x")
+        with pytest.raises(TypeError):
+            reg.gauge("x")
+
+    def test_snapshot_and_reset(self):
+        reg = obs.Registry()
+        reg.counter("a").inc(2)
+        reg.gauge("b").set(7)
+        snap = reg.snapshot()
+        assert snap["a"] == 2 and snap["b"] == 7
+        reg.reset()
+        assert reg.counter("a").get() == 0
+
+    def test_prometheus_text(self):
+        reg = obs.Registry()
+        reg.counter("serve.lenet.served").inc(3)
+        reg.histogram("waste", buckets=(0.5, 1.0)).observe(0.25)
+        text = obs.prometheus_text(reg)
+        assert "# TYPE serve_lenet_served counter" in text
+        assert "serve_lenet_served 3" in text
+        assert 'waste_bucket{le="0.5"} 1' in text
+        assert 'waste_bucket{le="+Inf"} 1' in text
+        assert "waste_count 1" in text
+
+    def test_write_jsonl(self, tmp_path):
+        path = tmp_path / "out.jsonl"
+        obs.write_jsonl(path, [{"a": 1}, {"b": 2}], append=False)
+        obs.write_jsonl(path, [{"c": 3}])
+        lines = [json.loads(l) for l in path.read_text().splitlines()]
+        assert lines == [{"a": 1}, {"b": 2}, {"c": 3}]
+
+
+# ---------------------------------------------------------------------------
+# ProgramMetrics facade (snapshot shape preserved + satellite fixes)
+# ---------------------------------------------------------------------------
+
+class TestProgramMetrics:
+    def test_snapshot_shape_preserved(self):
+        m = ProgramMetrics(name="lenet")
+        m.record_admit(2)
+        m.add_queued(3)
+        m.record_batch(4, t_dispatch=10.0, frames=3)
+        m.record_served(0.010, 2, t_done=10.5)
+        m.record_served(0.020, 1, t_done=11.0)
+        m.add_queued(-3)
+        snap = m.snapshot()
+        assert set(snap) == {"requests", "frames_served", "queue_depth",
+                             "batches", "avg_batch", "padding_waste",
+                             "achieved_fps", "latency_ms"}
+        assert snap["requests"]["submitted"] == 2
+        assert snap["requests"]["served"] == 2
+        assert snap["requests"]["pending"] == 0
+        assert snap["frames_served"] == 3
+        assert snap["queue_depth"] == 0
+        assert snap["padding_waste"] == pytest.approx(0.25)
+        assert snap["achieved_fps"] == pytest.approx(3.0)  # 3 frames / 1 s
+        assert snap["latency_ms"]["count"] == 2
+
+    def test_achieved_fps_zero_window_clamped(self):
+        m = ProgramMetrics(name="p")
+        t = 5.0
+        m.record_batch(1, t_dispatch=t, frames=1)
+        m.record_served(0.001, 1, t_done=t)      # t_first == t_last
+        fps = m.snapshot()["achieved_fps"]
+        assert np.isfinite(fps) and fps > 0
+
+    def test_empty_latency_summary_shape(self):
+        assert latency_summary(np.asarray([], np.float64)) == {"count": 0}
+        assert ProgramMetrics().snapshot()["latency_ms"] == {"count": 0}
+
+    def test_occupancy_histograms(self):
+        m = ProgramMetrics(name="p")
+        m.record_batch(4, t_dispatch=0.0, frames=3)
+        h = m.histograms()
+        assert h["batch_occupancy"]["count"] == 1
+        assert h["batch_occupancy"]["mean"] == pytest.approx(0.75)
+        assert h["padding_waste"]["mean"] == pytest.approx(0.25)
+
+    def test_private_registries_do_not_alias(self):
+        a, b = ProgramMetrics(name="p"), ProgramMetrics(name="p")
+        a.record_admit()
+        assert a.submitted == 1 and b.submitted == 0
+
+
+# ---------------------------------------------------------------------------
+# Options(trace=) plumbing
+# ---------------------------------------------------------------------------
+
+class TestOptionsTrace:
+    def test_validation(self):
+        assert repro.Options(trace="off").trace == "off"
+        with pytest.raises(ValueError):
+            repro.Options(trace="verbose")
+
+    def test_resolve_defaults_to_auto(self):
+        assert repro.Options().resolve().trace == "auto"
+
+    def test_trace_off_suppresses_run_spans(self, collector):
+        prog = repro.Program.from_pipeline("edge_detect", 8, 8, 3)
+        frames = np.random.default_rng(0).random((1, 8, 8, 3),
+                                                 ).astype(np.float32)
+        exe = prog.compile(repro.Options(backend="reference", trace="off"))
+        np.asarray(exe.run(frames))
+        assert collector.spans() == []
+        # same plan, trace back on: the run-path spans appear
+        exe2 = prog.compile(repro.Options(backend="reference"))
+        assert exe2.plan is exe.plan            # trace= not in the cache key
+
+    def test_describe_mentions_non_auto_trace(self):
+        assert "trace=off" in repro.Options(trace="off").describe()
+        assert "trace=" not in repro.Options().describe()
+
+
+# ---------------------------------------------------------------------------
+# Serving integration: trace_id end to end
+# ---------------------------------------------------------------------------
+
+class TestServingTrace:
+    @pytest.fixture(scope="class")
+    def program(self):
+        return repro.Program.from_pipeline("edge_detect", 16, 16, 3)
+
+    def test_request_timelines_reassemble(self, tmp_path, program,
+                                          collector):
+        server = serve.Server(serve.ServeConfig(max_batch=4,
+                                                max_wait_ms=2.0))
+        server.register("edge", program, REFERENCE)
+        server.start(warm=True)
+        rng = np.random.default_rng(1)
+        futs = [server.submit(
+            "edge", rng.random((16, 16, 3)).astype(np.float32))
+            for _ in range(7)]
+        for f in futs:
+            f.result(timeout=60)
+        server.stop()
+
+        spans = collector.spans()
+        _assert_tid_spans_nest(spans)            # incl. sched/completer tids
+
+        phases = ("serve.request.queue_wait", "serve.request.batch_assembly",
+                  "serve.request.device", "serve.request.split")
+        by_req = {}
+        for s in spans:
+            if s["name"] in phases:
+                by_req.setdefault(s["trace_id"], {})[s["name"]] = s
+        assert len(by_req) == 7                  # one timeline per request
+        for tid, named in by_req.items():
+            assert set(named) == set(phases), tid
+            ordered = [named[p] for p in phases]
+            for a, b in zip(ordered, ordered[1:]):
+                assert a["t1_ns"] == b["t0_ns"]  # contiguous timeline
+            lanes = {s["tid"] for s in ordered}
+            assert len(lanes) == 1               # one synthetic lane each
+
+        # submit events carry the same trace ids
+        submit_ids = {e["trace_id"] for e in collector.events("serve.submit")}
+        assert submit_ids == set(by_req)
+
+        # the export passes the CI smoke's validator
+        path = tmp_path / "serve_trace.json"
+        collector.export(path)
+        check_trace = _load_script("check_trace")
+        assert check_trace.check(str(path), min_device_spans=1) == []
+
+    def test_stats_report_cache_and_dispatch(self, program):
+        server = serve.Server(serve.ServeConfig(max_batch=2))
+        server.register("edge", program, REFERENCE)
+        server.start()
+        f = server.submit("edge", np.zeros((16, 16, 3), np.float32))
+        f.result(timeout=60)
+        stats = server.stats(verbose=True)
+        server.stop()
+        cache = stats["plan_cache"]
+        assert cache["hits"] + cache["misses"] >= 1
+        assert 0.0 <= cache["hit_rate"] <= 1.0
+        assert isinstance(stats["conv_dispatch"], dict)
+        snap = stats["programs"]["edge"]
+        assert np.isfinite(snap["measured_kfps_per_w"])
+        assert np.isfinite(snap["kfps_per_w_drift"])
+        assert snap["model"]["energy_per_frame_j"] > 0
+        assert "batch_occupancy" in snap["histograms"]
+        assert "obs" in stats
+
+
+# ---------------------------------------------------------------------------
+# check_bench NaN rejection (satellite)
+# ---------------------------------------------------------------------------
+
+class TestCheckBench:
+    def test_rejects_nan_and_inf_scalars(self):
+        check_bench = _load_script("check_bench")
+        errors = []
+        check_bench.check_finite(
+            "BENCH_x.json",
+            {"a": {"p50": float("nan")}, "b": [1.0, float("inf")], "c": 2.0},
+            errors)
+        assert len(errors) == 2
+        assert any("a.p50" in e for e in errors)
+        errors = []
+        check_bench.check_finite("BENCH_x.json", {"ok": 1.5}, errors)
+        assert errors == []
+
+    def test_obs_overhead_gate(self):
+        check_bench = _load_script("check_bench")
+        errors = []
+        check_bench.check_invariants(
+            "BENCH_obs.json",
+            {"chain": {"overhead_disabled_pct": 5.0, "frame_us_raw": 100.0}},
+            errors)
+        assert any("overhead_disabled_pct" in e for e in errors)
+        errors = []
+        check_bench.check_invariants(
+            "BENCH_obs.json",
+            {"chain": {"overhead_disabled_pct": 0.4, "frame_us_raw": 100.0}},
+            errors)
+        assert errors == []
+
+    def test_committed_bench_obs_passes(self):
+        check_bench = _load_script("check_bench")
+        data = json.loads((ROOT / "benchmarks" / "BENCH_obs.json")
+                          .read_text())
+        errors = []
+        check_bench.check_finite("BENCH_obs.json", data, errors)
+        check_bench.check_invariants("BENCH_obs.json", data, errors)
+        assert errors == []
