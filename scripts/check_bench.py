@@ -10,6 +10,8 @@ numbers they exist to pin:
      per-conv path at 256x256; kernel-vs-oracle errors stay at float
      epsilon; the depthwise raw accumulate is exactly 0 error; serving
      micro-batching sustains ``SERVE_MIN_SPEEDUP``x request-at-a-time;
+     the 4-virtual-device pool scales >= ``POOL_MIN_SCALING``x over one
+     device on the emulated-device axis (serving schema >= 2);
      disabled-path obs overhead stays under ``OBS_MAX_OVERHEAD_PCT``.
      Every numeric leaf in every file must additionally be *finite* — a
      NaN or inf scalar is always an artifact bug (empty-reservoir
@@ -47,6 +49,7 @@ FILES = ("BENCH_kernels.json", "BENCH_imaging.json", "BENCH_serving.json",
          "BENCH_obs.json")
 FUSED_MIN_SPEEDUP = 1.5   # acceptance bar for the 256x256 chain ablation
 SERVE_MIN_SPEEDUP = 2.0   # micro-batching vs request-at-a-time at saturation
+POOL_MIN_SCALING = 1.5    # 4-device pool vs 1 device, emulated device time
 ORACLE_ERR_MAX = 1e-5     # dequant float epsilon, not a kernel bug
 OBS_MAX_OVERHEAD_PCT = 2.0  # disabled-path obs cost on the 3-stage chain
 
@@ -132,6 +135,21 @@ def check_invariants(name: str, data: dict, errors: list) -> None:
         if abl.get("speedup", 0.0) < SERVE_MIN_SPEEDUP:
             bad(f"ablation: micro-batching speedup {abl.get('speedup')} "
                 f"< required {SERVE_MIN_SPEEDUP}x")
+        if data.get("schema_version", 1) >= 2:
+            pool = data.get("pool_ablation")
+            if not pool:
+                bad("pool_ablation section missing (schema_version >= 2)")
+            elif "skipped" not in pool:
+                # the gated axis is the EMULATED-device scaling: it
+                # measures the host runtime feeding 4 devices, which must
+                # scale even on a 1-core CI box (the sleeps overlap).
+                # xla.speedup is reported but not gated — real virtual
+                # devices share the host's cores.
+                em = pool.get("emulated", {})
+                if em.get("speedup", 0.0) < POOL_MIN_SCALING:
+                    bad(f"pool_ablation.emulated: 4-device scaling "
+                        f"{em.get('speedup', 0.0):.2f}x < required "
+                        f"{POOL_MIN_SCALING}x")
 
     elif name == "BENCH_obs.json":
         chain = data.get("chain", {})

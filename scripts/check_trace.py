@@ -11,10 +11,14 @@ asserts the artifact is actually useful, not just parseable:
   3. at least one request has a COMPLETE timeline: all four
      ``serve.request.*`` phases (queue_wait -> batch_assembly -> device ->
      split) sharing one ``trace_id``, contiguous and in order — the
-     acceptance criterion's "decompose one request's latency" artifact.
+     acceptance criterion's "decompose one request's latency" artifact;
+  4. with ``--min-devices N``, the pool actually spread work: at least N
+     distinct device lanes appear among the ``serve.device.execute``
+     spans (each pool worker records its executions on a ``device<i>``
+     lane) — the CI pool smoke's "the fan-out happened" check.
 
-Usage: ``python scripts/check_trace.py out.json [--min-device-spans N]``.
-Exit 0 on success; prints every violation otherwise.
+Usage: ``python scripts/check_trace.py out.json [--min-device-spans N]
+[--min-devices N]``. Exit 0 on success; prints every violation otherwise.
 """
 
 from __future__ import annotations
@@ -27,7 +31,7 @@ PHASES = ("serve.request.queue_wait", "serve.request.batch_assembly",
           "serve.request.device", "serve.request.split")
 
 
-def check(path: str, min_device_spans: int = 1) -> list:
+def check(path: str, min_device_spans: int = 1, min_devices: int = 0) -> list:
     errors = []
     try:
         data = json.loads(open(path).read())
@@ -54,6 +58,20 @@ def check(path: str, min_device_spans: int = 1) -> list:
     if len(device) < min_device_spans:
         errors.append(f"{len(device)} device spans < required "
                       f"{min_device_spans}")
+
+    if min_devices > 0:
+        # pool fan-out: distinct devices among the per-device execute
+        # lanes (fall back to the device attr the request spans carry)
+        lanes = {e["args"]["device"] for e in events
+                 if e.get("ph") == "X"
+                 and e.get("name") == "serve.device.execute"
+                 and "device" in e.get("args", {})}
+        lanes |= {e["args"]["device"] for e in device
+                  if "device" in e.get("args", {})}
+        if len(lanes) < min_devices:
+            errors.append(
+                f"{len(lanes)} distinct device lane(s) {sorted(lanes)} < "
+                f"required {min_devices}: the pool never spread work")
 
     # per-request timelines: group the serve.request.* spans by trace_id
     timelines = {}
@@ -85,8 +103,10 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("trace", help="Chrome-trace JSON to validate")
     ap.add_argument("--min-device-spans", type=int, default=1)
+    ap.add_argument("--min-devices", type=int, default=0,
+                    help="require >= N distinct pool device lanes")
     args = ap.parse_args(argv)
-    errors = check(args.trace, args.min_device_spans)
+    errors = check(args.trace, args.min_device_spans, args.min_devices)
     if errors:
         for e in errors:
             print(f"check_trace: FAIL — {e}", file=sys.stderr)

@@ -64,6 +64,23 @@ python -m repro.launch.serve_vision --model lenet --load 200 --requests 32 \
     --batch 4 --backend reference --trace /tmp/repro_serve_trace.json
 python scripts/check_trace.py /tmp/repro_serve_trace.json
 
+# virtual-device leg: the device-pool property/fault suite on 4 virtual
+# CPU devices (the count is fixed at jax init, hence the env-scoped
+# subprocesses), then the pooled Poisson smoke — its trace must show the
+# pool actually spreading work across >= 2 device lanes
+XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+    python -m pytest tests/test_serve_pool.py -q
+XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+    python -m repro.launch.serve_vision --model lenet --load 200 \
+    --requests 32 --batch 4 --devices 4 --backend reference \
+    --trace /tmp/repro_pool_trace.json
+python scripts/check_trace.py /tmp/repro_pool_trace.json --min-devices 2
+
+# multi-device batch sharding (pre-pool path): runs its own subprocess
+# with its own XLA_FLAGS, so no outer env here
+python -m pytest \
+    "tests/test_program_api.py::test_shard_batch_multi_device_bit_identical" -q
+
 # example smoke: the Program/Options/Executable walkthroughs must keep
 # running as written in the docs
 python examples/quickstart.py

@@ -216,7 +216,7 @@ class CompiledPlan:
     _exec_fns: Dict[str, object] = dataclasses.field(default_factory=dict,
                                                      repr=False)
 
-    def executor(self, per_frame: bool = False):
+    def executor(self, per_frame: bool = False, donate: bool = False):
         """The jitted (params, frames) -> logits function for this plan.
 
         Keyed by the active kernel backend AND the Pallas interpret flag:
@@ -227,14 +227,24 @@ class CompiledPlan:
         ``per_frame`` keys a third trace family: the per-frame-calibrated
         executor (CRC requant scales reduced per frame, not per tensor)
         that the serving micro-batcher runs — see ``_crc_requant_traced``.
+
+        ``donate`` keys a fourth: the frames argument's device buffer is
+        donated to the computation, so XLA may reuse it instead of holding
+        input and output live together — the serving device pool's
+        host-memory pass. Only safe when the caller owns the frames array
+        and never touches it again (a device-bound ``Executable`` stages
+        its own input buffers, so it qualifies; the general ``run`` path
+        must not, since callers may reuse what they passed).
         """
-        key = (dispatch.get_backend(), dispatch.default_interpret(), per_frame)
+        key = (dispatch.get_backend(), dispatch.default_interpret(), per_frame,
+               donate)
         fn = self._exec_fns.get(key)
         if fn is None:
             fn = jax.jit(
                 lambda params, frames, consts: _execute_steps(
                     self.steps, params, frames, consts, per_frame=per_frame,
-                    segments=self.fused_segments))
+                    segments=self.fused_segments),
+                donate_argnums=(1,) if donate else ())
             self._exec_fns[key] = fn
         return fn
 
@@ -614,7 +624,8 @@ def _execute_steps(steps: Tuple[PlanStep, ...], params: Dict[str, Dict],
 
 
 def _execute(plan: CompiledPlan, params: Dict[str, Dict],
-             frames: jnp.ndarray, per_frame: bool = False) -> jnp.ndarray:
+             frames: jnp.ndarray, per_frame: bool = False,
+             donate: bool = False) -> jnp.ndarray:
     """Run ``frames`` [B, H, W, C] through a compiled plan.
 
     Returns logits [B, n] for classifier plans, or an image [B, H', W', C']
@@ -636,7 +647,7 @@ def _execute(plan: CompiledPlan, params: Dict[str, Dict],
         raise ValueError(f"frames {frames.shape} do not match plan frame "
                          f"shape {plan.frame_shape}; expected "
                          f"[B, {', '.join(map(str, plan.frame_shape))}]")
-    return plan.executor(per_frame)(params, frames, plan.consts)
+    return plan.executor(per_frame, donate)(params, frames, plan.consts)
 
 
 # ---------------------------------------------------------------------------

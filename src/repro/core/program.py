@@ -374,6 +374,16 @@ class Executable:
         default=None, repr=False)
     _mesh: Optional[jax.sharding.Mesh] = dataclasses.field(
         default=None, repr=False)
+    # device-bound view state (see bind()): the committed target device,
+    # the params replicated onto it, whether input device buffers are
+    # donated to the computation, and the reusable host staging buffers
+    # run_padded pads into (keyed by (bucket, frame shape))
+    _device: Optional[jax.Device] = dataclasses.field(
+        default=None, repr=False)
+    _device_params: Optional[Dict] = dataclasses.field(
+        default=None, repr=False)
+    _donate: bool = dataclasses.field(default=False, repr=False)
+    _staging: Dict = dataclasses.field(default_factory=dict, repr=False)
 
     @property
     def plan(self) -> plan_mod.CompiledPlan:
@@ -415,11 +425,60 @@ class Executable:
         """
         frames = jnp.asarray(frames)
         with self._pinned():
-            frames, params = self._shard(frames)
+            if self._device is not None:
+                frames, params = self._place(frames)
+            else:
+                frames, params = self._shard(frames)
             return plan_mod._execute(self._plan, params, frames)
 
     def __call__(self, frames) -> jnp.ndarray:
         return self.run(frames)
+
+    # -- device binding (the serving pool's per-device executables) -------
+
+    @property
+    def device(self) -> Optional[jax.Device]:
+        """The committed target device (None: follow ambient placement)."""
+        return self._device
+
+    def bind(self, device, donate: Optional[bool] = None) -> "Executable":
+        """A device-committed view of this Executable (``repro.serve`` pool).
+
+        The returned Executable shares this one's compiled plan (and jit
+        cache) but commits execution to ``device``: frames are
+        ``device_put`` there and the params are replicated onto it once
+        and cached. It also enables the host-side serving optimizations:
+
+        * ``run_padded`` pads into a **reusable host staging buffer** per
+          (bucket, frame-shape) instead of allocating + zero-filling a
+          fresh array per batch;
+        * with ``donate`` (default: on everywhere except the CPU backend,
+          which cannot alias the buffers and would warn), the frames'
+          device buffer is **donated** to the computation, so XLA can
+          reuse it rather than holding input and output live together.
+
+        Both make the bound view unsafe for *shared-input* callers: the
+        staging buffer means concurrent ``run_padded`` calls on one bound
+        Executable race, and donation consumes whatever device array the
+        run was given. The pool gives each device worker its own bound
+        view and stages every input itself, so it satisfies both
+        contracts; treat ``bind`` as the pool's seam, not a general API.
+        ``shard_batch`` is ignored on a bound view (the batch is already
+        placed on exactly one device).
+        """
+        if donate is None:
+            donate = jax.default_backend() != "cpu"
+        exe = Executable(self.program, self.options, self._plan)
+        exe._device = device
+        exe._donate = bool(donate)
+        return exe
+
+    def _place(self, frames: jnp.ndarray):
+        """Commit frames + (cached) params to the bound device."""
+        if self._device_params is None:
+            self._device_params = jax.device_put(self.program.params,
+                                                 self._device)
+        return jax.device_put(frames, self._device), self._device_params
 
     # -- serving: per-frame calibration + batch buckets -------------------
 
@@ -438,9 +497,12 @@ class Executable:
         """
         frames = jnp.asarray(frames)
         with self._pinned():
-            frames, params = self._shard(frames)
+            if self._device is not None:
+                frames, params = self._place(frames)
+            else:
+                frames, params = self._shard(frames)
             return plan_mod._execute(self._plan, params, frames,
-                                     per_frame=True)
+                                     per_frame=True, donate=self._donate)
 
     def run_padded(self, frames, bucket: int) -> jnp.ndarray:
         """Padded-run helper: execute ``frames`` at a fixed batch bucket.
@@ -453,6 +515,12 @@ class Executable:
         so the padding frames provably cannot change the real frames'
         results (bit-identical to batch-1 :meth:`run` calls per frame;
         regression-tested in tests/test_serve.py).
+
+        A device-bound view (:meth:`bind`) pads into a reusable host
+        staging buffer per (bucket, frame shape) instead of allocating a
+        fresh padded array every batch — safe there because each pool
+        worker owns its bound Executable exclusively, and provably inert
+        either way (pad content cannot reach the real frames' results).
         """
         if bucket < 1:
             raise ValueError(f"bucket must be >= 1, got {bucket}")
@@ -465,9 +533,19 @@ class Executable:
             chunk = frames[off:off + bucket]
             real = chunk.shape[0]
             if real < bucket:
-                chunk = np.concatenate(
-                    [chunk, np.zeros((bucket - real, *chunk.shape[1:]),
-                                     np.float32)])
+                if self._device is not None:
+                    key = (bucket, chunk.shape[1:])
+                    buf = self._staging.get(key)
+                    if buf is None:
+                        buf = np.zeros((bucket, *chunk.shape[1:]), np.float32)
+                        self._staging[key] = buf
+                    buf[:real] = chunk
+                    buf[real:] = 0.0
+                    chunk = buf
+                else:
+                    chunk = np.concatenate(
+                        [chunk, np.zeros((bucket - real, *chunk.shape[1:]),
+                                         np.float32)])
             outs.append(self.run_per_frame(chunk)[:real])
         return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
 

@@ -15,6 +15,11 @@ Three serving modes, one API (``repro.Program`` / ``Options`` /
     PYTHONPATH=src python -m repro.launch.serve_vision \
         --model lenet --load 500 --requests 200 --deadline-ms 100
 
+    # device pool: fan batches across 4 (virtual) devices
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    PYTHONPATH=src python -m repro.launch.serve_vision \
+        --model lenet --load 500 --requests 64 --devices 4
+
 Each run compiles once (``Server.register`` -> ``Executable``), warms
 every batch bucket, then streams *single-frame requests* through the
 async micro-batching scheduler: requests are coalesced up to
@@ -98,6 +103,14 @@ def main(argv=None):
                     choices=sorted(dispatch.CONV_STRATEGIES),
                     help="conv execution strategy (default: "
                          "REPRO_CONV_STRATEGY / auto VMEM heuristic)")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="device-pool width: one warmed executable per "
+                         "local device, least-loaded placement + work "
+                         "stealing (on CPU export XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--placement", default="least_loaded",
+                    choices=sorted(serve.PLACEMENTS),
+                    help="pool placement policy (--devices > 1)")
     ap.add_argument("--shard-batch", action="store_true",
                     help="shard the batch axis over local devices "
                          "(no-op on 1 device)")
@@ -109,6 +122,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.batch < 1 or args.batches < 1 or args.requests < 1:
         ap.error("--batch, --batches and --requests must be >= 1")
+    if args.devices < 1:
+        ap.error("--devices must be >= 1")
     if args.load is not None and args.load <= 0:
         ap.error("--load must be > 0 requests/s")
 
@@ -139,7 +154,8 @@ def main(argv=None):
     server = serve.Server(serve.ServeConfig(
         max_batch=args.batch, max_wait_ms=args.max_wait_ms,
         max_queue=max(8 * args.batch, 64),
-        default_deadline_ms=args.deadline_ms))
+        default_deadline_ms=args.deadline_ms,
+        devices=args.devices, placement=args.placement))
     t0 = time.perf_counter()
     hosted = server.register(prog.name, prog, options)
     t_compile = time.perf_counter() - t0
@@ -148,7 +164,7 @@ def main(argv=None):
     r = hosted.executable.report
     print(f"[serve_vision] {name} max_batch={args.batch} "
           f"buckets={list(hosted.buckets)} wait={args.max_wait_ms}ms "
-          f"compile={t_compile * 1e3:.1f}ms")
+          f"devices={args.devices} compile={t_compile * 1e3:.1f}ms")
     print(f"[serve_vision] options: {options.describe()}")
     if r.conv_strategy:
         # annotate each conv with its fused-segment membership: a conv
@@ -199,6 +215,12 @@ def main(argv=None):
           f"{snap['padding_waste']:.1%}) | device model: "
           f"{r.fps:,.0f} FPS, {r.avg_power_w:.2f} W, "
           f"{r.kfps_per_w:.1f} kFPS/W")
+    if args.devices > 1:
+        p = stats["pool"]
+        occ = " ".join(f"d{d['device']}={d['occupancy']:.0%}"
+                       for d in p["per_device"])
+        print(f"[serve_vision] pool: {p['devices']} devices "
+              f"[{p['placement']}] steals={p['steals']} occupancy {occ}")
 
     if args.pipeline is not None:
         from repro.imaging import apply_float, psnr

@@ -4,14 +4,16 @@ Turns any :class:`repro.Program` / :class:`repro.Executable` into a
 long-lived service: a multi-program router with an async micro-batching
 scheduler (collect up to ``max_batch`` / ``max_wait_ms``, pad to the
 nearest compiled batch bucket, split results per request — bit-identical
-to direct per-request ``Executable.run``), bounded-queue admission
-control with backpressure, deadline-based shedding, and a stats snapshot
-API (p50/p95/p99 latency, achieved frames/s, padding waste, modeled
-device kFPS/W). See docs/serving.md.
+to direct per-request ``Executable.run``), a device pool fanning batches
+across N local devices (least-loaded placement with work stealing,
+per-device pipelining; ``ServeConfig(devices=N)``), bounded-queue
+admission control with backpressure, deadline-based shedding, and a
+stats snapshot API (p50/p95/p99 latency, achieved frames/s, padding
+waste, per-device occupancy, modeled device kFPS/W). See docs/serving.md.
 
     from repro import serve
 
-    with serve.Server(serve.ServeConfig(max_batch=16)) as _:
+    with serve.Server(serve.ServeConfig(max_batch=16, devices=4)) as _:
         ...   # register before start; or the explicit form:
 
     server = serve.Server()
@@ -23,17 +25,22 @@ device kFPS/W). See docs/serving.md.
 """
 
 from repro.serve.batcher import (padded_slots, pick_bucket,
-                                 power_of_two_buckets, split_results)
+                                 power_of_two_buckets, should_close_early,
+                                 split_results)
+from repro.serve.clock import Clock, VirtualClock
 from repro.serve.loadgen import LoadReport, poisson_load, saturate
 from repro.serve.metrics import ProgramMetrics, format_stats, latency_summary
-from repro.serve.server import (AdmissionError, DeadlineExceeded,
+from repro.serve.pool import (PLACEMENTS, LeastLoaded, Pool, RoundRobin,
+                              WorkerError)
+from repro.serve.server import (AdmissionError, DeadlineExceeded, Hooks,
                                 HostedProgram, ServeConfig, Server,
                                 ServerClosed)
 
 __all__ = [
-    "AdmissionError", "DeadlineExceeded", "HostedProgram", "LoadReport",
-    "ProgramMetrics", "ServeConfig", "Server", "ServerClosed",
-    "format_stats", "latency_summary", "padded_slots", "pick_bucket",
-    "poisson_load",
-    "power_of_two_buckets", "saturate", "split_results",
+    "AdmissionError", "Clock", "DeadlineExceeded", "Hooks", "HostedProgram",
+    "LeastLoaded", "LoadReport", "PLACEMENTS", "Pool", "ProgramMetrics",
+    "RoundRobin", "ServeConfig", "Server", "ServerClosed", "VirtualClock",
+    "WorkerError", "format_stats", "latency_summary", "padded_slots",
+    "pick_bucket", "poisson_load", "power_of_two_buckets", "saturate",
+    "should_close_early", "split_results",
 ]

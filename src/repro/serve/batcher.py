@@ -68,7 +68,7 @@ def padded_slots(n: int, bucket: int) -> int:
 
 
 def should_close_early(queued_frames: int, cap: int, inflight_batches: int,
-                       speculative: bool = True) -> bool:
+                       speculative: bool = True, devices: int = 1) -> bool:
     """Close a collecting micro-batch now instead of waiting out the window?
 
     The hold-open window (``max_wait_ms``) exists to let a batch fill while
@@ -77,13 +77,15 @@ def should_close_early(queued_frames: int, cap: int, inflight_batches: int,
     every waited millisecond is pure added latency, because the device could
     already be computing. So the scheduler closes speculatively as soon as
     the queue is drained (everything currently queued is collected, i.e. the
-    batch stopped growing) and no dispatched batch is still in flight.
+    batch stopped growing) and some device is idle — with a pool of
+    ``devices`` workers, that is whenever fewer batches are in flight than
+    there are devices to run them.
 
     Pure predicate so the policy is testable without threads; the server
     supplies its live counters and the ``ServeConfig.speculative_close``
     switch.
     """
-    return (speculative and inflight_batches == 0
+    return (speculative and inflight_batches < max(devices, 1)
             and 0 < queued_frames < cap)
 
 

@@ -246,6 +246,15 @@ def format_stats(stats: Dict[str, object]) -> str:
             lines.append(f"{'':<18}   occupancy mean={occ['mean']:.2f} "
                          f"min={occ['min']} max={occ['max']} "
                          f"batches={occ['count']}")
+    pool = stats.get("pool")
+    if pool:
+        occ = " ".join(
+            f"d{d['device']}={d['occupancy']:.0%}"
+            for d in pool.get("per_device", ()))
+        lines.append(
+            f"pool: {pool['devices']} device(s) "
+            f"[{pool['placement']}] steals={pool['steals']} "
+            f"occupancy {occ}")
     cache = stats.get("plan_cache")
     if cache:
         lines.append(f"plan cache: {cache['hits']} hits / "

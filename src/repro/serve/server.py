@@ -1,14 +1,19 @@
 """The serving runtime: a multi-program router + async micro-batching
-scheduler over compiled :class:`repro.Executable`\\ s.
+scheduler over a pool of device-bound :class:`repro.Executable`\\ s.
 
-Architecture (two daemon threads per :class:`Server`, plus callers)::
+Architecture (scheduler + N device workers + completer, plus callers)::
 
-    submit() ──> per-program FIFO queues ──> scheduler ──> inflight ──> completer
-    (any thread;   bounded: admission         (collect,      (bounded     (block on
-     returns a      control + back-            pad to         device       device,
-     Future)        pressure)                  bucket,        pipeline)    split,
-                                               dispatch                    fulfill,
-                                               async)                      metrics)
+    submit() ──> per-program FIFO queues ──> scheduler ──placement──┐
+    (any thread;   bounded: admission         (collect, shed,       │
+     returns a      control + back-            pad to bucket)       v
+     Future)        pressure)              per-device queues + workers
+                                            (steal when idle; device-
+                                             bound exe; double-buffered)
+                                                       │
+                                   shared done queue ──┴──> completer
+                                                            (split,
+                                                             fulfill,
+                                                             metrics)
 
 * **Micro-batching** — the scheduler picks the program whose head request
   is oldest, then holds the batch open up to ``max_wait_ms`` (measured
@@ -18,11 +23,14 @@ Architecture (two daemon threads per :class:`Server`, plus callers)::
   (``Executable.run_padded``), which makes coalescing and padding
   provably invisible to every request: results are bit-identical to
   per-request ``Executable.run`` calls.
-* **Async pipeline** — the scheduler dispatches to the device without
-  blocking and hands the in-flight result to a completer thread over a
-  bounded queue (``max_inflight``), so batch i+1 is collected and
-  transferred while batch i computes — the serving-runtime form of the
-  PR-2 double-buffered feeder.
+* **Device pool** — ``ServeConfig(devices=N)`` warms one device-bound
+  view of every hosted executable per local device
+  (``Executable.bind``); closed batches are placed by a pluggable policy
+  (least-loaded with rotating ties by default) onto per-device queues,
+  idle workers steal from backlogged peers, and each worker overlaps its
+  device wait with the next dispatch (``max_inflight`` is the per-device
+  pipeline depth). Per-frame calibration makes device placement exactly
+  as invisible as padding — see ``serve.pool``.
 * **Admission control + backpressure** — the total queued frame count is
   bounded by ``max_queue``: ``submit(block=False)`` raises
   :class:`AdmissionError` when full, ``block=True`` (default) applies
@@ -31,9 +39,14 @@ Architecture (two daemon threads per :class:`Server`, plus callers)::
   already past due when its batch is formed is dropped with
   :class:`DeadlineExceeded` instead of burning device time on a result
   nobody is waiting for.
+* **Test seams** — every timestamp and timed wait goes through an
+  injectable :class:`~repro.serve.clock.Clock` (a
+  :class:`~repro.serve.clock.VirtualClock` makes the timing tests
+  deterministic), and :class:`Hooks` exposes the batch-close decision
+  and the device execute call (fault injection, emulated devices).
 
 Thread-safety notes: the kernel backend/interpret pins are per-thread
-(``kernels.dispatch``), so the scheduler pinning an Executable's backend
+(``kernels.dispatch``), so a pool worker pinning an Executable's backend
 cannot clobber concurrent callers; all metrics are lock-guarded.
 """
 
@@ -45,13 +58,14 @@ import queue as queue_mod
 import threading
 from collections import deque
 from concurrent.futures import Future
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro import obs
 from repro.core.program import Executable, Options, Program
-from repro.serve import batcher
+from repro.serve import batcher, pool as pool_mod
+from repro.serve.clock import Clock
 from repro.serve.metrics import ProgramMetrics, now
 
 # Chrome-trace lane ids for per-request timelines: each request's
@@ -76,6 +90,31 @@ class ServerClosed(RuntimeError):
 
 
 @dataclasses.dataclass
+class Hooks:
+    """Injectable observation/override points for tests and benchmarks.
+
+    ``batch_close``  called by the scheduler the moment a micro-batch
+                     stops collecting, with ``(program, reason, frames)``
+                     where reason is one of ``"full"`` (hit the batch
+                     cap), ``"speculative"`` (a device was idle),
+                     ``"window"`` (``max_wait_ms`` elapsed) or ``"stop"``
+                     (server draining). Lets tests assert *why* a batch
+                     closed instead of racing wall-clock timings.
+    ``execute``      wraps every device execution: called as
+                     ``execute(program, device, frames, bucket, default)``
+                     where ``default()`` runs the real device-bound
+                     executable. Return a result array to substitute it,
+                     call ``default()`` to pass through, or raise to
+                     fault-inject exactly that batch (the pool converts
+                     it to a typed :class:`~repro.serve.pool.WorkerError`
+                     on just that batch's requests).
+    """
+
+    batch_close: Optional[Callable[[str, str, int], None]] = None
+    execute: Optional[Callable] = None
+
+
+@dataclasses.dataclass
 class ServeConfig:
     """Scheduler/queue knobs for a :class:`Server`.
 
@@ -86,18 +125,29 @@ class ServeConfig:
                        arrival. 0 dispatches every request immediately.
     ``max_queue``      admission bound, in *frames*, summed across all
                        hosted programs.
-    ``max_inflight``   device batches dispatched but not yet completed
-                       (the async pipeline depth; 1 = synchronous).
+    ``max_inflight``   per-device pipeline depth: batches dispatched to
+                       one device but not yet completed (>= 2 overlaps
+                       the device wait with the next dispatch; 1 runs
+                       each device synchronously).
     ``batch_buckets``  default compiled batch sizes per program (``None``:
                        powers of two up to ``max_batch``).
     ``default_deadline_ms``  deadline applied to requests that don't carry
                        their own (``None``: no deadline).
     ``speculative_close``  dispatch a collecting batch as soon as the queue
-                       is drained and no batch is in flight, instead of
+                       is drained and some device is idle, instead of
                        waiting out ``max_wait_ms`` — the hold-open window
-                       only helps while the device is busy, so on an idle
-                       device it is pure added latency
+                       only helps while every device is busy, so on an
+                       idle pool it is pure added latency
                        (``batcher.should_close_early``).
+    ``devices``        device-pool width: warm one bound executable per
+                       local device and fan batches out across them
+                       (``None``/1 = single device, exactly the PR-5
+                       runtime). Validated against the actual local
+                       device count at :meth:`Server.start`.
+    ``placement``      placement policy name (``"least_loaded"`` or
+                       ``"round_robin"``; see ``serve.pool.PLACEMENTS``).
+                       A policy *object* can be injected via
+                       ``Server(placement=...)``.
     """
 
     max_batch: int = 8
@@ -107,6 +157,8 @@ class ServeConfig:
     batch_buckets: Optional[Tuple[int, ...]] = None
     default_deadline_ms: Optional[float] = None
     speculative_close: bool = True
+    devices: Optional[int] = None
+    placement: str = "least_loaded"
 
     def __post_init__(self):
         if self.max_batch < 1:
@@ -119,6 +171,12 @@ class ServeConfig:
         if self.max_inflight < 1:
             raise ValueError(
                 f"max_inflight must be >= 1, got {self.max_inflight}")
+        if self.devices is not None and self.devices < 1:
+            raise ValueError(f"devices must be >= 1, got {self.devices}")
+        if self.placement not in pool_mod.PLACEMENTS:
+            raise ValueError(
+                f"unknown placement {self.placement!r}; known: "
+                f"{sorted(pool_mod.PLACEMENTS)}")
 
 
 @dataclasses.dataclass
@@ -127,14 +185,21 @@ class _Request:
     n: int
     future: Future
     t_submit: float
-    deadline: Optional[float]         # absolute, metrics.now() clock
+    deadline: Optional[float]         # absolute, server-clock seconds
     trace_id: str = ""                # per-request id, spans every thread
     seq: int = 0                      # request ordinal (trace lane id)
 
 
 @dataclasses.dataclass
 class HostedProgram:
-    """One program slot in the router: executable + queue + metrics."""
+    """One program slot in the router: executable + queue + metrics.
+
+    ``bound`` is the pool's view: one executable per device. With one
+    device it is the original (unbound) executable — byte-for-byte the
+    PR-5 single-device path, ``Options(shard_batch=True)`` included;
+    with N devices each entry is an ``Executable.bind(device)`` view
+    sharing the same compiled plan.
+    """
 
     name: str
     program: Program
@@ -142,6 +207,7 @@ class HostedProgram:
     buckets: Tuple[int, ...]
     queue: deque = dataclasses.field(default_factory=deque)
     metrics: ProgramMetrics = dataclasses.field(default_factory=ProgramMetrics)
+    bound: Tuple[Executable, ...] = ()
 
     @property
     def queued_frames(self) -> int:
@@ -156,12 +222,12 @@ class Server:
 
     Usage::
 
-        server = serve.Server(serve.ServeConfig(max_batch=16))
+        server = serve.Server(serve.ServeConfig(max_batch=16, devices=4))
         server.register("edge", repro.Program.from_pipeline("edge_detect",
                                                             64, 64, 3),
                         repro.Options(backend="reference"))
         server.register("lenet", repro.Program.from_model("lenet"))
-        server.start()                        # warms every batch bucket
+        server.start()                        # warms every device x bucket
         fut = server.submit("edge", frame)    # concurrent.futures.Future
         edges = fut.result()
         print(server.stats()["programs"]["edge"]["latency_ms"])
@@ -170,10 +236,23 @@ class Server:
     ``Server`` is also a context manager (``with serve.Server(...) as s:``
     starts on enter, drains and stops on exit). Futures resolve to numpy
     arrays; asyncio callers wrap them with ``asyncio.wrap_future``.
+
+    ``clock``, ``hooks`` and ``placement`` are test/bench seams: an
+    injectable time source (:class:`~repro.serve.clock.VirtualClock`),
+    batch-close/execute hooks (:class:`Hooks`), and a placement policy
+    object overriding ``config.placement``.
     """
 
-    def __init__(self, config: Optional[ServeConfig] = None):
+    def __init__(self, config: Optional[ServeConfig] = None, *,
+                 clock: Optional[Clock] = None,
+                 hooks: Optional[Hooks] = None,
+                 placement=None):
         self.config = config or ServeConfig()
+        self._clock = clock or Clock()
+        self._hooks = hooks or Hooks()
+        self._ndev = self.config.devices or 1
+        self._placement = (placement if placement is not None
+                           else pool_mod.PLACEMENTS[self.config.placement]())
         self._programs: Dict[str, HostedProgram] = {}
         self._cond = threading.Condition()
         self._queued_total = 0                 # frames across all programs
@@ -183,8 +262,8 @@ class Server:
         self._started = False
         self._scheduler: Optional[threading.Thread] = None
         self._completer: Optional[threading.Thread] = None
-        self._inflight: queue_mod.Queue = queue_mod.Queue(
-            maxsize=self.config.max_inflight)
+        self._pool: Optional[pool_mod.Pool] = None
+        self._done: queue_mod.Queue = queue_mod.Queue()
         self._req_seq = itertools.count()
 
     # -- lifecycle ---------------------------------------------------------
@@ -210,20 +289,43 @@ class Server:
         return hosted
 
     def start(self, warm: bool = True) -> "Server":
-        """Launch the scheduler/completer threads (idempotent guard).
+        """Launch the device pool + scheduler/completer threads.
 
-        ``warm`` pre-traces every hosted program's per-frame executor at
-        every batch bucket, so the first real requests don't pay jit
-        latency — the warm plan-cache/trace priming a production rollout
-        does before taking traffic.
+        Binds every hosted executable to each pool device
+        (``Executable.bind`` — shared compiled plan, per-device placement
+        caches and donated/reused buffers where safe) and, with ``warm``,
+        pre-traces every (device, bucket) pair so the first real requests
+        don't pay jit latency — the plan-cache/trace priming a production
+        rollout does before taking traffic.
         """
         if self._started:
             raise RuntimeError("server already started")
         if not self._programs:
             raise RuntimeError("no programs registered")
+        if self._ndev > 1:
+            import jax
+            local = jax.local_devices()
+            if self._ndev > len(local):
+                raise ValueError(
+                    f"devices={self._ndev} but only {len(local)} local "
+                    f"device(s); on CPU set XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count={self._ndev}")
+            for hosted in self._programs.values():
+                hosted.bound = tuple(hosted.executable.bind(d)
+                                     for d in local[:self._ndev])
+        else:
+            # single device: keep the *unbound* executable, preserving
+            # the exact PR-5 path (Options(shard_batch=True) included)
+            for hosted in self._programs.values():
+                hosted.bound = (hosted.executable,)
         if warm:
             for hosted in self._programs.values():
-                hosted.executable.warm(hosted.buckets)
+                for exe in hosted.bound:
+                    exe.warm(hosted.buckets)
+        self._pool = pool_mod.Pool(
+            self._ndev, self._placement, self._done, clock=self._clock,
+            execute_hook=self._hooks.execute,
+            pipeline=self.config.max_inflight)
         self._started = True
         self._scheduler = threading.Thread(
             target=self._scheduler_loop, name="repro-serve-scheduler",
@@ -231,6 +333,7 @@ class Server:
         self._completer = threading.Thread(
             target=self._completer_loop, name="repro-serve-completer",
             daemon=True)
+        self._pool.start()
         self._completer.start()
         self._scheduler.start()
         return self
@@ -246,11 +349,16 @@ class Server:
         if self._scheduler is not None:
             self._scheduler.join(timeout)
             if not self._scheduler.is_alive():
-                # only retire the completer once the scheduler can no
-                # longer dispatch — a sentinel racing live dispatches
-                # would strand their futures unresolved
-                self._inflight.put(_SENTINEL)
-                self._completer.join(timeout)
+                # retire the pool only once the scheduler can no longer
+                # dispatch; Pool.stop guarantees every dispatched batch's
+                # completion is on the done queue before returning, so
+                # the sentinel cannot overtake a live completion and
+                # strand its futures unresolved
+                if self._pool is not None:
+                    self._pool.stop(timeout)
+                self._done.put(_SENTINEL)
+                if self._completer is not None:
+                    self._completer.join(timeout)
         if not drain:
             for hosted in self._programs.values():
                 while hosted.queue:
@@ -303,7 +411,7 @@ class Server:
                 f"request")
         if deadline_ms is None:
             deadline_ms = self.config.default_deadline_ms
-        t_submit = now()
+        t_submit = self._clock.now()
         seq = next(self._req_seq)
         req = _Request(frames, n, Future(), t_submit,
                        t_submit + deadline_ms / 1e3
@@ -320,7 +428,7 @@ class Server:
                     raise AdmissionError(
                         f"queue full ({self._queued_total} frames >= "
                         f"{self.config.max_queue})")
-                if not self._cond.wait(timeout):
+                if not self._clock.wait(self._cond, timeout):
                     hosted.metrics.record_reject()
                     raise AdmissionError(
                         f"queue full after {timeout}s backpressure wait")
@@ -335,9 +443,10 @@ class Server:
 
     # -- scheduler ---------------------------------------------------------
 
-    def _collect(self) -> Optional[Tuple[HostedProgram, list]]:
+    def _collect(self) -> Optional[Tuple[HostedProgram, list, str]]:
         """One scheduling decision: pick a program, hold the batch open,
-        pop it. Returns None when stopping with nothing left to drain."""
+        pop it. Returns (hosted, requests, close_reason), or None when
+        stopping with nothing left to drain."""
         cfg = self.config
         with self._cond:
             while True:
@@ -353,18 +462,26 @@ class Server:
             hosted = min(backlog, key=lambda h: h.queue[0].t_submit)
             cap = min(cfg.max_batch, max(hosted.buckets))
             close_at = hosted.queue[0].t_submit + cfg.max_wait_ms / 1e3
+            reason = None
             while (hosted.metrics.queued_frames < cap
                    and not self._stopping):
-                # speculative close: on an idle device, waiting for more
-                # frames is pure added latency — dispatch what we have
+                # speculative close: with an idle device in the pool,
+                # waiting for more frames is pure added latency —
+                # dispatch what we have
                 if batcher.should_close_early(hosted.metrics.queued_frames,
                                               cap, self._active_batches,
-                                              cfg.speculative_close):
+                                              cfg.speculative_close,
+                                              devices=self._ndev):
+                    reason = "speculative"
                     break
-                remaining = close_at - now()
+                remaining = close_at - self._clock.now()
                 if remaining <= 0:
+                    reason = "window"
                     break
-                self._cond.wait(remaining)
+                self._clock.wait(self._cond, remaining)
+            if reason is None:
+                reason = ("full" if hosted.metrics.queued_frames >= cap
+                          else "stop")
             reqs, n = [], 0
             while hosted.queue and n + hosted.queue[0].n <= cap:
                 req = hosted.queue.popleft()
@@ -378,17 +495,20 @@ class Server:
             hosted.metrics.add_queued(-n)
             self._queued_total -= n
             self._cond.notify_all()        # wake backpressured submitters
-        return hosted, reqs
+        return hosted, reqs, reason
 
     def _scheduler_loop(self) -> None:
         while True:
             picked = self._collect()
             if picked is None:
                 return
-            hosted, reqs = picked
-            t_closed = now()               # batch stopped collecting here
+            hosted, reqs, reason = picked
+            t_closed = self._clock.now()   # batch stopped collecting here
+            if self._hooks.batch_close is not None:
+                self._hooks.batch_close(hosted.name, reason,
+                                        sum(r.n for r in reqs))
             # deadline shedding: drop what is already past due
-            t = now()
+            t = self._clock.now()
             live = []
             for req in reqs:
                 if req.deadline is not None and t > req.deadline:
@@ -403,71 +523,51 @@ class Server:
             frames = (live[0].frames if len(live) == 1
                       else np.concatenate([r.frames for r in live], axis=0))
             bucket = batcher.pick_bucket(frames.shape[0], hosted.buckets)
-            t_dispatch = now()
             with self._cond:
-                self._active_batches += 1      # device busy until completed
-            try:
-                with obs.span("serve.batch.dispatch",
-                              attrs={"program": hosted.name,
-                                     "frames": frames.shape[0],
-                                     "bucket": bucket,
-                                     "requests": len(live)}):
-                    out = hosted.executable.run_padded(frames, bucket)
-            except Exception as e:                # noqa: BLE001 — isolate batch
-                with self._cond:
-                    self._active_batches -= 1
-                    self._cond.notify_all()
-                hosted.metrics.record_failed(len(live))
-                for req in live:
-                    req.future.set_exception(e)
-                continue
-            hosted.metrics.record_batch(
-                batcher.padded_slots(frames.shape[0], bucket), t_dispatch,
-                frames=frames.shape[0])
-            # hand off without blocking on the device: the completer owns
-            # the block_until_ready, this thread goes back to collecting
-            self._inflight.put((hosted, live, out, t_closed, t_dispatch,
-                                bucket))
+                self._active_batches += 1      # a device busy until done
+            # hand off to the pool without touching the device: placement
+            # picks a worker, the worker dispatches + blocks, and the
+            # completer resolves futures off the shared done queue
+            self._pool.dispatch(pool_mod.Batch(
+                hosted, live, frames, bucket, frames.shape[0], t_closed))
 
     def _completer_loop(self) -> None:
         while True:
-            item = self._inflight.get()
+            item = self._done.get()
             if item is _SENTINEL:
                 return
-            hosted, live, out, t_closed, t_dispatch, bucket = item
+            batch, live, hosted = item.batch, item.batch.live, item.batch.hosted
             try:
-                try:
-                    with obs.span("serve.batch.wait",
-                                  attrs={"program": hosted.name,
-                                         "bucket": bucket}):
-                        out_np = np.asarray(out)   # blocks until device done
-                except Exception as e:             # noqa: BLE001
+                if item.error is not None:
                     hosted.metrics.record_failed(len(live))
                     for req in live:
-                        req.future.set_exception(e)
+                        req.future.set_exception(item.error)
                     continue
-                t_ready = now()
+                hosted.metrics.record_batch(
+                    batcher.padded_slots(batch.n, batch.bucket),
+                    batch.t_dispatch, frames=batch.n)
                 for part, req in zip(
-                        batcher.split_results(out_np, [r.n for r in live]),
+                        batcher.split_results(item.out, [r.n for r in live]),
                         live):
                     req.future.set_result(part)
-                    t_done = now()
+                    t_done = self._clock.now()
                     hosted.metrics.record_served(t_done - req.t_submit, req.n,
                                                  t_done)
                     if obs.enabled():
                         self._emit_request_timeline(
-                            hosted, req, bucket, t_closed, t_dispatch,
-                            t_ready, t_done)
+                            hosted, req, batch.bucket, item.device,
+                            batch.t_closed, batch.t_dispatch, item.t_ready,
+                            t_done)
             finally:
-                # device idle again: wake a scheduler holding a batch open
-                # (speculative close) and any backpressured submitters
+                # a device is idle again: wake a scheduler holding a batch
+                # open (speculative close) and any backpressured submitters
                 with self._cond:
                     self._active_batches -= 1
                     self._cond.notify_all()
 
     @staticmethod
     def _emit_request_timeline(hosted: HostedProgram, req: _Request,
-                               bucket: int, t_closed: float,
+                               bucket: int, device: int, t_closed: float,
                                t_dispatch: float, t_ready: float,
                                t_done: float) -> None:
         """Stitch one request's end-to-end latency decomposition into the
@@ -475,9 +575,11 @@ class Server:
         carrying the request's ``trace_id`` on its own synthetic lane, so
         the exported Chrome trace shows one contiguous row per request
         even though the spans were measured on three different threads.
+        The device phase carries the pool device index that executed it.
         """
         lane = _REQ_LANE_BASE + req.seq
-        attrs = {"program": hosted.name, "frames": req.n, "bucket": bucket}
+        attrs = {"program": hosted.name, "frames": req.n, "bucket": bucket,
+                 "device": device}
         for name, t0, t1 in (
                 ("serve.request.queue_wait", req.t_submit, t_closed),
                 ("serve.request.batch_assembly", t_closed, t_dispatch),
@@ -493,7 +595,9 @@ class Server:
         achieved frames/s, padding waste, queue depth — plus each program's
         modeled device FPS / power / kFPS-per-W from its compiled report,
         the measured-vs-modeled kFPS/W drift, the process-wide plan-cache
-        hit rate and per-strategy conv dispatch counts (``repro.obs``).
+        hit rate, per-strategy conv dispatch counts (``repro.obs``) and
+        the device pool's per-device occupancy/steal/failure breakdown
+        (``"pool"`` — see ``serve.pool.Pool.stats``).
 
         ``verbose=True`` adds the batch-occupancy / padding-waste
         histograms per program and the full global ``obs`` registry dump
@@ -550,6 +654,8 @@ class Server:
             "conv_dispatch": strategies,
             "programs": programs,
         }
+        if self._pool is not None:
+            out["pool"] = self._pool.stats()
         if verbose:
             out["obs"] = obs.REGISTRY.snapshot()
         return out

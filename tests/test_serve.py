@@ -116,6 +116,9 @@ def test_should_close_early_predicate():
     assert batcher.should_close_early(3, 8, inflight_batches=0)
     # a batch is still computing: keep the window open (coalescing is free)
     assert not batcher.should_close_early(3, 8, inflight_batches=1)
+    # device pool: close while ANY device in the pool is idle
+    assert batcher.should_close_early(3, 8, inflight_batches=3, devices=4)
+    assert not batcher.should_close_early(3, 8, inflight_batches=4, devices=4)
     # feature switched off
     assert not batcher.should_close_early(3, 8, 0, speculative=False)
     # nothing queued / batch already full: the predicate defers to the
@@ -124,39 +127,65 @@ def test_should_close_early_predicate():
     assert not batcher.should_close_early(8, 8, 0)
 
 
+def test_virtual_clock():
+    clk = serve.VirtualClock()
+    assert clk.now() == 0.0
+    assert clk.advance(1.5) == 1.5
+    with pytest.raises(ValueError, match="backwards"):
+        clk.advance(-1.0)
+    cond = threading.Condition()
+    with cond:
+        t0 = time.monotonic()
+        woke = clk.wait(cond, timeout=60.0)   # jumps, never sleeps 60s
+        assert time.monotonic() - t0 < 5.0
+    assert not woke and clk.now() == 61.5
+
+
 def test_speculative_close_dispatches_before_window(lenet_exe, frames28):
     """With a long hold-open window and an idle device, a lone request must
-    come back well before max_wait_ms — and identically to a direct run."""
+    close speculatively — asserted via the batch-close reason hook and the
+    virtual clock (zero window time burned), not a racy wall-clock bound."""
     prog, exe = lenet_exe
+    clk = serve.VirtualClock()
+    closes = []
     cfg = serve.ServeConfig(max_batch=8, max_wait_ms=5000.0)
-    server = serve.Server(cfg)
+    server = serve.Server(cfg, clock=clk, hooks=serve.Hooks(
+        batch_close=lambda name, reason, n: closes.append((name, reason, n))))
     server.register("lenet", prog, REFERENCE)
     server.start()
     try:
-        t0 = time.monotonic()
+        t0 = clk.now()
         out = server.submit("lenet", frames28[:1]).result(timeout=30)
-        elapsed = time.monotonic() - t0
-        assert elapsed < 2.0, (
-            f"speculative close should beat the 5s window, took {elapsed:.2f}s")
+        held = clk.now() - t0
+        assert closes and closes[0] == ("lenet", "speculative", 1), closes
+        assert held < 5.0, (
+            f"speculative close should beat the 5s window, held {held:.2f}s "
+            f"of virtual time")
         np.testing.assert_array_equal(out, np.asarray(exe.run(frames28[:1])))
     finally:
         server.stop()
 
 
 def test_speculative_close_off_waits_out_window(lenet_exe, frames28):
-    """With the feature off, the scheduler honours max_wait_ms."""
+    """With the feature off, the scheduler honours max_wait_ms — the batch
+    closes with reason "window" after >= 400ms of *virtual* hold time."""
     prog, _ = lenet_exe
+    clk = serve.VirtualClock()
+    closes = []
     cfg = serve.ServeConfig(max_batch=8, max_wait_ms=400.0,
                             speculative_close=False)
-    server = serve.Server(cfg)
+    server = serve.Server(cfg, clock=clk, hooks=serve.Hooks(
+        batch_close=lambda name, reason, n: closes.append((name, reason, n))))
     server.register("lenet", prog, REFERENCE)
     server.start()
     try:
-        t0 = time.monotonic()
+        t0 = clk.now()
         server.submit("lenet", frames28[:1]).result(timeout=30)
-        elapsed = time.monotonic() - t0
-        assert elapsed >= 0.4, (
-            f"window should have held for 400ms, returned in {elapsed:.3f}s")
+        held = clk.now() - t0
+        assert closes and closes[0] == ("lenet", "window", 1), closes
+        assert held >= 0.4, (
+            f"window should have held for 400ms of virtual time, "
+            f"closed after {held:.3f}s")
     finally:
         server.stop()
 
@@ -238,20 +267,22 @@ def test_server_validates_at_submit(lenet_exe):
 
 def test_admission_control_and_backpressure(lenet_exe, frames28):
     """Bounded queue: non-blocking submits are rejected when full, blocking
-    submits time out; starting the server drains the backlog."""
+    submits time out (virtual backpressure wait — no real sleeping);
+    starting the server drains the backlog."""
     prog, _ = lenet_exe
+    clk = serve.VirtualClock()
     server = serve.Server(serve.ServeConfig(max_batch=2, max_queue=2,
-                                            max_wait_ms=0.0))
+                                            max_wait_ms=0.0), clock=clk)
     server.register("lenet", prog, REFERENCE)
     # not started: nothing drains the queue, so the bound must bite
     f1 = server.submit("lenet", frames28[0])
     f2 = server.submit("lenet", frames28[1])
     with pytest.raises(serve.AdmissionError, match="queue full"):
         server.submit("lenet", frames28[2], block=False)
-    t0 = time.perf_counter()
+    t0 = clk.now()
     with pytest.raises(serve.AdmissionError, match="backpressure"):
         server.submit("lenet", frames28[2], block=True, timeout=0.05)
-    assert time.perf_counter() - t0 >= 0.05
+    assert clk.now() - t0 >= 0.05        # waited the timeout out (virtually)
     server.start()                       # backlog drains once started
     assert f1.result(timeout=120).shape == (1, 10)
     assert f2.result(timeout=120).shape == (1, 10)
@@ -294,6 +325,26 @@ def test_deadline_shedding(lenet_exe, frames28):
     p = server.stats()["programs"]["lenet"]
     assert p["requests"]["shed_deadline"] == 1
     assert p["requests"]["served"] == 1
+    server.stop()
+
+
+def test_deadline_shed_virtual_clock(lenet_exe, frames28):
+    """Deterministic deadline expiry: queue a request with a 50ms budget,
+    advance *virtual* time past it before the scheduler ever runs — it
+    must shed without any real sleeping or timing races."""
+    prog, _ = lenet_exe
+    clk = serve.VirtualClock()
+    server = serve.Server(serve.ServeConfig(max_batch=4, max_wait_ms=0.0),
+                          clock=clk)
+    server.register("lenet", prog, REFERENCE)
+    expired = server.submit("lenet", frames28[0], deadline_ms=50.0)
+    clk.advance(0.051)                   # past due before the server starts
+    server.start()
+    ok = server.submit("lenet", frames28[1], deadline_ms=60_000.0)
+    with pytest.raises(serve.DeadlineExceeded, match="deadline missed"):
+        expired.result(timeout=120)
+    assert ok.result(timeout=120).shape == (1, 10)
+    assert server.stats()["programs"]["lenet"]["requests"]["shed_deadline"] == 1
     server.stop()
 
 
