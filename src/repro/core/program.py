@@ -377,13 +377,16 @@ class Executable:
     # device-bound view state (see bind()): the committed target device,
     # the params replicated onto it, whether input device buffers are
     # donated to the computation, and the reusable host staging buffers
-    # run_padded pads into (keyed by (bucket, frame shape))
+    # run_padded pads into — a ring of `_staging_slots` buffers per
+    # (bucket, frame shape) key, rotated per use so a buffer is never
+    # mutated while an async-dispatched batch may still read it
     _device: Optional[jax.Device] = dataclasses.field(
         default=None, repr=False)
     _device_params: Optional[Dict] = dataclasses.field(
         default=None, repr=False)
     _donate: bool = dataclasses.field(default=False, repr=False)
     _staging: Dict = dataclasses.field(default_factory=dict, repr=False)
+    _staging_slots: int = dataclasses.field(default=2, repr=False)
 
     @property
     def plan(self) -> plan_mod.CompiledPlan:
@@ -441,7 +444,8 @@ class Executable:
         """The committed target device (None: follow ambient placement)."""
         return self._device
 
-    def bind(self, device, donate: Optional[bool] = None) -> "Executable":
+    def bind(self, device, donate: Optional[bool] = None,
+             staging_slots: int = 2) -> "Executable":
         """A device-committed view of this Executable (``repro.serve`` pool).
 
         The returned Executable shares this one's compiled plan (and jit
@@ -449,9 +453,18 @@ class Executable:
         ``device_put`` there and the params are replicated onto it once
         and cached. It also enables the host-side serving optimizations:
 
-        * ``run_padded`` pads into a **reusable host staging buffer** per
-          (bucket, frame-shape) instead of allocating + zero-filling a
-          fresh array per batch;
+        * ``run_padded`` pads into a **ring of reusable host staging
+          buffers** per (bucket, frame-shape) instead of allocating +
+          zero-filling a fresh array per batch. ``staging_slots`` is the
+          ring depth: it must be >= the number of batches the caller may
+          have async-dispatched but not yet awaited, plus one being
+          staged — ``jax.device_put`` of a numpy array is not guaranteed
+          to copy synchronously (zero-copy aliasing on CPU, lazy H2D
+          elsewhere), so a buffer must not be rewritten until the batch
+          that staged into it has materialized. The pool passes its
+          per-device pipeline depth (``ServeConfig.max_inflight``); the
+          default of 2 covers the worker's dispatch-then-await-previous
+          overlap;
         * with ``donate`` (default: on everywhere except the CPU backend,
           which cannot alias the buffers and would warn), the frames'
           device buffer is **donated** to the computation, so XLA can
@@ -468,9 +481,13 @@ class Executable:
         """
         if donate is None:
             donate = jax.default_backend() != "cpu"
+        if staging_slots < 1:
+            raise ValueError(
+                f"staging_slots must be >= 1, got {staging_slots}")
         exe = Executable(self.program, self.options, self._plan)
         exe._device = device
         exe._donate = bool(donate)
+        exe._staging_slots = int(staging_slots)
         return exe
 
     def _place(self, frames: jnp.ndarray):
@@ -516,11 +533,20 @@ class Executable:
         results (bit-identical to batch-1 :meth:`run` calls per frame;
         regression-tested in tests/test_serve.py).
 
-        A device-bound view (:meth:`bind`) pads into a reusable host
-        staging buffer per (bucket, frame shape) instead of allocating a
-        fresh padded array every batch — safe there because each pool
-        worker owns its bound Executable exclusively, and provably inert
-        either way (pad content cannot reach the real frames' results).
+        A device-bound view (:meth:`bind`) pads into a ring of reusable
+        host staging buffers per (bucket, frame shape) instead of
+        allocating a fresh padded array every batch. The ring exists
+        because ``jax.device_put`` of a numpy array need not copy
+        synchronously (zero-copy aliasing on CPU, lazy H2D elsewhere):
+        a pipelining pool worker dispatches batch N+1 before awaiting
+        batch N, so N's buffer may still back N's in-flight computation
+        while N+1 stages. Rotating ``staging_slots`` (>= pipeline depth)
+        buffers guarantees a slot only comes back around after the batch
+        that staged into it was awaited — each pool worker owns its
+        bound view exclusively, so no further synchronization is needed,
+        and pad content is provably inert either way (it cannot reach
+        the real frames' results). Only the final chunk of an oversized
+        batch can be partial, so one call uses at most one slot.
         """
         if bucket < 1:
             raise ValueError(f"bucket must be >= 1, got {bucket}")
@@ -535,10 +561,15 @@ class Executable:
             if real < bucket:
                 if self._device is not None:
                     key = (bucket, chunk.shape[1:])
-                    buf = self._staging.get(key)
-                    if buf is None:
-                        buf = np.zeros((bucket, *chunk.shape[1:]), np.float32)
-                        self._staging[key] = buf
+                    ring = self._staging.setdefault(key, [])
+                    if len(ring) < self._staging_slots:
+                        buf = np.zeros((bucket, *chunk.shape[1:]),
+                                       np.float32)
+                    else:
+                        # oldest slot: the batch that staged into it was
+                        # awaited >= slots-1 dispatches ago
+                        buf = ring.pop(0)
+                    ring.append(buf)
                     buf[:real] = chunk
                     buf[real:] = 0.0
                     chunk = buf

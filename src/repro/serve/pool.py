@@ -127,9 +127,14 @@ PLACEMENTS = {"least_loaded": LeastLoaded, "round_robin": RoundRobin}
 # Batch / completion currency between scheduler, workers and completer
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class Batch:
-    """One closed micro-batch in flight through the pool."""
+    """One closed micro-batch in flight through the pool.
+
+    Identity semantics (``eq=False``): batches are tracked in per-worker
+    in-flight lists and removed by ``is``-equality — field-wise ``==``
+    over numpy frames would be both wrong and ambiguous.
+    """
 
     hosted: object                    # serve.server.HostedProgram
     live: list                        # [_Request] whose futures to resolve
@@ -162,6 +167,7 @@ class _Worker:
         self.queue: deque = deque()
         self.queued_frames = 0
         self.inflight_frames = 0
+        self.inflight: List[Batch] = []   # dispatched, not yet completed
         p = f"serve.pool.device{index}"
         self.batches = registry.counter(f"{p}.batches")
         self.frames = registry.counter(f"{p}.frames")
@@ -226,8 +232,12 @@ class Pool:
         """Drain every queue, flush pending batches, join the workers.
 
         Every dispatched batch's completion is on the ``done`` queue by
-        the time this returns (workers enqueue before exiting), so the
-        caller can safely sentinel its completer afterwards.
+        the time this returns **provided every worker joined** (workers
+        enqueue before exiting) — then the caller can safely sentinel
+        its completer. Under a finite ``timeout`` a wedged worker may
+        outlive the join; check :meth:`alive` and reclaim its work via
+        :meth:`take_outstanding` before putting any sentinel, or those
+        batches' futures are stranded unresolved.
         """
         with self._cond:
             self._stopping = True
@@ -235,6 +245,34 @@ class Pool:
         for w in self._workers:
             if w.thread is not None:
                 w.thread.join(timeout)
+
+    def alive(self) -> bool:
+        """True while any worker thread is still running (a finite
+        ``stop(timeout)`` may return before the pool is quiescent)."""
+        return any(w.thread is not None and w.thread.is_alive()
+                   for w in self._workers)
+
+    def take_outstanding(self):
+        """Reclaim work a timed-out :meth:`stop` left behind.
+
+        Returns ``(queued, inflight)``: ``queued`` batches are *removed*
+        from the worker queues (no worker can pick them up afterwards,
+        so they will never reach the ``done`` queue — the caller owns
+        failing their futures); ``inflight`` is a snapshot of batches
+        dispatched to a device but not yet completed — a wedged worker
+        may still complete one later, so the caller must settle their
+        futures idempotently.
+        """
+        queued: List[Batch] = []
+        inflight: List[Batch] = []
+        with self._cond:
+            for w in self._workers:
+                while w.queue:
+                    batch = w.queue.popleft()
+                    w.queued_frames -= batch.n
+                    queued.append(batch)
+                inflight.extend(w.inflight)
+        return queued, inflight
 
     # -- dispatch (scheduler thread) ---------------------------------------
 
@@ -314,6 +352,7 @@ class Pool:
         batch.t_dispatch = self._clock.now()
         with self._lock:
             w.inflight_frames += batch.n
+            w.inflight.append(batch)
         exe = batch.hosted.bound[w.index]
         name = batch.hosted.name
 
@@ -339,6 +378,7 @@ class Pool:
         t_ready = self._clock.now()
         with self._lock:
             w.inflight_frames -= batch.n
+            w.inflight.remove(batch)
         w.batches.inc()
         w.frames.inc(batch.n)
         w.busy_s.add(t_ready - batch.t_dispatch)
@@ -354,6 +394,7 @@ class Pool:
     def _fail(self, w: _Worker, batch: Batch, exc: BaseException) -> None:
         with self._lock:
             w.inflight_frames -= batch.n
+            w.inflight.remove(batch)
         w.failures.inc()
         err = WorkerError(
             f"device {w.index} failed executing a bucket-{batch.bucket} "

@@ -57,7 +57,7 @@ import itertools
 import queue as queue_mod
 import threading
 from collections import deque
-from concurrent.futures import Future
+from concurrent.futures import Future, InvalidStateError
 from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import numpy as np
@@ -215,6 +215,27 @@ class HostedProgram:
 
 
 _SENTINEL = object()
+_UNSET = object()
+
+
+def _settle(future: Future, result=_UNSET,
+            exc: Optional[BaseException] = None) -> bool:
+    """Resolve ``future`` exactly once; False if it was already settled.
+
+    A timed-out :meth:`Server.stop` fails stranded batches from the
+    caller's thread while a wedged worker may still complete them and
+    route a late ``Done`` through the completer — both sides settle
+    through here so whichever runs second is a recorded no-op instead of
+    an ``InvalidStateError`` crash (and metrics only count the winner).
+    """
+    try:
+        if exc is not None:
+            future.set_exception(exc)
+        else:
+            future.set_result(result)
+        return True
+    except InvalidStateError:
+        return False
 
 
 class Server:
@@ -311,8 +332,13 @@ class Server:
                     f"device(s); on CPU set XLA_FLAGS="
                     f"--xla_force_host_platform_device_count={self._ndev}")
             for hosted in self._programs.values():
-                hosted.bound = tuple(hosted.executable.bind(d)
-                                     for d in local[:self._ndev])
+                # staging ring depth matches the per-device pipeline: a
+                # worker may have max_inflight batches dispatched but
+                # unawaited, each still reading its staging buffer
+                hosted.bound = tuple(
+                    hosted.executable.bind(
+                        d, staging_slots=max(2, self.config.max_inflight))
+                    for d in local[:self._ndev])
         else:
             # single device: keep the *unbound* executable, preserving
             # the exact PR-5 path (Options(shard_batch=True) included)
@@ -341,7 +367,10 @@ class Server:
     def stop(self, drain: bool = True, timeout: Optional[float] = None) -> None:
         """Stop the server. ``drain=True`` serves everything already
         queued first; ``drain=False`` fails pending requests with
-        :class:`ServerClosed`."""
+        :class:`ServerClosed`. A finite ``timeout`` bounds every join:
+        batches a wedged device still holds when it expires are failed
+        with :class:`ServerClosed` rather than left stranded (no caller
+        blocks forever on ``result()``)."""
         with self._cond:
             self._stopping = True
             self._drain = drain
@@ -350,21 +379,57 @@ class Server:
             self._scheduler.join(timeout)
             if not self._scheduler.is_alive():
                 # retire the pool only once the scheduler can no longer
-                # dispatch; Pool.stop guarantees every dispatched batch's
-                # completion is on the done queue before returning, so
-                # the sentinel cannot overtake a live completion and
-                # strand its futures unresolved
+                # dispatch; when every worker joins, Pool.stop guarantees
+                # every dispatched batch's completion is on the done
+                # queue before returning, so the sentinel cannot overtake
+                # a live completion and strand its futures unresolved. A
+                # finite timeout voids that guarantee — reclaim whatever
+                # a still-running worker holds and fail it (idempotently:
+                # the worker may yet complete an in-flight batch) before
+                # the sentinel retires the completer.
                 if self._pool is not None:
                     self._pool.stop(timeout)
+                    if self._pool.alive():
+                        self._fail_stranded()
                 self._done.put(_SENTINEL)
                 if self._completer is not None:
                     self._completer.join(timeout)
         if not drain:
-            for hosted in self._programs.values():
-                while hosted.queue:
-                    req = hosted.queue.popleft()
-                    hosted.metrics.record_failed()
-                    req.future.set_exception(ServerClosed("server stopped"))
+            with self._cond:
+                for hosted in self._programs.values():
+                    while hosted.queue:
+                        req = hosted.queue.popleft()
+                        hosted.metrics.add_queued(-req.n)
+                        self._queued_total -= req.n
+                        if _settle(req.future,
+                                   exc=ServerClosed("server stopped")):
+                            hosted.metrics.record_failed()
+                self._cond.notify_all()    # release backpressured submitters
+
+    def _fail_stranded(self) -> None:
+        """Fail every batch a timed-out pool shutdown left behind.
+
+        Queued batches were removed from the worker queues (they can
+        never reach the done queue); in-flight batches may still finish
+        on the wedged worker, so both sides settle each future through
+        :func:`_settle` and only the winner is counted in metrics.
+        """
+        queued, inflight = self._pool.take_outstanding()
+        for batch in queued + inflight:
+            failed = sum(
+                1 for req in batch.live
+                if _settle(req.future, exc=ServerClosed(
+                    f"server stopped before the pool drained (stop "
+                    f"timeout expired with a batch of "
+                    f"{batch.hosted.name!r} outstanding)")))
+            if failed:
+                batch.hosted.metrics.record_failed(failed)
+        if queued:
+            # queued batches produce no Done, so the completer will never
+            # run its active-batch decrement for them
+            with self._cond:
+                self._active_batches -= len(queued)
+                self._cond.notify_all()
 
     def __enter__(self) -> "Server":
         return self.start()
@@ -539,9 +604,10 @@ class Server:
             batch, live, hosted = item.batch, item.batch.live, item.batch.hosted
             try:
                 if item.error is not None:
-                    hosted.metrics.record_failed(len(live))
-                    for req in live:
-                        req.future.set_exception(item.error)
+                    failed = sum(1 for req in live
+                                 if _settle(req.future, exc=item.error))
+                    if failed:
+                        hosted.metrics.record_failed(failed)
                     continue
                 hosted.metrics.record_batch(
                     batcher.padded_slots(batch.n, batch.bucket),
@@ -549,7 +615,10 @@ class Server:
                 for part, req in zip(
                         batcher.split_results(item.out, [r.n for r in live]),
                         live):
-                    req.future.set_result(part)
+                    if not _settle(req.future, result=part):
+                        # a timed-out stop() already failed this request;
+                        # the late completion is a no-op, not a crash
+                        continue
                     t_done = self._clock.now()
                     hosted.metrics.record_served(t_done - req.t_submit, req.n,
                                                  t_done)

@@ -373,6 +373,28 @@ def test_stop_no_drain_fails_pending(lenet_exe, frames28):
         fut.result(timeout=1)
 
 
+def test_stop_no_drain_resets_queue_accounting(lenet_exe, frames28):
+    """Failing the queue on stop(drain=False) must give the admitted
+    frames back: queue_depth and the per-program queued gauge drop to
+    zero instead of reporting stale nonzero values after shutdown."""
+    prog, _ = lenet_exe
+    server = serve.Server(serve.ServeConfig(max_batch=4))
+    server.register("lenet", prog, REFERENCE)
+    # never started: nothing drains, stop(drain=False) fails the backlog
+    futs = [server.submit("lenet", frames28[:2]) for _ in range(3)]
+    assert server.stats()["queue_depth"] == 6
+    server._started = True
+    server._scheduler = server._completer = None
+    server.stop(drain=False)
+    for fut in futs:
+        with pytest.raises(serve.ServerClosed):
+            fut.result(timeout=1)
+    st = server.stats()
+    assert st["queue_depth"] == 0
+    assert st["programs"]["lenet"]["queue_depth"] == 0
+    assert st["programs"]["lenet"]["requests"]["failed"] == 3
+
+
 def test_context_manager_and_oversize_request(lenet_exe, frames28):
     """Requests larger than every bucket run chunked — same results."""
     prog, exe = lenet_exe

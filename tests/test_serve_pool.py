@@ -205,6 +205,45 @@ def test_pool_stop_flushes_pending_completions():
         assert done.get().error is None
 
 
+def test_pool_take_outstanding_reclaims_wedged_work():
+    """A finite Pool.stop(timeout) can expire with a wedged worker still
+    holding work: alive() must report it and take_outstanding() must
+    hand back both the queued batch (removed, never executable) and the
+    in-flight one (snapshot), so the server can fail their futures
+    instead of stranding them."""
+    done: queue.Queue = queue.Queue()
+    gate = threading.Event()
+    entered = threading.Event()
+
+    def execute(program, device, frames, bucket, default):
+        entered.set()
+        assert gate.wait(30)            # wedge the only worker
+        return frames
+
+    pool = pool_mod.Pool(1, serve.RoundRobin(), done,
+                         execute_hook=execute, pipeline=1)
+    pool.start()
+    hosted = _hosted_stub(n_devices=1)
+    b1, b2 = _batch(hosted, 1.0), _batch(hosted, 2.0)
+    try:
+        pool.dispatch(b1)
+        assert entered.wait(30)
+        pool.dispatch(b2)               # stuck behind the wedged batch
+        pool.stop(timeout=0.2)
+        assert pool.alive()
+        queued, inflight = pool.take_outstanding()
+        assert queued == [b2] and inflight == [b1]   # identity (eq=False)
+        st = pool.stats()
+        assert st["per_device"][0]["queued_frames"] == 0
+        # idempotent: a second reclaim finds no queued work
+        assert pool.take_outstanding()[0] == []
+    finally:
+        gate.set()                      # release the worker; full join
+        pool.stop(timeout=30)
+    assert not pool.alive()
+    assert done.get(timeout=30).error is None        # b1 still completed
+
+
 # -- server-level fault injection ---------------------------------------------
 
 def test_server_fault_injection_fails_only_that_batch(lenet_exe, frames28):
@@ -245,6 +284,38 @@ def test_server_fault_injection_fails_only_that_batch(lenet_exe, frames28):
     assert server.stats()["queue_depth"] == 0
 
 
+def test_stop_timeout_fails_stranded_batches_instead_of_hanging(lenet_exe,
+                                                                frames28):
+    """Server.stop(timeout=...) expiring with a wedged device worker
+    must fail that batch's futures with ServerClosed — not sentinel the
+    completer past them and leave result() blocking forever."""
+    prog, _ = lenet_exe
+    gate = threading.Event()
+    entered = threading.Event()
+
+    def execute(program, device, frames, bucket, default):
+        entered.set()
+        assert gate.wait(30)            # wedge the device worker
+        return default()
+
+    server = serve.Server(serve.ServeConfig(max_batch=4, max_wait_ms=0.0),
+                          hooks=serve.Hooks(execute=execute))
+    server.register("lenet", prog, REFERENCE)
+    server.start()
+    try:
+        fut = server.submit("lenet", frames28[:2])
+        assert entered.wait(30)
+        server.stop(drain=False, timeout=0.2)
+        with pytest.raises(serve.ServerClosed, match="outstanding"):
+            fut.result(timeout=30)
+        st = server.stats()
+        assert st["programs"]["lenet"]["requests"]["failed"] == 1
+        assert st["queue_depth"] == 0
+    finally:
+        gate.set()   # release the wedged worker thread; its late
+        # completion must be a silent no-op on the already-failed future
+
+
 # -- device binding (single device is enough) ---------------------------------
 
 def test_bind_device_bit_identical_and_staging_reused(lenet_exe, frames28):
@@ -264,6 +335,30 @@ def test_bind_device_bit_identical_and_staging_reused(lenet_exe, frames28):
     np.testing.assert_array_equal(a, ref[:3])
     np.testing.assert_array_equal(b, ref[:3])
     assert len(bound._staging) == 1
+
+
+def test_staging_ring_survives_pipelined_dispatch(lenet_exe, frames28):
+    """run_padded must never rewrite a staging buffer an async-dispatched
+    batch may still read (jax.device_put of numpy need not copy
+    synchronously). The bound view rotates `staging_slots` buffers, so
+    the pool worker's pipeline order — dispatch batch N+1, then await
+    batch N — stays bit-identical."""
+    _, exe = lenet_exe
+    bound = exe.bind(jax.local_devices()[0], staging_slots=2)
+    ref_a = np.asarray(exe.run_per_frame(frames28[:3]))
+    ref_b = np.asarray(exe.run_per_frame(frames28[3:6]))
+    # dispatch two padded batches back-to-back; materialize only after
+    # both have staged (the max_inflight=2 worker interleaving)
+    lazy_a = bound.run_padded(frames28[:3], bucket=4)
+    lazy_b = bound.run_padded(frames28[3:6], bucket=4)
+    np.testing.assert_array_equal(np.asarray(lazy_a), ref_a)
+    np.testing.assert_array_equal(np.asarray(lazy_b), ref_b)
+    # one (bucket, shape) key, two rotated distinct buffers behind it
+    (ring,) = bound._staging.values()
+    assert len(ring) == 2
+    assert not np.shares_memory(ring[0], ring[1])
+    with pytest.raises(ValueError, match="staging_slots"):
+        exe.bind(jax.local_devices()[0], staging_slots=0)
 
 
 def test_bind_donate_bit_identical(lenet_exe, frames28):
