@@ -1,0 +1,104 @@
+"""Static-analysis overhead benchmark: verification must be ~free.
+
+``Options(verify=)`` defaults to "auto" — every first compile of a plan
+runs the full verifier (accumulator proof, shape re-walk, VMEM audit).
+That is only acceptable if the pass costs a vanishing fraction of the
+compile it rides on, so this benchmark pins the claim into
+``BENCH_analysis.json``:
+
+* **compile_us_off / compile_us_on** — a cold ``Program.compile`` of the
+  deepest registered CNN (vgg9: conv chain + FC head, the most steps to
+  verify) with the plan cache cleared each iteration, verification off
+  vs on. ``overhead_pct`` is the gated number — ``scripts/
+  check_bench.py`` fails if verification adds >= 5% to compile time.
+* **verify_us** — ``analysis.verify_plan`` alone on the compiled plan
+  (the marginal cost of an ``Options(verify="on")`` cache-hit re-check).
+* **lint** — the concurrency lint over the real serve/obs trees: wall
+  time and finding count (0 errors is separately gated by the ci.sh
+  lint leg; recorded here so the docs can quote the cost).
+
+All timings are best-of-``REPEATS`` (min de-noises CPU CI). Run:
+``PYTHONPATH=src python -m benchmarks.bench_analysis``.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from repro import analysis
+from repro.core import plan as plan_mod
+
+SCHEMA_VERSION = 1
+OUT_PATH = Path(__file__).resolve().parent / "BENCH_analysis.json"
+MODEL = "vgg9"
+REPEATS = 5
+VERIFY_ITERS = 50
+SRC = Path(__file__).resolve().parent.parent / "src" / "repro"
+
+
+def _best_compile_us(prog, options) -> float:
+    import repro  # noqa: F401  (jax already imported by caller)
+    best = float("inf")
+    for _ in range(REPEATS):
+        plan_mod.clear_plan_cache()
+        t0 = time.perf_counter()
+        prog.compile(options)
+        best = min(best, (time.perf_counter() - t0) * 1e6)
+    return best
+
+
+def run() -> dict:
+    import repro
+
+    prog = repro.Program.from_model(MODEL, params={})
+    off = _best_compile_us(prog, repro.Options(verify="off"))
+    on = _best_compile_us(prog, repro.Options(verify="on"))
+    overhead_pct = (on - off) / off * 100.0
+
+    exe = prog.compile(repro.Options(verify="off"))
+    best_verify = float("inf")
+    n_diags = 0
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        for _ in range(VERIFY_ITERS):
+            diags = analysis.verify_plan(exe.plan)
+        best_verify = min(
+            best_verify, (time.perf_counter() - t0) / VERIFY_ITERS * 1e6)
+        n_diags = len(diags)
+
+    lint_paths = [SRC / "serve", SRC / "obs"]
+    best_lint = float("inf")
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        findings = analysis.lint_paths(lint_paths)
+        best_lint = min(best_lint, (time.perf_counter() - t0) * 1e6)
+
+    out = {
+        "schema_version": SCHEMA_VERSION,
+        "verify": {
+            "model": MODEL,
+            "compile_us_off": off,
+            "compile_us_on": on,
+            "overhead_pct": overhead_pct,
+            "verify_us": best_verify,
+            "diagnostics": n_diags,
+        },
+        "lint": {
+            "paths": [str(p.relative_to(SRC.parent.parent)) for p in
+                      lint_paths],
+            "lint_us": best_lint,
+            "findings": len(findings),
+            "errors": len(analysis.errors(findings)),
+        },
+    }
+    OUT_PATH.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"bench_analysis: compile {MODEL} off={off:.0f}us on={on:.0f}us "
+          f"(+{overhead_pct:.2f}%), verify alone {best_verify:.0f}us, "
+          f"lint {best_lint:.0f}us ({len(findings)} finding(s))")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -10,6 +10,7 @@
 #   bench_imaging   imaging pipelines frames/s + PSNR/SSIM per scheme
 #   bench_serving   serving runtime: offered-load sweep + batching ablation
 #   bench_obs       observability overhead: disabled-path cost vs raw executor
+#   bench_analysis  plan-verifier compile overhead + concurrency-lint cost
 
 import os
 import sys
@@ -22,10 +23,10 @@ os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "4")
 
 
 def main() -> None:
-    from benchmarks import (bench_table1, bench_fig8, bench_fig9,
-                            bench_fig10, bench_accuracy, bench_kernels,
-                            bench_lm_photonic, bench_obs, bench_pipeline,
-                            bench_imaging, bench_serving)
+    from benchmarks import (bench_analysis, bench_table1, bench_fig8,
+                            bench_fig9, bench_fig10, bench_accuracy,
+                            bench_kernels, bench_lm_photonic, bench_obs,
+                            bench_pipeline, bench_imaging, bench_serving)
     bench_table1.run()
     bench_fig8.run()
     bench_fig9.run()
@@ -40,6 +41,7 @@ def main() -> None:
                       if quick else None)
     bench_serving.run(quick=quick)
     bench_obs.run()
+    bench_analysis.run()
 
 
 if __name__ == '__main__':

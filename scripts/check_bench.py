@@ -46,12 +46,13 @@ from pathlib import Path
 ROOT = Path(__file__).resolve().parent.parent
 BENCH_DIR = ROOT / "benchmarks"
 FILES = ("BENCH_kernels.json", "BENCH_imaging.json", "BENCH_serving.json",
-         "BENCH_obs.json")
+         "BENCH_obs.json", "BENCH_analysis.json")
 FUSED_MIN_SPEEDUP = 1.5   # acceptance bar for the 256x256 chain ablation
 SERVE_MIN_SPEEDUP = 2.0   # micro-batching vs request-at-a-time at saturation
 POOL_MIN_SCALING = 1.5    # 4-device pool vs 1 device, emulated device time
 ORACLE_ERR_MAX = 1e-5     # dequant float epsilon, not a kernel bug
 OBS_MAX_OVERHEAD_PCT = 2.0  # disabled-path obs cost on the 3-stage chain
+VERIFY_MAX_OVERHEAD_PCT = 5.0  # plan verification riding the compile pass
 
 
 def _baseline(name: str, ref: str):
@@ -161,6 +162,21 @@ def check_invariants(name: str, data: dict, errors: list) -> None:
                 f"{OBS_MAX_OVERHEAD_PCT}% — disabled tracing must be free")
         if chain.get("frame_us_raw", 0.0) <= 0:
             bad("chain.frame_us_raw must be > 0")
+
+    elif name == "BENCH_analysis.json":
+        v = data.get("verify", {})
+        if "overhead_pct" not in v:
+            bad("verify.overhead_pct missing")
+        elif v["overhead_pct"] >= VERIFY_MAX_OVERHEAD_PCT:
+            bad(f"verify.overhead_pct {v['overhead_pct']:.2f}% >= "
+                f"{VERIFY_MAX_OVERHEAD_PCT}% — Options(verify=\"auto\") "
+                f"rides every first compile, it must be ~free")
+        if v.get("verify_us", 0.0) <= 0:
+            bad("verify.verify_us must be > 0")
+        lint = data.get("lint", {})
+        if lint.get("errors", 1) != 0:
+            bad(f"lint.errors = {lint.get('errors')} — the serve/obs tree "
+                f"must be lint-clean when the artifact is regenerated")
 
 
 def check_regression(name: str, data: dict, base: dict, tolerance: float,

@@ -34,6 +34,14 @@ fi
 # docs gate: every docs/*.md referenced from README, no dead relative links
 python scripts/check_docs.py
 
+# static-analysis gates: (1) the plan verifier must prove the kernel
+# invariants (|acc| < 2^24, shape legality, VMEM/fusion audit) for every
+# registered model and imaging pipeline; (2) the concurrency lint must
+# find no unlocked shared mutation / unjoined thread / raw future settle
+# in the serving + observability runtime
+python scripts/verify_plan.py --all
+python -m repro.analysis.lint src/repro/serve src/repro/obs
+
 # bench gate: committed BENCH_*.json must keep their invariants (fused
 # megakernel >= 1.5x and bitwise-exact, oracle errors at float epsilon)
 # and stay inside the timing tolerance band vs the previous commit

@@ -1,0 +1,43 @@
+"""repro.analysis — static verification of the invariants the kernels assert.
+
+Two legs (see docs/analysis.md for the diagnostic-code glossary):
+
+* :mod:`repro.analysis.verifier` — a compile-time pass over a
+  ``CompiledPlan`` proving the ``|acc| < 2^24`` integer-exactness window,
+  shape legality across ``Program.then`` chains, and auditing the
+  strip/fusion VMEM heuristics with an independent re-derivation.
+  Wired into ``Program.compile`` via ``Options(verify=)`` ("auto" | "on"
+  | "off"; ambient default ``REPRO_VERIFY``).
+* :mod:`repro.analysis.lint` — an AST concurrency lint over
+  ``src/repro/serve`` + ``src/repro/obs`` (unlocked shared mutation,
+  unjoined threads, futures settled outside ``_settle``), run by
+  ``scripts/ci.sh`` as a gate.
+
+The package imports no jax: it is safe to run the lint (and the
+diagnostics types) in environments without the accelerator stack;
+``verify_plan`` imports the core lazily.
+"""
+
+from repro.analysis.diagnostics import (Diagnostic, PlanVerificationError,
+                                        SEVERITIES, errors,
+                                        format_diagnostics, worst_severity)
+from repro.analysis.verifier import (ACC_EXACT_LIMIT, VERIFY_MODES,
+                                     acc_bound, audit_fused_segments,
+                                     headroom_bits, raise_on_errors,
+                                     verify_mode, verify_plan)
+
+
+def __getattr__(name):
+    # lazy: `python -m repro.analysis.lint` must not find the module
+    # pre-imported by its own package (runpy's double-import warning)
+    if name in ("lint_paths", "lint_source"):
+        from repro.analysis import lint
+        return getattr(lint, name)
+    raise AttributeError(f"module 'repro.analysis' has no attribute {name!r}")
+
+__all__ = [
+    "ACC_EXACT_LIMIT", "Diagnostic", "PlanVerificationError", "SEVERITIES",
+    "VERIFY_MODES", "acc_bound", "audit_fused_segments", "errors",
+    "format_diagnostics", "headroom_bits", "lint_paths", "lint_source",
+    "raise_on_errors", "verify_mode", "verify_plan", "worst_severity",
+]

@@ -215,6 +215,9 @@ class CompiledPlan:
     fused_segments: Tuple[dispatch.FusedSegmentSpec, ...] = ()
     _exec_fns: Dict[str, object] = dataclasses.field(default_factory=dict,
                                                      repr=False)
+    # has the analysis verifier run over this plan? (verify="auto" runs it
+    # on first compile; "on" also re-checks cache hits — see _compile_model)
+    _verified: bool = dataclasses.field(default=False, repr=False)
 
     def executor(self, per_frame: bool = False, donate: bool = False):
         """The jitted (params, frames) -> logits function for this plan.
@@ -277,7 +280,8 @@ def _compile_model(layers: Sequence, input_shape: Tuple[int, ...],
                    fc_batch: int = 1,
                    conv_strategy: Optional[str] = None,
                    conv_vmem_budget: Optional[int] = None,
-                   fuse: Optional[str] = None) -> CompiledPlan:
+                   fuse: Optional[str] = None,
+                   verify: Optional[str] = None) -> CompiledPlan:
     """Resolve specs, shapes, OC schedules and the power report — once.
 
     ``input_shape`` is the frame shape, batched [B, H, W, C] or per-frame
@@ -306,6 +310,19 @@ def _compile_model(layers: Sequence, input_shape: Tuple[int, ...],
     what ``Options(fuse=...)`` passes down); ``None`` derives it from the
     resolved conv strategy mode (``dispatch.conv_fuse_mode``: forced
     resident/strip disable fusion, ``fused`` forces it on).
+
+    ``verify`` pins the plan-verifier mode ("auto" | "on" | "off", what
+    ``Options(verify=...)`` passes down; ``None`` defers to
+    ``REPRO_VERIFY``, default "auto"). "auto" runs ``repro.analysis.
+    verify_plan`` on every cache-miss compile and raises
+    :class:`~repro.analysis.PlanVerificationError` at error severity
+    (the plan is NOT cached — a later verify="off" compile starts
+    clean); "on" additionally re-checks cache hits, so a plan first
+    compiled under "off" still gets proved before use; "off" skips.
+    Warning/error findings land in ``report.verification``. Like
+    ``trace``, the mode stays OUT of the cache key: verification never
+    changes what gets compiled, so verified and unverified callers
+    share the same cached plan.
     """
     from repro.core.accelerator import (CASpec, ConvSpec, DenseSpec,
                                         FlattenSpec, UpsampleSpec)
@@ -321,6 +338,11 @@ def _compile_model(layers: Sequence, input_shape: Tuple[int, ...],
     conv_budget = (conv_vmem_budget if conv_vmem_budget is not None
                    else dispatch.conv_vmem_budget())
     fuse_mode = fuse if fuse is not None else dispatch.conv_fuse_mode(conv_mode)
+    from repro.analysis import verifier as _verifier
+    verify_mode = verify if verify is not None else _verifier.verify_mode()
+    if verify_mode not in _verifier.VERIFY_MODES:
+        raise ValueError(f"unknown verify mode {verify_mode!r}; expected "
+                         f"one of {_verifier.VERIFY_MODES}")
     key = (layers, frame_shape, scheme, oc, circuit, profile,
            weight_sram_kb, act_sram_kb, fc_batch,
            (conv_mode, conv_budget, fuse_mode))
@@ -332,6 +354,9 @@ def _compile_model(layers: Sequence, input_shape: Tuple[int, ...],
             obs.event("plan.cache.hit",
                       attrs={"frame_shape": list(frame_shape),
                              "layers": len(layers)})
+        if verify_mode == "on":
+            # a hit may predate verification (first compiled under "off")
+            _verify_plan(cached, conv_budget)
         return cached
     _CACHE_STATS["misses"] += 1
     obs.counter("plan.cache.miss").inc()
@@ -343,8 +368,43 @@ def _compile_model(layers: Sequence, input_shape: Tuple[int, ...],
             layers, frame_shape, scheme, oc, circuit, profile,
             weight_sram_kb, act_sram_kb, fc_batch, conv_mode, conv_budget,
             fuse_mode)
+    if verify_mode != "off":
+        # verify BEFORE caching: a plan that fails at error severity is
+        # never published, so a later verify="off" compile starts clean
+        _verify_plan(plan, conv_budget)
     _PLAN_CACHE[key] = plan
     return plan
+
+
+def _verify_plan(plan: CompiledPlan, budget: int) -> None:
+    """Run the analysis verifier over ``plan`` once (idempotent).
+
+    Warning/error findings are stored in ``plan.report.verification``
+    (info-level headroom facts stay out — see ModelReport); error
+    severity raises :class:`repro.analysis.PlanVerificationError`. A plan
+    already verified re-raises from its stored findings instead of
+    re-walking.
+    """
+    from repro import analysis
+    if plan._verified:
+        stored = plan.report.verification
+        if any(d["severity"] == "error" for d in stored):
+            raise analysis.PlanVerificationError(
+                [analysis.Diagnostic(**d) for d in stored])
+        return
+    with obs.span("plan.verify", attrs={"layers": len(plan.layers)}):
+        # info (the headroom report) never reaches ModelReport, so the
+        # compile path skips constructing it (scripts/verify_plan.py asks
+        # for it explicitly)
+        diags = analysis.verify_plan(plan, budget=budget,
+                                     include_info=False)
+    plan.report.verification = [d.asdict() for d in diags
+                                if d.severity != "info"]
+    plan._verified = True
+    obs.counter("plan.verify.run").inc()
+    if analysis.errors(diags):
+        obs.counter("plan.verify.error").inc()
+        raise analysis.PlanVerificationError(diags)
 
 
 def _compile_model_uncached(layers, frame_shape, scheme, oc, circuit,

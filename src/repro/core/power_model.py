@@ -135,6 +135,11 @@ class ModelReport:
     # the compile pass and the eager interpreter; empty when fusion is off
     # or for schedule-only reports
     fused_segments: List[Dict] = dataclasses.field(default_factory=list)
+    # plan-verifier findings (repro.analysis, Options(verify=)): warning/
+    # error Diagnostic dicts only — info-level findings (per-step headroom)
+    # stay out so a clean model's report is [] on every path and the
+    # eager/compiled report-identity contract is preserved
+    verification: List[Dict] = dataclasses.field(default_factory=list)
 
     def component_totals(self) -> Dict[str, float]:
         """Time-weighted component powers across the model (Fig. 9 pie)."""

@@ -53,6 +53,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
+from repro.analysis import verifier as _verifier
 from repro.core import optical_core as ocore
 from repro.core import plan as plan_mod
 from repro.core import power_model as pmod
@@ -88,6 +89,9 @@ class Options:
                         strategy mode              ``auto`` | ``on`` | ``off``
     ``trace``           ``REPRO_TRACE``            obs span/event emission:
                         (else ``auto``)            ``auto`` | ``on`` | ``off``
+    ``verify``          ``REPRO_VERIFY``           plan verifier (repro.
+                        (else ``auto``)            analysis): ``auto`` |
+                                                   ``on`` | ``off``
     ==================  =========================  =======================
 
     ``fuse`` controls the megakernel pass (``dispatch.
@@ -106,6 +110,18 @@ class Options:
     (``obs.use_mode``) and deliberately stays OUT of the plan cache key:
     tracing never changes what gets compiled, so traced and untraced
     callers share the same cached plan.
+
+    ``verify`` mirrors the same tri-state for the compile-time plan
+    verifier (``repro.analysis.verify_plan``: the ``|acc| < 2^24``
+    integer-exactness proof, shape legality, strip/fusion VMEM audit —
+    docs/analysis.md). ``auto`` (the default) verifies on every
+    cache-miss compile and raises
+    :class:`repro.analysis.PlanVerificationError` at error severity;
+    ``on`` additionally re-checks cache hits (a plan first compiled
+    under "off" still gets proved before use); ``off`` skips. Findings
+    at warning severity land in ``Executable.report.verification``
+    without raising. Like ``trace``, the mode stays OUT of the plan
+    cache key — verification never changes what gets compiled.
 
     ``shard_batch`` shards ``Executable.run``'s batch axis over the local
     devices (or an explicit ``mesh``) via ``NamedSharding`` — a graceful
@@ -128,6 +144,7 @@ class Options:
     conv_vmem_budget: Optional[int] = None
     fuse: Optional[str] = None
     trace: Optional[str] = None
+    verify: Optional[str] = None
     shard_batch: bool = False
     mesh: Optional[jax.sharding.Mesh] = None
 
@@ -151,6 +168,10 @@ class Options:
         if self.trace is not None and self.trace not in obs.TRACE_MODES:
             raise ValueError(f"unknown trace mode {self.trace!r}; expected "
                              f"one of {obs.TRACE_MODES}")
+        if (self.verify is not None
+                and self.verify not in _verifier.VERIFY_MODES):
+            raise ValueError(f"unknown verify mode {self.verify!r}; "
+                             f"expected one of {_verifier.VERIFY_MODES}")
 
     def resolve(self) -> "Options":
         """Fill every ``None`` field from its env-var/auto default.
@@ -174,6 +195,8 @@ class Options:
                   else dispatch.conv_fuse_mode(self.conv_strategy)),
             trace=(self.trace if self.trace is not None
                    else obs.trace_mode()),
+            verify=(self.verify if self.verify is not None
+                    else _verifier.verify_mode()),
         )
 
     def describe(self) -> str:
@@ -188,10 +211,11 @@ class Options:
                 if r.conv_vmem_budget >= (1 << 20)
                 else f"{r.conv_vmem_budget >> 10}KB")
         trace = f" trace={r.trace}" if r.trace != "auto" else ""
+        verify = f" verify={r.verify}" if r.verify != "auto" else ""
         return (f"scheme={r.scheme.name} backend={r.backend} "
                 f"interpret={r.interpret} conv={r.conv_strategy}"
                 f"(vmem={vmem}) fuse={r.fuse} "
-                f"fc_batch={r.fc_batch}{trace}{shard}")
+                f"fc_batch={r.fc_batch}{trace}{verify}{shard}")
 
 
 # ---------------------------------------------------------------------------
@@ -347,7 +371,7 @@ class Program:
                 act_sram_kb=options.act_sram_kb, fc_batch=options.fc_batch,
                 conv_strategy=options.conv_strategy,
                 conv_vmem_budget=options.conv_vmem_budget,
-                fuse=options.fuse)
+                fuse=options.fuse, verify=options.verify)
         return Executable(self, options, plan)
 
 

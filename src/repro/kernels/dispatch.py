@@ -196,7 +196,12 @@ def conv_vmem_budget() -> int:
     """Heuristic VMEM budget in bytes (``REPRO_CONV_VMEM_BUDGET`` override)."""
     env = os.environ.get("REPRO_CONV_VMEM_BUDGET", "").strip()
     if env:
-        budget = int(env)
+        try:
+            budget = int(env)
+        except ValueError:
+            raise ValueError(
+                f"REPRO_CONV_VMEM_BUDGET={env!r} is not an integer; "
+                f"expected a byte count like 4194304") from None
         if budget <= 0:
             raise ValueError(f"REPRO_CONV_VMEM_BUDGET={env!r} must be > 0")
         return budget

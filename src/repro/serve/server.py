@@ -577,10 +577,15 @@ class Server:
             live = []
             for req in reqs:
                 if req.deadline is not None and t > req.deadline:
-                    hosted.metrics.record_shed()
-                    req.future.set_exception(DeadlineExceeded(
-                        f"deadline missed by {(t - req.deadline) * 1e3:.1f}ms "
-                        f"waiting for dispatch"))
+                    # both sides of every settle race go through _settle
+                    # (a timed-out stop() or an external cancel may have
+                    # resolved this future already); metrics count only
+                    # the winner
+                    if _settle(req.future, exc=DeadlineExceeded(
+                            f"deadline missed by "
+                            f"{(t - req.deadline) * 1e3:.1f}ms "
+                            f"waiting for dispatch")):
+                        hosted.metrics.record_shed()
                 else:
                     live.append(req)
             if not live:

@@ -1,0 +1,452 @@
+"""repro.analysis — the plan verifier and the concurrency lint.
+
+Contracts under test:
+
+* the 2^24 accumulator proof draws the line exactly: an adversarial
+  program one fan-in notch over the f32 exact-integer window is rejected
+  at compile (``LTR001``), while its just-inside twin compiles, gets a
+  low-headroom warning, and runs **bit-identically** to an unverified
+  compile (verification must observe, never perturb);
+* ``Options(verify=)`` tri-state: "auto" proves on first compile, "on"
+  re-checks cache hits, "off" bypasses; warnings land in
+  ``ModelReport.verification``; bad modes (option or env) are named;
+* the N-version property: ``select_fused_segments`` output always passes
+  the verifier's independent halo/VMEM/legality audit on randomized
+  conv chains (``audit_fused_segments``);
+* the concurrency lint flags the exact bug classes past review rounds
+  caught by hand (unlocked aug-assign, unjoined thread, future settled
+  outside ``_settle``) and the real serve/obs tree is clean under it;
+* regression: the deadline-shed path survives losing a settle race (the
+  pre-lint code called ``set_exception`` directly and would crash the
+  scheduler thread with ``InvalidStateError``).
+"""
+
+import dataclasses
+import textwrap
+import threading
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+import repro
+from repro import analysis, serve
+from repro.core import plan as plan_mod
+from repro.core.accelerator import (ConvSpec, DenseSpec, FlattenSpec)
+from repro.core.program import Options, Program
+from repro.core.quant import W4A4, WASpec
+from repro.kernels import dispatch
+
+SRC = Path(__file__).resolve().parent.parent / "src" / "repro"
+
+# a_qmax is global (plan.consts feeds one divisor): 2^4 - 1
+A_QMAX = 15
+W8_QMAX = WASpec(8, 4).w_qmax                       # 127
+# smallest fan_in with 15 * 127 * fan_in >= 2^24 is 8808; use a margin
+FAN_IN_OVER = 8810                                  # 16_783_050 >= 2^24
+FAN_IN_UNDER = 8806                                 # 16_775_430 <  2^24
+
+
+def _dense_program(fan_in: int, params=None) -> Program:
+    layers = (FlattenSpec(), DenseSpec("fc", fan_in, 4, act="none"))
+    return Program(layers, params or {}, (1, 1, fan_in),
+                   name=f"dense{fan_in}")
+
+
+@pytest.fixture(autouse=True)
+def _fresh_plan_cache():
+    plan_mod.clear_plan_cache()
+    yield
+    plan_mod.clear_plan_cache()
+
+
+# -- the accumulator proof draws the line at 2^24 ----------------------------
+
+def test_bound_arithmetic_brackets_the_window():
+    assert analysis.acc_bound(A_QMAX, W8_QMAX, FAN_IN_OVER) >= 1 << 24
+    assert analysis.acc_bound(A_QMAX, W8_QMAX, FAN_IN_UNDER) < 1 << 24
+    assert analysis.headroom_bits(1 << 23) == pytest.approx(1.0)
+
+
+def test_adversarial_overflow_rejected_at_compile():
+    prog = _dense_program(FAN_IN_OVER)
+    with pytest.raises(analysis.PlanVerificationError) as ei:
+        prog.compile(Options(scheme=WASpec(8, 4)))     # default verify=auto
+    err = ei.value
+    assert [d.code for d in err.diagnostics if d.severity == "error"] \
+        == ["LTR001"]
+    d = next(d for d in err.diagnostics if d.code == "LTR001")
+    assert d.step == "fc"
+    assert f"{A_QMAX} * {W8_QMAX} * {FAN_IN_OVER}" in d.message
+    assert "verify=\"off\"" in str(err)               # bypass is named
+    # the failing plan must NOT have been cached as good
+    plan_mod.clear_plan_cache()
+    with pytest.raises(analysis.PlanVerificationError):
+        prog.compile(Options(scheme=WASpec(8, 4), verify="on"))
+
+
+def test_just_inside_twin_runs_bit_identically():
+    """One fan-in notch inside the window: compiles (with the 0-headroom
+    warning recorded, not raised) and runs bit-identically to a compile
+    with verification off — the verifier observes, never perturbs."""
+    from repro.models.vision import init_vision
+    layers = (FlattenSpec(), DenseSpec("fc", FAN_IN_UNDER, 4, act="none"))
+    params = init_vision(jax.random.PRNGKey(0), layers)
+    prog = Program(layers, params, (1, 1, FAN_IN_UNDER), name="twin")
+    frames = np.random.default_rng(0).random(
+        (2, 1, 1, FAN_IN_UNDER)).astype(np.float32)
+    opts = dict(scheme=WASpec(8, 4), backend="reference")
+    exe_off = prog.compile(Options(verify="off", **opts))
+    out_off = np.asarray(exe_off.run(frames))
+    exe_on = prog.compile(Options(verify="on", **opts))   # cache-hit verify
+    out_on = np.asarray(exe_on.run(frames))
+    np.testing.assert_array_equal(out_off, out_on)
+    warns = [d for d in exe_on.report.verification
+             if d["code"] == "LTR002"]
+    assert warns and warns[0]["step"] == "fc"
+    assert "headroom" in warns[0]["message"]
+    assert not [d for d in exe_on.report.verification
+                if d["severity"] == "error"]
+
+
+def test_headroom_report_on_lenet():
+    exe = Program.from_model("lenet", params={}).compile(Options(scheme=W4A4))
+    diags = analysis.verify_plan(exe.plan)
+    assert not analysis.errors(diags)
+    per_step = {d.step: d for d in diags if d.code == "LTR003"}
+    assert set(per_step) == {"conv1", "conv2", "fc1", "fc2", "fc3"}
+    hrs = [float(d.message.split("headroom ")[1].split(" bits")[0])
+           for d in per_step.values()]
+    assert min(hrs) > 8.0                       # lenet is comfortably exact
+    # info stays out of the report: the eager/compiled identity contract
+    assert exe.report.verification == []
+
+
+# -- shape legality: caught at compile, not inside the jit -------------------
+
+def test_channel_mismatch_rejected_at_compile():
+    layers = (ConvSpec("c1", c_in=3, c_out=8),
+              ConvSpec("c2", c_in=4, c_out=8))       # c2 receives 8, not 4
+    prog = Program(layers, {}, (16, 16, 3), name="badchan")
+    with pytest.raises(analysis.PlanVerificationError) as ei:
+        prog.compile(Options(scheme=W4A4))
+    d = next(d for d in ei.value.diagnostics if d.code == "LTR013")
+    assert d.step == "c2" and "c_in=4" in d.message
+
+
+def test_fan_in_mismatch_rejected_at_compile():
+    layers = (ConvSpec("c1", c_in=1, c_out=4, padding="SAME"),
+              FlattenSpec(),
+              DenseSpec("fc", fan_in=99, fan_out=10))  # gets 8*8*4 = 256
+    prog = Program(layers, {}, (8, 8, 1), name="badfan")
+    with pytest.raises(analysis.PlanVerificationError) as ei:
+        prog.compile(Options(scheme=W4A4))
+    d = next(d for d in ei.value.diagnostics if d.code == "LTR014")
+    assert d.step == "fc" and "fan_in=256" in d.hint
+
+
+# -- Options(verify=) wiring -------------------------------------------------
+
+def test_verify_option_validated_and_resolved(monkeypatch):
+    with pytest.raises(ValueError, match="verify"):
+        Options(verify="sometimes")
+    monkeypatch.delenv("REPRO_VERIFY", raising=False)
+    assert Options().resolve().verify == "auto"
+    assert Options(verify="off").resolve().verify == "off"
+    monkeypatch.setenv("REPRO_VERIFY", "on")
+    assert Options().resolve().verify == "on"
+    monkeypatch.setenv("REPRO_VERIFY", "bogus")
+    with pytest.raises(ValueError, match="REPRO_VERIFY"):
+        Options().resolve()
+    monkeypatch.delenv("REPRO_VERIFY", raising=False)
+    assert "verify=off" in Options(verify="off").resolve().describe()
+    assert "verify" not in Options().resolve().describe()
+
+
+def test_verify_off_skips_and_on_rechecks_cache_hits():
+    prog = _dense_program(FAN_IN_OVER)
+    # "off" lets the over-the-line plan compile (the documented bypass)
+    exe = prog.compile(Options(scheme=WASpec(8, 4), verify="off"))
+    assert exe.report.verification == []           # never inspected
+    # "on" re-checks the now-cached plan and raises from the same plan
+    with pytest.raises(analysis.PlanVerificationError):
+        prog.compile(Options(scheme=WASpec(8, 4), verify="on"))
+    # and raises again on the next hit (stored findings re-raise)
+    with pytest.raises(analysis.PlanVerificationError):
+        prog.compile(Options(scheme=WASpec(8, 4), verify="on"))
+    # but "auto" on the cache hit stays quiet: first-compile-only
+    exe2 = prog.compile(Options(scheme=WASpec(8, 4)))
+    assert exe2.plan is exe.plan
+
+
+def test_warning_surfaces_in_report_without_raising():
+    """A forced-resident conv over a tiny budget is a warning (LTR021):
+    recorded in ModelReport.verification, compile succeeds."""
+    prog = Program.from_model("lenet", params={})
+    exe = prog.compile(Options(scheme=W4A4, conv_strategy="resident",
+                               conv_vmem_budget=1024, verify="on"))
+    codes = {d["code"] for d in exe.report.verification}
+    assert "LTR021" in codes
+    assert all(d["severity"] == "warning" for d in exe.report.verification)
+
+
+# -- satellite: conv_vmem_budget env validation ------------------------------
+
+def test_conv_vmem_budget_rejects_non_integer(monkeypatch):
+    monkeypatch.setenv("REPRO_CONV_VMEM_BUDGET", "lots")
+    with pytest.raises(ValueError, match="REPRO_CONV_VMEM_BUDGET"):
+        dispatch.conv_vmem_budget()
+
+
+@pytest.mark.parametrize("bad", ["0", "-4194304"])
+def test_conv_vmem_budget_rejects_non_positive(monkeypatch, bad):
+    monkeypatch.setenv("REPRO_CONV_VMEM_BUDGET", bad)
+    with pytest.raises(ValueError, match="must be > 0"):
+        dispatch.conv_vmem_budget()
+
+
+# -- the N-version property: fusion output always passes the audit -----------
+
+def _random_chain(rng):
+    """A shape-consistent conv chain with Nones (non-conv steps) mixed in,
+    spanning the selector's whole legality vocabulary (depthwise, grouped,
+    tanh, strides, pools)."""
+    geoms = []
+    h, w = int(rng.integers(8, 33)), int(rng.integers(8, 33))
+    c = int(rng.choice([1, 3, 4, 8]))
+    for i in range(int(rng.integers(1, 7))):
+        if rng.random() < 0.15:
+            geoms.append(None)                     # CA/flatten/dense break
+            continue
+        k = int(rng.choice([1, 3, 5]))
+        if k > min(h, w):
+            k = 1
+        stride = int(rng.choice([1, 1, 1, 2]))
+        depthwise = rng.random() < 0.2
+        grouped = (not depthwise) and rng.random() < 0.1
+        if depthwise:
+            groups, c_out = c, c
+        elif grouped and c % 2 == 0 and c > 1:
+            groups, c_out = 2, int(rng.choice([4, 8]))
+        else:
+            groups, c_out = 1, int(rng.choice([1, 3, 4, 8, 16]))
+        act = str(rng.choice(["relu", "abs", "sign", "none", "tanh"]))
+        pads = (((k // 2,) * 2, (k // 2,) * 2) if rng.random() < 0.5
+                else ((0, 0), (0, 0)))
+        g = dispatch.ChainGeom(f"c{i}", h, w, c, c_out, k, stride, pads,
+                               groups=groups, act=act, pool=None)
+        h_out, w_out = g.out_hw()
+        if (rng.random() < 0.3 and h_out >= 2 and w_out >= 2
+                and h_out % 2 == 0 and w_out % 2 == 0):
+            g = dataclasses.replace(
+                g, pool=(str(rng.choice(["max", "avg"])), 2))
+        h, w = g.out_hw()
+        c = c_out
+        geoms.append(g)
+        if h < 2 or w < 2:
+            break
+    return geoms
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_fused_segments_always_pass_audit(seed):
+    """Property: whatever segments select_fused_segments emits, the
+    verifier's independent halo/VMEM/legality re-derivation agrees —
+    across modes and budgets, on randomized chains."""
+    rng = np.random.default_rng(seed)
+    for _ in range(25):
+        geoms = _random_chain(rng)
+        for mode in ("auto", "on", "off"):
+            for budget in (64 * 1024, 4 << 20, dispatch.conv_vmem_budget()):
+                segs = dispatch.select_fused_segments(geoms, mode=mode,
+                                                      budget=budget)
+                diags = analysis.audit_fused_segments(geoms, segs, budget)
+                errs = analysis.errors(diags)
+                assert not errs, (mode, budget, geoms, segs,
+                                  [str(d) for d in errs])
+
+
+def test_audit_catches_planted_inconsistencies():
+    """The audit is not vacuous: corrupt a legal segment set each way the
+    fused kernel could go wrong and the matching code fires."""
+    g = dispatch.ChainGeom("c0", 16, 16, 3, 8, 3, 1, ((1, 1), (1, 1)))
+    g2 = dispatch.ChainGeom("c1", 16, 16, 8, 8, 3, 1, ((1, 1), (1, 1)))
+    geoms = [g, g2]
+    budget = dispatch.conv_vmem_budget()
+    good = dispatch.select_fused_segments(geoms, mode="on", budget=budget)
+    assert good and not analysis.errors(
+        analysis.audit_fused_segments(geoms, good, budget))
+    seg = good[0]
+
+    def codes(segments, geoms=geoms):
+        return {d.code for d in analysis.audit_fused_segments(
+            geoms, segments, budget) if d.severity == "error"}
+
+    assert "LTR024" in codes(
+        [dataclasses.replace(seg, halo_rows=seg.halo_rows + 1)])
+    assert "LTR024" in codes(
+        [dataclasses.replace(seg, vmem_bytes=seg.vmem_bytes - 4)])
+    assert "LTR023" in codes([dataclasses.replace(seg, start=1)])
+    assert "LTR023" in codes([seg, seg])            # overlapping claims
+    assert "LTR023" in codes(
+        good, [dataclasses.replace(g, act="tanh"), g2])  # no fused tanh
+
+
+# -- the concurrency lint ----------------------------------------------------
+
+def _codes(src):
+    return [d.code for d in analysis.lint_source(textwrap.dedent(src))]
+
+
+def test_lint_unlocked_augassign():
+    assert _codes("""
+        class C:
+            def hit(self):
+                self.count += 1
+    """) == ["LTC101"]
+
+
+def test_lint_locked_and_local_augassign_clean():
+    assert _codes("""
+        class C:
+            def __init__(self):
+                self.count = 0
+                self.count += 1          # unpublished: exempt
+            def ok(self):
+                with self._lock:
+                    self.count += 1
+            def ok_cond(self):
+                with self._cond:
+                    self.inflight[0] -= 1
+            def local(self):
+                n = 0
+                n += 1
+                return n
+    """) == []
+
+
+def test_lint_nested_def_resets_lock_context():
+    # the closure body runs at call time, outside the with block
+    assert _codes("""
+        class C:
+            def work(self):
+                with self._lock:
+                    def cb():
+                        self.count += 1
+                    return cb
+    """) == ["LTC101"]
+
+
+def test_lint_unjoined_thread():
+    src = """
+        import threading
+        class S:
+            def start(self):
+                self._t = threading.Thread(target=self._run)
+                self._t.start()
+    """
+    assert _codes(src) == ["LTC102"]
+    assert _codes(src + """
+            def stop(self):
+                self._t.join(timeout=5.0)
+    """) == []
+    assert _codes("""
+        import threading
+        def fire():
+            threading.Thread(target=work).start()
+    """) == ["LTC102"]
+
+
+def test_lint_settle_outside_helper():
+    assert _codes("""
+        def resolve(fut, out):
+            fut.set_result(out)
+    """) == ["LTC103"]
+    assert _codes("""
+        def _settle(fut, result=None, exc=None):
+            if exc is not None:
+                fut.set_exception(exc)
+            else:
+                fut.set_result(result)
+    """) == []
+
+
+def test_lint_suppression_is_per_code():
+    assert _codes("""
+        class C:
+            def hit(self):
+                self.count += 1          # lint: ok
+    """) == []
+    assert _codes("""
+        class C:
+            def hit(self):
+                self.count += 1          # lint: ok[LTC102]
+    """) == ["LTC101"]                   # wrong code: still flagged
+
+
+def test_lint_serve_and_obs_trees_are_clean():
+    """The gate ci.sh runs: the real serving/observability runtime has no
+    error-severity concurrency findings."""
+    findings = analysis.lint_paths([SRC / "serve", SRC / "obs"])
+    assert analysis.errors(findings) == (), \
+        "\n".join(str(d) for d in findings)
+
+
+# -- regression: deadline shed must survive losing the settle race -----------
+
+REFERENCE = Options(scheme=W4A4, backend="reference")
+
+
+def test_shed_survives_presettled_future():
+    """The scheduler's deadline shed races external settlers (timed-out
+    stop, cancellation). Pre-settle the future from the batch_close hook
+    (which runs on the scheduler thread between collect and shed): the
+    old direct set_exception crashed the scheduler with
+    InvalidStateError; via _settle it must be a counted no-op."""
+    prog = repro.Program.from_model("lenet", key=jax.random.PRNGKey(0))
+    clk = serve.VirtualClock()
+    external = RuntimeError("externally cancelled")
+    fut_box, fired = {}, threading.Event()
+
+    def close_hook(name, reason, n):
+        if not fired.is_set():
+            fired.set()
+            clk.advance(1.0)             # now past the 50ms deadline
+            fut_box["f"].set_exception(external)   # win the settle race
+
+    server = serve.Server(serve.ServeConfig(max_batch=4, max_wait_ms=0.0),
+                          clock=clk,
+                          hooks=serve.Hooks(batch_close=close_hook))
+    server.register("lenet", prog, REFERENCE)
+    frames = np.random.default_rng(0).random(
+        (1, 28, 28, 1)).astype(np.float32)
+    fut_box["f"] = server.submit("lenet", frames, deadline_ms=50.0)
+    server.start()
+    try:
+        with pytest.raises(RuntimeError, match="externally cancelled"):
+            fut_box["f"].result(timeout=120)
+        # the scheduler thread survived: later work still gets served
+        ok = server.submit("lenet", frames, deadline_ms=600_000.0)
+        assert ok.result(timeout=120).shape == (1, 10)
+        reqs = server.stats()["programs"]["lenet"]["requests"]
+        assert reqs["shed_deadline"] == 0   # the race loser must not count
+        assert reqs["served"] == 1
+    finally:
+        server.stop()
+
+
+# -- diagnostics plumbing ----------------------------------------------------
+
+def test_diagnostic_formatting_and_severity_order():
+    d = analysis.Diagnostic("LTR001", "error", "fc", "boom", hint="fix it")
+    assert str(d) == "LTR001 [error] fc: boom (hint: fix it)"
+    assert d.asdict()["code"] == "LTR001"
+    with pytest.raises(ValueError):
+        analysis.Diagnostic("LTR001", "fatal", "fc", "boom")
+    diags = [analysis.Diagnostic("LTR003", "info", "a", "m"),
+             analysis.Diagnostic("LTR002", "warning", "b", "m")]
+    assert analysis.worst_severity(diags) == "warning"
+    assert analysis.errors(diags) == ()
+    text = analysis.format_diagnostics(diags, min_severity="warning")
+    assert "LTR002" in text and "LTR003" not in text
