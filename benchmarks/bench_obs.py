@@ -20,6 +20,15 @@ costing nothing. This benchmark pins that claim into
 * **noop_span_ns / noop_event_ns** — the microcosts: one disabled
   ``obs.span()`` / ``obs.event()`` call.
 
+Schema v2 adds the **flight** section, gating the always-on flight
+recorder the same way (``check_bench.py`` fails above 5%): the 3-stage
+chain served through a real ``serve.Server`` under closed-loop
+saturation with the recorder uninstalled (``fps_flight_off``) vs
+installed (``fps_flight_on``) — the recorder sits on every serving
+span, so this is its end-to-end cost, not a microbenchmark — plus the
+microcosts ``record_ns`` (one ring write) and ``dump_ms`` (serializing
+a full default-capacity dump).
+
 All timings are best-of-``REPEATS`` medians (CPU CI is noisy; the min
 over repeats is the classic de-noiser). Run:
 ``PYTHONPATH=src python -m benchmarks.bench_obs``.
@@ -34,15 +43,19 @@ from pathlib import Path
 import numpy as np
 
 import repro
-from repro import obs
+from repro import obs, serve
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 OUT_PATH = Path(__file__).resolve().parent / "BENCH_obs.json"
 BATCH = 8
 HW = 32
 REPEATS = 5
+PAIR_REPEATS = 10
 ITERS = 30
 NOOP_ITERS = 200_000
+RECORD_ITERS = 50_000
+SERVE_REPEATS = 5
+SERVE_REQUESTS = 24 * BATCH
 
 
 def _chain() -> repro.Program:
@@ -52,16 +65,30 @@ def _chain() -> repro.Program:
     return a.then(b).then(c)
 
 
-def _best_us_per_frame(fn, frames) -> float:
-    """min over REPEATS of (ITERS-loop mean) — us per frame."""
-    best = float("inf")
-    for _ in range(REPEATS):
-        t0 = time.perf_counter()
-        for _ in range(ITERS):
-            np.asarray(fn(frames))
-        dt = time.perf_counter() - t0
-        best = min(best, dt / (ITERS * frames.shape[0]) * 1e6)
-    return best
+def _one_us_per_frame(fn, frames) -> float:
+    """One ITERS-loop mean — us per frame."""
+    t0 = time.perf_counter()
+    for _ in range(ITERS):
+        np.asarray(fn(frames))
+    dt = time.perf_counter() - t0
+    return dt / (ITERS * frames.shape[0]) * 1e6
+
+
+def _paired_us(fns, frames) -> list:
+    """PAIR_REPEATS rows of per-fn timings, the fns back-to-back inside
+    each repeat: gated ratios are then taken *within* a row (adjacent
+    in time), and the min-over-rows ratio is the row least contaminated
+    by the box's multi-second load drift — which dwarfs the sub-5%
+    overheads being measured on a 1-core CI VM. (Finer interleaving
+    makes it *worse*: alternating call paths every few iterations
+    thrashes the dispatch caches both paths share.)"""
+    return [[_one_us_per_frame(fn, frames) for fn in fns]
+            for _ in range(PAIR_REPEATS)]
+
+
+def _min_ratio_pct(rows) -> float:
+    """min over rows of (b/a - 1) as a percent (rows of [a, b])."""
+    return min(b / a for a, b in rows) * 100.0 - 100.0
 
 
 def _noop_ns(fn) -> float:
@@ -74,8 +101,24 @@ def _noop_ns(fn) -> float:
     return best
 
 
+def _one_serving_fps(prog, options, frames) -> float:
+    """One closed-loop saturation run of the chain through a Server."""
+    server = serve.Server(serve.ServeConfig(max_batch=BATCH,
+                                            max_wait_ms=1.0))
+    server.register(prog.name, prog, options)
+    server.start(warm=True)
+    rep = serve.saturate(server, prog.name, frames,
+                         n_requests=SERVE_REQUESTS)
+    server.stop()
+    return rep.achieved_fps
+
+
 def run() -> dict:
     assert obs.get_trace() is None, "bench_obs must start untraced"
+    # the flight recorder is installed by default at import: take it out
+    # so the v1 sections keep measuring pure-tracing costs (the 2% gate
+    # on the disabled path predates the recorder), restore it after
+    prev_flight = obs.uninstall()
     prog = _chain()
     exe = prog.compile(repro.Options(backend="reference"))
     rng = np.random.default_rng(0)
@@ -87,21 +130,62 @@ def run() -> dict:
     raw = lambda f: executor(params, f, consts)
     np.asarray(raw(frames))                      # warm the trace
     np.asarray(exe.run_per_frame(frames))
-    frame_us_raw = _best_us_per_frame(raw, frames)
 
-    # production path, tracing disabled (the gated number)
-    frame_us_disabled = _best_us_per_frame(exe.run_per_frame, frames)
+    # the floor vs the production path (the gated ratio), paired
+    pairs = _paired_us([raw, exe.run_per_frame], frames)
+    frame_us_raw = min(p[0] for p in pairs)
+    frame_us_disabled = min(p[1] for p in pairs)
+    overhead_disabled_pct = _min_ratio_pct(pairs)
 
     # same with a live collector
     trace = obs.enable()
     np.asarray(exe.run_per_frame(frames))
-    frame_us_traced = _best_us_per_frame(exe.run_per_frame, frames)
+    frame_us_traced = min(_one_us_per_frame(exe.run_per_frame, frames)
+                          for _ in range(REPEATS))
     obs.disable()
     traced_spans = len(trace.records())
 
     with obs.use_mode("off"):
         noop_span_ns = _noop_ns(lambda: obs.span("bench.noop"))
         noop_event_ns = _noop_ns(lambda: obs.event("bench.noop"))
+
+    # --- flight recorder (schema v2): end-to-end serving overhead ---
+    # off/on interleaved per repeat, same drift-cancelling schedule
+    options = repro.Options(backend="reference")
+    recorder = prev_flight if prev_flight is not None \
+        else obs.FlightRecorder()
+    serve_pairs = []
+    try:
+        _one_serving_fps(prog, options, frames)      # warm the server path
+        for _ in range(SERVE_REPEATS):
+            obs.uninstall()
+            off = _one_serving_fps(prog, options, frames)
+            obs.install(recorder)
+            on = _one_serving_fps(prog, options, frames)
+            serve_pairs.append((off, on))
+        fps_flight_off = max(p[0] for p in serve_pairs)
+        fps_flight_on = max(p[1] for p in serve_pairs)
+        # overhead from the least drift-contaminated adjacent pair
+        flight_overhead_pct = min(off / on for off, on in serve_pairs) \
+            * 100.0 - 100.0
+        # one ring write: an instant record with tracing off but the
+        # recorder installed (the serving hot path's flight cost)
+        best = float("inf")
+        for _ in range(REPEATS):
+            t0 = time.perf_counter_ns()
+            for _ in range(RECORD_ITERS):
+                obs.event("bench.flight")
+            best = min(best, (time.perf_counter_ns() - t0) / RECORD_ITERS)
+        record_ns = best
+        t0 = time.perf_counter()
+        dump = recorder.dump(reason="bench")
+        dump_ms = (time.perf_counter() - t0) * 1e3
+        dump_records = dump["otherData"]["records"]
+    finally:
+        if prev_flight is None:
+            obs.uninstall()
+        else:
+            obs.install(prev_flight)
 
     data = {
         "schema_version": SCHEMA_VERSION,
@@ -110,8 +194,7 @@ def run() -> dict:
             "frame_us_raw": frame_us_raw,
             "frame_us_disabled": frame_us_disabled,
             "frame_us_traced": frame_us_traced,
-            "overhead_disabled_pct":
-                (frame_us_disabled / frame_us_raw - 1.0) * 100.0,
+            "overhead_disabled_pct": overhead_disabled_pct,
             "overhead_traced_pct":
                 (frame_us_traced / frame_us_raw - 1.0) * 100.0,
             "traced_records": traced_spans,
@@ -120,13 +203,25 @@ def run() -> dict:
             "span_ns": noop_span_ns,
             "event_ns": noop_event_ns,
         },
+        "flight": {
+            "n_requests": SERVE_REQUESTS,
+            "fps_flight_off": fps_flight_off,
+            "fps_flight_on": fps_flight_on,
+            "overhead_pct": flight_overhead_pct,
+            "record_ns": record_ns,
+            "dump_ms": dump_ms,
+            "dump_records": dump_records,
+        },
     }
     OUT_PATH.write_text(json.dumps(data, indent=2) + "\n")
-    c = data["chain"]
+    c, fl = data["chain"], data["flight"]
     print(f"bench_obs,{c['frame_us_disabled']:.1f},"
           f"overhead_disabled={c['overhead_disabled_pct']:+.2f}% "
           f"traced={c['overhead_traced_pct']:+.2f}% "
           f"noop_span={noop_span_ns:.0f}ns")
+    print(f"bench_obs.flight,{fl['fps_flight_on']:.0f}fps,"
+          f"overhead={fl['overhead_pct']:+.2f}% "
+          f"record={fl['record_ns']:.0f}ns dump={fl['dump_ms']:.1f}ms")
     return data
 
 

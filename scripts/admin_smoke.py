@@ -1,0 +1,117 @@
+"""CI smoke for the serving ops endpoint (run by scripts/ci.sh).
+
+Boots a (optionally pooled) ``repro.serve.Server`` with the admin
+endpoint on an ephemeral port, pushes a little traffic, then exercises
+every route the way a fleet scheduler would — over HTTP, not by calling
+Python internals:
+
+  * ``/healthz`` and ``/readyz`` answer 200 with the check breakdown;
+  * ``/metrics`` parses as Prometheus text exposition (``# HELP`` +
+    ``# TYPE`` per metric, every sample line name-legal) and contains
+    the served-requests counter with the right value;
+  * ``/statusz`` round-trips JSON, reports the served program's stats,
+    and keeps the traffic-less program's latency summary at
+    ``{"count": 0}`` — the empty-window shape must survive the whole
+    stack, not become NaN percentiles;
+  * ``/tracez`` returns a flight-recorder dump, which is saved to
+    ``--out`` for ``scripts/check_trace.py --flight`` to validate.
+
+Usage: ``python scripts/admin_smoke.py [--devices N] [--out PATH]``.
+Exit 0 on success; raises (non-zero exit) on any violation.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+import urllib.request
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+_SAMPLE_RE = re.compile(r"[a-zA-Z_:][a-zA-Z0-9_:]*")
+
+
+def _get(url: str) -> bytes:
+    with urllib.request.urlopen(url, timeout=30) as r:
+        assert r.status == 200, f"{url}: HTTP {r.status}"
+        return r.read()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--devices", type=int, default=1)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--out", default="/tmp/repro_admin_tracez.json",
+                    help="where to save the /tracez flight dump")
+    args = ap.parse_args(argv)
+
+    import numpy as np
+    import repro
+    from repro import obs, serve
+
+    options = repro.Options(backend="reference")
+    server = serve.Server(serve.ServeConfig(
+        max_batch=4, max_wait_ms=2.0, devices=args.devices, admin_port=0))
+    server.register("edge", repro.Program.from_pipeline("edge_detect",
+                                                        32, 32, 3),
+                    options, slo=obs.SLO(p99_ms=60_000.0))
+    server.register("idle", repro.Program.from_pipeline("sharpen", 32, 32, 3),
+                    options)
+    server.start(warm=True)
+    url = server.admin.url
+    print(f"admin_smoke: endpoint at {url} (devices={args.devices})")
+    try:
+        frames = np.random.default_rng(0).random((32, 32, 3), np.float32)
+        futs = [server.submit("edge", frames) for _ in range(args.requests)]
+        for f in futs:
+            f.result(timeout=120)
+
+        health = json.loads(_get(url + "/healthz"))
+        assert health["healthy"], f"unhealthy under no faults: {health}"
+        ready = json.loads(_get(url + "/readyz"))
+        assert ready["ready"] and ready["checks"]["warmed"], ready
+
+        metrics = _get(url + "/metrics").decode()
+        helped, typed = set(), set()
+        for line in metrics.splitlines():
+            if not line:
+                continue
+            if line.startswith("# HELP "):
+                helped.add(line.split()[2])
+            elif line.startswith("# TYPE "):
+                typed.add(line.split()[2])
+            elif not line.startswith("#"):
+                name = line.split("{")[0].split()[0]
+                assert _SAMPLE_RE.fullmatch(name), f"illegal name: {line!r}"
+                float(line.rsplit(" ", 1)[1])     # value parses
+        assert typed and typed == helped, \
+            f"HELP/TYPE mismatch: {typed ^ helped}"
+        served = [ln for ln in metrics.splitlines()
+                  if ln.startswith("serve_edge_served ")]
+        assert served and float(served[0].split()[1]) == args.requests, \
+            f"served counter wrong: {served}"
+
+        status = json.loads(_get(url + "/statusz"))
+        edge = status["programs"]["edge"]
+        assert edge["requests"]["served"] == args.requests, edge["requests"]
+        assert edge["slo"]["objectives"]["p99_ms"]["limit"] == 60_000.0
+        assert status["programs"]["idle"]["latency_ms"] == {"count": 0}, \
+            "empty-window latency summary corrupted through /statusz"
+        if args.devices > 1:
+            assert status["pool"]["devices"] == args.devices
+
+        dump = _get(url + "/tracez")
+        Path(args.out).write_bytes(dump)
+        n = len(json.loads(dump)["traceEvents"])
+        print(f"admin_smoke: OK ({args.requests} served, {n} flight "
+              f"records -> {args.out})")
+    finally:
+        server.stop()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

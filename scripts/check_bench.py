@@ -12,7 +12,9 @@ numbers they exist to pin:
      micro-batching sustains ``SERVE_MIN_SPEEDUP``x request-at-a-time;
      the 4-virtual-device pool scales >= ``POOL_MIN_SCALING``x over one
      device on the emulated-device axis (serving schema >= 2);
-     disabled-path obs overhead stays under ``OBS_MAX_OVERHEAD_PCT``.
+     disabled-path obs overhead stays under ``OBS_MAX_OVERHEAD_PCT``;
+     the always-on flight recorder costs < ``FLIGHT_MAX_OVERHEAD_PCT``
+     of serving throughput (obs schema >= 2).
      Every numeric leaf in every file must additionally be *finite* — a
      NaN or inf scalar is always an artifact bug (empty-reservoir
      percentile, zero-window rate), never a measurement.
@@ -52,6 +54,7 @@ SERVE_MIN_SPEEDUP = 2.0   # micro-batching vs request-at-a-time at saturation
 POOL_MIN_SCALING = 1.5    # 4-device pool vs 1 device, emulated device time
 ORACLE_ERR_MAX = 1e-5     # dequant float epsilon, not a kernel bug
 OBS_MAX_OVERHEAD_PCT = 2.0  # disabled-path obs cost on the 3-stage chain
+FLIGHT_MAX_OVERHEAD_PCT = 5.0  # always-on flight recorder, serving fps axis
 VERIFY_MAX_OVERHEAD_PCT = 5.0  # plan verification riding the compile pass
 
 
@@ -162,6 +165,19 @@ def check_invariants(name: str, data: dict, errors: list) -> None:
                 f"{OBS_MAX_OVERHEAD_PCT}% — disabled tracing must be free")
         if chain.get("frame_us_raw", 0.0) <= 0:
             bad("chain.frame_us_raw must be > 0")
+        if data.get("schema_version", 1) >= 2:
+            fl = data.get("flight")
+            if not fl:
+                bad("flight section missing (schema_version >= 2)")
+            else:
+                if fl.get("fps_flight_on", 0.0) <= 0:
+                    bad("flight.fps_flight_on must be > 0")
+                if "overhead_pct" not in fl:
+                    bad("flight.overhead_pct missing")
+                elif fl["overhead_pct"] >= FLIGHT_MAX_OVERHEAD_PCT:
+                    bad(f"flight.overhead_pct {fl['overhead_pct']:.2f}% >= "
+                        f"{FLIGHT_MAX_OVERHEAD_PCT}% — the flight recorder "
+                        f"is always on, it must stay near-free")
 
     elif name == "BENCH_analysis.json":
         v = data.get("verify", {})

@@ -17,8 +17,26 @@ asserts the artifact is actually useful, not just parseable:
      spans (each pool worker records its executions on a ``device<i>``
      lane) — the CI pool smoke's "the fan-out happened" check.
 
+``--flight`` switches to validating a **flight-recorder dump**
+(``FlightRecorder.dump()`` / the server's automatic incident dumps /
+``GET /tracez``) instead of a request-timeline trace:
+
+  1. same Trace Event Format schema checks, and at least one record;
+  2. ring integrity: every record carries ``args.seq``/``args.ring``,
+     and per ring the retained sequence numbers are *contiguous* —
+     overwrite-oldest may drop history from the front, but can never
+     leave a gap inside what is retained;
+  3. monotonic time: within one ring, records grouped by display lane
+     end in non-decreasing timestamp order (file order = ring order);
+  4. a *triggered* dump (one containing a ``flight.trigger`` instant —
+     the server records it immediately before dumping) must retain at
+     least one span that ended at-or-before the earliest trigger: the
+     black box actually captured history from *before* the incident
+     (``--require-trigger`` makes a missing trigger an error).
+
 Usage: ``python scripts/check_trace.py out.json [--min-device-spans N]
-[--min-devices N]``. Exit 0 on success; prints every violation otherwise.
+[--min-devices N] [--flight [--require-trigger]]``. Exit 0 on success;
+prints every violation otherwise.
 """
 
 from __future__ import annotations
@@ -99,21 +117,123 @@ def check(path: str, min_device_spans: int = 1, min_devices: int = 0) -> list:
     return errors
 
 
+def flight_check(path: str, require_trigger: bool = False) -> list:
+    """Validate a flight-recorder dump (see module docstring, --flight)."""
+    errors = []
+    try:
+        data = json.loads(open(path).read())
+    except (OSError, ValueError) as e:
+        return [f"{path}: unreadable flight JSON: {e}"]
+    events = data.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return [f"{path}: no traceEvents list"]
+
+    records = []
+    for i, ev in enumerate(events):
+        for k in ("name", "ph", "pid", "tid"):
+            if k not in ev:
+                errors.append(f"event[{i}]: missing {k!r}")
+        if ev.get("ph") == "M":
+            continue
+        if ev.get("ph") not in ("X", "i"):
+            errors.append(f"event[{i}] ({ev.get('name')}): unexpected "
+                          f"ph {ev.get('ph')!r} in a flight dump")
+            continue
+        if "ts" not in ev:
+            errors.append(f"event[{i}] ({ev.get('name')}): missing ts")
+            continue
+        if ev["ph"] == "X" and "dur" not in ev:
+            errors.append(f"event[{i}] ({ev.get('name')}): X without dur")
+            continue
+        args = ev.get("args", {})
+        if "seq" not in args or "ring" not in args:
+            errors.append(f"event[{i}] ({ev.get('name')}): flight record "
+                          f"missing args.seq/args.ring")
+            continue
+        records.append(ev)
+        if len(errors) > 10:
+            errors.append("... (further schema violations suppressed)")
+            break
+    if not records:
+        errors.append("no flight records (X/i events with args.seq)")
+        return errors
+
+    # ring integrity: per ring, retained seqs are contiguous — the ring
+    # overwrites from the *front* of history, never punches holes in it
+    rings = {}
+    for ev in records:
+        rings.setdefault(ev["args"]["ring"], []).append(ev)
+    for ring, evs in sorted(rings.items()):
+        seqs = sorted(e["args"]["seq"] for e in evs)
+        if len(set(seqs)) != len(seqs):
+            errors.append(f"ring {ring}: duplicate seq numbers")
+        elif seqs != list(range(seqs[0], seqs[0] + len(seqs))):
+            missing = sorted(set(range(seqs[0], seqs[-1] + 1)) - set(seqs))
+            errors.append(
+                f"ring {ring}: gap inside retained history — seqs "
+                f"{seqs[0]}..{seqs[-1]} missing {missing[:8]}"
+                f"{'...' if len(missing) > 8 else ''}")
+        # monotonic time per (ring, lane), in retained (file) order: a
+        # ring records strictly forward in time, so within one display
+        # lane each record must END no earlier than its predecessor
+        # (1us slack for rounding)
+        by_lane = {}
+        for e in evs:
+            by_lane.setdefault(e["tid"], []).append(e)
+        for lane, les in by_lane.items():
+            last_end = None
+            for e in les:
+                end = e["ts"] + e.get("dur", 0.0)
+                if last_end is not None and end + 1.0 < last_end:
+                    errors.append(
+                        f"ring {ring} lane {lane}: non-monotonic "
+                        f"timestamps ({e['name']} ends {end:.1f}us after "
+                        f"a record ending {last_end:.1f}us)")
+                    break
+                last_end = end
+
+    # triggered dump: the black box must hold history from BEFORE the
+    # trigger, or it dumped too late to explain the incident
+    triggers = [e for e in records if e["name"] == "flight.trigger"]
+    if require_trigger and not triggers:
+        errors.append("no flight.trigger event (--require-trigger)")
+    if triggers:
+        t_trigger = min(e["ts"] for e in triggers)
+        pre = [e for e in records if e["ph"] == "X"
+               and e["ts"] + e.get("dur", 0.0) <= t_trigger + 1.0]
+        if not pre:
+            errors.append(
+                f"triggered dump ({data.get('otherData', {}).get('reason')}) "
+                f"retains no span ending at-or-before the trigger at "
+                f"{t_trigger:.1f}us — no pre-incident history")
+    return errors
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("trace", help="Chrome-trace JSON to validate")
     ap.add_argument("--min-device-spans", type=int, default=1)
     ap.add_argument("--min-devices", type=int, default=0,
                     help="require >= N distinct pool device lanes")
+    ap.add_argument("--flight", action="store_true",
+                    help="validate a flight-recorder dump instead of a "
+                         "request-timeline trace")
+    ap.add_argument("--require-trigger", action="store_true",
+                    help="with --flight: a missing flight.trigger event "
+                         "is an error (for automatic incident dumps)")
     args = ap.parse_args(argv)
-    errors = check(args.trace, args.min_device_spans, args.min_devices)
+    if args.flight:
+        errors = flight_check(args.trace, args.require_trigger)
+    else:
+        errors = check(args.trace, args.min_device_spans, args.min_devices)
     if errors:
         for e in errors:
             print(f"check_trace: FAIL — {e}", file=sys.stderr)
         return 1
     data = json.loads(open(args.trace).read())
     n = len(data["traceEvents"])
-    print(f"check_trace: OK ({args.trace}: {n} events)")
+    kind = "flight dump" if args.flight else "trace"
+    print(f"check_trace: OK ({args.trace}: {n} events, {kind})")
     return 0
 
 

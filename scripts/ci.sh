@@ -38,7 +38,8 @@ python scripts/check_docs.py
 # invariants (|acc| < 2^24, shape legality, VMEM/fusion audit) for every
 # registered model and imaging pipeline; (2) the concurrency lint must
 # find no unlocked shared mutation / unjoined thread / raw future settle
-# in the serving + observability runtime
+# in the serving + observability runtime — directory-scoped, so the
+# flight recorder, SLO engine and admin endpoint are gated automatically
 python scripts/verify_plan.py --all
 python -m repro.analysis.lint src/repro/serve src/repro/obs
 
@@ -83,6 +84,16 @@ XLA_FLAGS="--xla_force_host_platform_device_count=4" \
     --requests 32 --batch 4 --devices 4 --backend reference \
     --trace /tmp/repro_pool_trace.json
 python scripts/check_trace.py /tmp/repro_pool_trace.json --min-devices 2
+
+# ops-endpoint smoke: a pooled server with the admin surface on an
+# ephemeral port — /healthz /readyz answer, /metrics parses as
+# Prometheus exposition with the right counters, /statusz keeps the
+# empty-window {"count": 0} shape, and the saved /tracez flight dump
+# passes the ring-integrity validator
+XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+    python scripts/admin_smoke.py --devices 2 \
+    --out /tmp/repro_admin_tracez.json
+python scripts/check_trace.py /tmp/repro_admin_tracez.json --flight
 
 # multi-device batch sharding (pre-pool path): runs its own subprocess
 # with its own XLA_FLAGS, so no outer env here

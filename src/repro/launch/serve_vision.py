@@ -118,6 +118,13 @@ def main(argv=None):
                     help="record an obs trace of the whole run and export "
                          "Chrome-trace JSON (open in chrome://tracing or "
                          "Perfetto); also prints the verbose stats table")
+    ap.add_argument("--admin-port", type=int, default=None,
+                    help="serve the ops endpoint (/metrics /healthz /readyz "
+                         "/statusz /tracez) on this port for the run's "
+                         "lifetime; 0 binds an ephemeral port and prints it")
+    ap.add_argument("--log", default=None, metavar="OUT.jsonl",
+                    help="structured JSON-lines event log (serve lifecycle, "
+                         "SLO breaches, worker failures, flight dumps)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.batch < 1 or args.batches < 1 or args.requests < 1:
@@ -155,11 +162,15 @@ def main(argv=None):
         max_batch=args.batch, max_wait_ms=args.max_wait_ms,
         max_queue=max(8 * args.batch, 64),
         default_deadline_ms=args.deadline_ms,
-        devices=args.devices, placement=args.placement))
+        devices=args.devices, placement=args.placement,
+        admin_port=args.admin_port, log_path=args.log))
     t0 = time.perf_counter()
     hosted = server.register(prog.name, prog, options)
     t_compile = time.perf_counter() - t0
     server.start(warm=True)
+    if server.admin is not None:
+        print(f"[serve_vision] admin endpoint at {server.admin.url} "
+              f"(/metrics /healthz /readyz /statusz /tracez)")
 
     r = hosted.executable.report
     print(f"[serve_vision] {name} max_batch={args.batch} "

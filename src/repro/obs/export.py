@@ -17,28 +17,56 @@ from __future__ import annotations
 
 import json
 import re
+import threading
 from typing import Iterable, Optional
 
 from repro.obs.metrics import Counter, Gauge, Histogram, Registry, REGISTRY
 
 _NAME_RE = re.compile(r"[^a-zA-Z0-9_:]")
 
+# One process-wide sink lock: concurrent write_jsonl callers (the serving
+# threads' structured log, periodic stats exporters) interleave whole
+# *records*, never partial lines. Appends under a single lock are cheap
+# relative to json.dumps; a per-path lock table would only matter with
+# many distinct high-rate sinks, which the runtime does not have.
+_jsonl_lock = threading.Lock()
+
 
 def _prom_name(name: str) -> str:
-    """Dotted registry name -> Prometheus metric name (dots become _)."""
-    return _NAME_RE.sub("_", name)
+    """Dotted registry name -> a fully legal Prometheus metric name.
+
+    Every character outside ``[a-zA-Z0-9_:]`` becomes ``_`` (dots,
+    dashes, slashes, spaces — e.g. ``slo.breach.edge-detect`` ->
+    ``slo_breach_edge_detect``), and a name starting with a digit gets a
+    leading ``_`` because the exposition grammar forbids a digit first.
+    """
+    pname = _NAME_RE.sub("_", name)
+    if pname and pname[0].isdigit():
+        pname = "_" + pname
+    return pname
 
 
 def write_jsonl(path, records: Iterable[dict], append: bool = True) -> str:
-    """Write ``records`` to ``path`` as JSON lines; returns the path."""
-    with open(path, "a" if append else "w") as f:
-        for rec in records:
-            f.write(json.dumps(rec) + "\n")
+    """Write ``records`` to ``path`` as JSON lines; returns the path.
+
+    Safe for concurrent writers: each call serializes its records first,
+    then appends them under a process-wide lock, so readers never see a
+    torn line even when several serving threads log at once.
+    """
+    lines = [json.dumps(rec) + "\n" for rec in records]
+    with _jsonl_lock:
+        with open(path, "a" if append else "w") as f:
+            f.writelines(lines)
     return str(path)
 
 
 def prometheus_text(registry: Optional[Registry] = None) -> str:
-    """The registry in Prometheus text exposition format."""
+    """The registry in Prometheus text exposition format.
+
+    Each metric gets ``# HELP`` (carrying the original dotted registry
+    name, since escaping is lossy) and ``# TYPE`` headers; histograms
+    expose cumulative ``_bucket{le=}`` series plus ``_sum``/``_count``.
+    """
     registry = registry if registry is not None else REGISTRY
     lines = []
     with registry._lock:
@@ -47,12 +75,15 @@ def prometheus_text(registry: Optional[Registry] = None) -> str:
         m = metrics[name]
         pname = _prom_name(name)
         if isinstance(m, Counter):
+            lines.append(f"# HELP {pname} repro metric '{name}'")
             lines.append(f"# TYPE {pname} counter")
             lines.append(f"{pname} {m.get()}")
         elif isinstance(m, Gauge):
+            lines.append(f"# HELP {pname} repro metric '{name}'")
             lines.append(f"# TYPE {pname} gauge")
             lines.append(f"{pname} {m.get()}")
         elif isinstance(m, Histogram):
+            lines.append(f"# HELP {pname} repro metric '{name}'")
             lines.append(f"# TYPE {pname} histogram")
             with m._lock:
                 acc = 0

@@ -189,6 +189,12 @@ _active: Optional[Trace] = None
 _active_lock = threading.Lock()
 _tls = threading.local()           # .stack (open spans), .mode, .trace_id
 
+# The process flight recorder (obs.flight.FlightRecorder), if installed.
+# Managed by obs.flight.install/uninstall; read here on the hot path so
+# span()/event()/span_at() feed the always-on black box even when the
+# Options(trace=) tri-state has recording off.
+_flight = None
+
 
 def enable(trace: Optional[Trace] = None) -> Trace:
     """Install ``trace`` (or a fresh one) as the process collector."""
@@ -219,6 +225,21 @@ def trace_mode() -> str:
     if env not in TRACE_MODES:
         raise ValueError(f"REPRO_TRACE={env!r}; expected one of {TRACE_MODES}")
     return env
+
+
+# enabled() resolves the env mode once and caches it: with the always-on
+# flight recorder installed, every serving span/event reaches the "no
+# collector, no thread pin" branch, and an os.environ lookup per record
+# is measurable against the 5% flight budget. The env is process config,
+# not a runtime switch (use use_mode()/enable() for that).
+_env_mode: Optional[str] = None
+
+
+def _ambient_mode() -> str:
+    global _env_mode
+    if _env_mode is None:
+        _env_mode = trace_mode()
+    return _env_mode
 
 
 class _UseMode:
@@ -262,7 +283,7 @@ def enabled() -> bool:
     if mode is None:
         if _active is not None:
             return True                      # the common fast path
-        mode = trace_mode()
+        mode = _ambient_mode()
     if mode == "off":
         return False
     if mode == "on":
@@ -270,6 +291,17 @@ def enabled() -> bool:
             enable()
         return True
     return _active is not None
+
+
+def recording() -> bool:
+    """Is *any* sink live — the trace collector or the flight recorder?
+
+    Guard call sites that build attrs dicts / timestamps with this (not
+    :func:`enabled`) so the always-on flight recorder still captures
+    serving history while ``Options(trace=)`` is off. :func:`enabled`
+    keeps governing the export-on-demand :class:`Trace` collector only.
+    """
+    return _flight is not None or enabled()
 
 
 def current_trace_id() -> Optional[str]:
@@ -293,16 +325,22 @@ _NULL_SPAN = _NullSpan()
 
 
 class _Span:
-    """A live span: records itself into the collector on exit."""
+    """A live span: records into the collector and/or flight on exit.
 
-    __slots__ = ("name", "attrs", "trace_id", "_t0", "_prev_trace_id",
-                 "_parent")
+    ``to_trace`` is resolved at ``span()`` time (the :func:`enabled`
+    tri-state); the flight recorder is consulted again on exit so a
+    recorder installed mid-span still sees the record.
+    """
+
+    __slots__ = ("name", "attrs", "trace_id", "to_trace", "_t0",
+                 "_prev_trace_id", "_parent")
 
     def __init__(self, name: str, attrs: Optional[Dict],
-                 trace_id: Optional[str]):
+                 trace_id: Optional[str], to_trace: bool = True):
         self.name = name
         self.attrs = attrs
         self.trace_id = trace_id
+        self.to_trace = to_trace
 
     def __enter__(self):
         stack = getattr(_tls, "stack", None)
@@ -316,7 +354,7 @@ class _Span:
             _tls.trace_id = self.trace_id
         # reserve the span id up front so children opened inside can
         # point at it; the record itself lands on exit
-        trace = _active
+        trace = _active if self.to_trace else None
         sid = None
         if trace is not None:
             with trace._lock:
@@ -331,7 +369,7 @@ class _Span:
         stack = _tls.stack
         _, sid = stack.pop()
         _tls.trace_id = self._prev_trace_id
-        trace = _active
+        trace = _active if self.to_trace else None
         if trace is not None and sid is not None:
             with trace._lock:
                 trace._records.append({
@@ -339,27 +377,41 @@ class _Span:
                     "t1_ns": t1, "tid": threading.get_ident(), "id": sid,
                     "parent": self._parent, "trace_id": self.trace_id,
                     "attrs": dict(self.attrs) if self.attrs else {}})
+        flight = _flight
+        if flight is not None:
+            flight.record_span(self.name, self._t0, t1,
+                               trace_id=self.trace_id, attrs=self.attrs)
         return False
 
 
 def span(name: str, attrs: Optional[Dict] = None,
          trace_id: Optional[str] = None):
-    """Open a span context manager; a shared no-op when disabled."""
-    if not enabled():
+    """Open a span context manager; a shared no-op when nothing records.
+
+    The span feeds the :class:`Trace` collector when :func:`enabled`
+    says so, and *always* feeds the flight recorder when one is
+    installed — black-box capture ignores the trace tri-state.
+    """
+    to_trace = enabled()
+    if not to_trace and _flight is None:
         return _NULL_SPAN
-    return _Span(name, attrs, trace_id)
+    return _Span(name, attrs, trace_id, to_trace=to_trace)
 
 
 def event(name: str, attrs: Optional[Dict] = None,
           trace_id: Optional[str] = None) -> None:
-    """Record an instant event; no-op when disabled."""
-    if not enabled():
+    """Record an instant event; no-op when nothing records."""
+    to_trace = enabled()
+    flight = _flight
+    if not to_trace and flight is None:
         return
-    trace = _active
+    if trace_id is None:
+        trace_id = getattr(_tls, "trace_id", None)
+    trace = _active if to_trace else None
     if trace is not None:
-        if trace_id is None:
-            trace_id = getattr(_tls, "trace_id", None)
         trace.add_event(name, attrs=attrs, trace_id=trace_id)
+    if flight is not None:
+        flight.record_event(name, trace_id=trace_id, attrs=attrs)
 
 
 def span_at(name: str, t0_s: float, t1_s: float,
@@ -373,9 +425,15 @@ def span_at(name: str, t0_s: float, t1_s: float,
     seconds) on whatever thread held the request at the time, and the
     span is stitched in afterwards on a synthetic per-request lane.
     """
-    if not enabled():
+    to_trace = enabled()
+    flight = _flight
+    if not to_trace and flight is None:
         return
-    trace = _active
+    t0_ns, t1_ns = int(t0_s * 1e9), int(t1_s * 1e9)
+    trace = _active if to_trace else None
     if trace is not None:
-        trace.add_span(name, int(t0_s * 1e9), int(t1_s * 1e9), attrs=attrs,
+        trace.add_span(name, t0_ns, t1_ns, attrs=attrs,
                        trace_id=trace_id, tid=lane_tid, lane=lane)
+    if flight is not None:
+        flight.record_span(name, t0_ns, t1_ns, trace_id=trace_id,
+                           attrs=attrs, lane_tid=lane_tid, lane=lane)

@@ -24,6 +24,7 @@ waste, per-device occupancy, modeled device kFPS/W). See docs/serving.md.
     server.stop()
 """
 
+from repro.serve.admin import AdminServer
 from repro.serve.batcher import (padded_slots, pick_bucket,
                                  power_of_two_buckets, should_close_early,
                                  split_results)
@@ -37,10 +38,10 @@ from repro.serve.server import (AdmissionError, DeadlineExceeded, Hooks,
                                 ServerClosed)
 
 __all__ = [
-    "AdmissionError", "Clock", "DeadlineExceeded", "Hooks", "HostedProgram",
-    "LeastLoaded", "LoadReport", "PLACEMENTS", "Pool", "ProgramMetrics",
-    "RoundRobin", "ServeConfig", "Server", "ServerClosed", "VirtualClock",
-    "WorkerError", "format_stats", "latency_summary", "padded_slots",
-    "pick_bucket", "poisson_load", "power_of_two_buckets", "saturate",
-    "should_close_early", "split_results",
+    "AdminServer", "AdmissionError", "Clock", "DeadlineExceeded", "Hooks",
+    "HostedProgram", "LeastLoaded", "LoadReport", "PLACEMENTS", "Pool",
+    "ProgramMetrics", "RoundRobin", "ServeConfig", "Server", "ServerClosed",
+    "VirtualClock", "WorkerError", "format_stats", "latency_summary",
+    "padded_slots", "pick_bucket", "poisson_load", "power_of_two_buckets",
+    "saturate", "should_close_early", "split_results",
 ]

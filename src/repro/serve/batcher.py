@@ -54,7 +54,7 @@ def pick_bucket(n: int, buckets: Sequence[int]) -> int:
         if b >= n:
             best = b
             break
-    if obs.enabled():
+    if obs.recording():
         obs.event("batcher.pick_bucket",
                   attrs={"frames": n, "bucket": best,
                          "pad": padded_slots(n, best) - n})
@@ -95,7 +95,7 @@ def split_results(out: np.ndarray, counts: Sequence[int]) -> list:
     if out.shape[0] != total:
         raise ValueError(
             f"result batch {out.shape[0]} != sum of request sizes {total}")
-    if obs.enabled():
+    if obs.recording():
         obs.event("batcher.split",
                   attrs={"requests": len(counts), "frames": total})
     parts, off = [], 0

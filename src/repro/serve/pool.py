@@ -174,6 +174,12 @@ class _Worker:
         self.steals = registry.counter(f"{p}.steals")
         self.failures = registry.counter(f"{p}.failures")
         self.busy_s = registry.gauge(f"{p}.busy_s")
+        # last completion time on this device (worker-thread private):
+        # under dispatch-ahead pipelining a batch is dispatched before
+        # its predecessor's results are ready, so its device-busy span
+        # starts at max(t_dispatch, predecessor ready) — the device
+        # executes serially even when the host runs ahead
+        self.last_ready: Optional[float] = None
         self.thread: Optional[threading.Thread] = None
 
     @property
@@ -252,6 +258,22 @@ class Pool:
         return any(w.thread is not None and w.thread.is_alive()
                    for w in self._workers)
 
+    def workers_alive(self) -> int:
+        """How many worker threads are currently running."""
+        return sum(1 for w in self._workers
+                   if w.thread is not None and w.thread.is_alive())
+
+    def healthy(self) -> bool:
+        """True only when *every* worker thread is running.
+
+        :meth:`alive` answers "is the pool still doing anything" (the
+        stop/drain question); this answers the ``/healthz`` question —
+        a pool that lost one of four workers is degraded even though
+        it still serves.
+        """
+        return all(w.thread is not None and w.thread.is_alive()
+                   for w in self._workers)
+
     def take_outstanding(self):
         """Reclaim work a timed-out :meth:`stop` left behind.
 
@@ -286,7 +308,7 @@ class Pool:
             w.queued_frames += batch.n
             self._cond.notify_all()
         self._placement_us.observe((self._clock.now() - t0) * 1e6)
-        if obs.enabled():
+        if obs.recording():
             obs.event("serve.pool.place",
                       attrs={"device": idx, "program": batch.hosted.name,
                              "frames": batch.n, "bucket": batch.bucket})
@@ -312,7 +334,7 @@ class Pool:
                     victim.queued_frames -= batch.n
                     w.steals.inc()
                     self._steals.inc()
-                    if obs.enabled():
+                    if obs.recording():
                         obs.event("serve.pool.steal",
                                   attrs={"thief": w.index,
                                          "victim": victim.index,
@@ -379,14 +401,25 @@ class Pool:
         with self._lock:
             w.inflight_frames -= batch.n
             w.inflight.remove(batch)
+        # clamp the busy interval to this device's previous completion:
+        # a pipelined batch was dispatched while its predecessor still
+        # ran, but the device itself is serial — without the clamp the
+        # device lane's spans would overlap and busy_s would double-
+        # count the overlap (occupancy > 1)
+        t_busy0 = batch.t_dispatch
+        if w.last_ready is not None and w.last_ready > t_busy0:
+            t_busy0 = w.last_ready
+        w.last_ready = t_ready
         w.batches.inc()
         w.frames.inc(batch.n)
-        w.busy_s.add(t_ready - batch.t_dispatch)
-        if obs.enabled():
-            obs.span_at("serve.device.execute", batch.t_dispatch, t_ready,
+        w.busy_s.add(t_ready - t_busy0)
+        if obs.recording():
+            obs.span_at("serve.device.execute", t_busy0, t_ready,
                         attrs={"device": w.index,
                                "program": batch.hosted.name,
-                               "bucket": batch.bucket, "frames": batch.n},
+                               "bucket": batch.bucket, "frames": batch.n,
+                               "queued_ms":
+                                   (t_busy0 - batch.t_dispatch) * 1e3},
                         lane_tid=_DEVICE_LANE_BASE + w.index,
                         lane=f"device{w.index}")
         self._done.put(Done(batch, w.index, out_np, None, t_ready))
@@ -401,7 +434,7 @@ class Pool:
             f"batch of {batch.hosted.name!r}: {exc}",
             program=batch.hosted.name, device=w.index)
         err.__cause__ = exc
-        if obs.enabled():
+        if obs.recording():
             obs.event("serve.pool.failure",
                       attrs={"device": w.index,
                              "program": batch.hosted.name,

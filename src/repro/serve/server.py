@@ -64,6 +64,7 @@ import numpy as np
 
 from repro import obs
 from repro.core.program import Executable, Options, Program
+from repro.obs.slo import SLO, SLOMonitor
 from repro.serve import batcher, pool as pool_mod
 from repro.serve.clock import Clock
 from repro.serve.metrics import ProgramMetrics, now
@@ -148,6 +149,24 @@ class ServeConfig:
                        ``"round_robin"``; see ``serve.pool.PLACEMENTS``).
                        A policy *object* can be injected via
                        ``Server(placement=...)``.
+    ``admin_port``     serve the ops endpoint (``/metrics`` ``/healthz``
+                       ``/readyz`` ``/statusz`` ``/tracez`` — see
+                       ``serve.admin``) on this port for the server's
+                       lifetime. ``0`` binds an ephemeral port (read it
+                       from ``Server.admin.port``); ``None`` (default)
+                       disables the endpoint.
+    ``admin_host``     bind address for the ops endpoint (loopback by
+                       default — fleet schedulers probe via a sidecar).
+    ``log_path``       structured JSON-lines event log destination
+                       (``None``: in-memory tail only; see ``obs.log``).
+    ``flight_dump_dir``  directory for automatically triggered flight-
+                       recorder dumps (SLO breach / worker failure /
+                       stop-timeout stranding). ``None`` keeps dumps
+                       in-memory only (``Server.flight_dumps()``).
+    ``flight_dump_interval_s``  rate limit between automatic dumps — a
+                       sustained breach must not turn the black box into
+                       a disk firehose; suppressed triggers are counted.
+    ``flight_dump_keep``  how many dumps the in-memory ring retains.
     """
 
     max_batch: int = 8
@@ -159,6 +178,12 @@ class ServeConfig:
     speculative_close: bool = True
     devices: Optional[int] = None
     placement: str = "least_loaded"
+    admin_port: Optional[int] = None
+    admin_host: str = "127.0.0.1"
+    log_path: Optional[str] = None
+    flight_dump_dir: Optional[str] = None
+    flight_dump_interval_s: float = 30.0
+    flight_dump_keep: int = 4
 
     def __post_init__(self):
         if self.max_batch < 1:
@@ -177,6 +202,16 @@ class ServeConfig:
             raise ValueError(
                 f"unknown placement {self.placement!r}; known: "
                 f"{sorted(pool_mod.PLACEMENTS)}")
+        if self.admin_port is not None and not (0 <= self.admin_port <= 65535):
+            raise ValueError(
+                f"admin_port must be in [0, 65535], got {self.admin_port}")
+        if self.flight_dump_interval_s < 0:
+            raise ValueError(
+                f"flight_dump_interval_s must be >= 0, got "
+                f"{self.flight_dump_interval_s}")
+        if self.flight_dump_keep < 1:
+            raise ValueError(
+                f"flight_dump_keep must be >= 1, got {self.flight_dump_keep}")
 
 
 @dataclasses.dataclass
@@ -208,6 +243,7 @@ class HostedProgram:
     queue: deque = dataclasses.field(default_factory=deque)
     metrics: ProgramMetrics = dataclasses.field(default_factory=ProgramMetrics)
     bound: Tuple[Executable, ...] = ()
+    slo: Optional[SLOMonitor] = None  # rolling-window objectives (obs.slo)
 
     @property
     def queued_frames(self) -> int:
@@ -281,19 +317,36 @@ class Server:
         self._stopping = False
         self._drain = True
         self._started = False
+        self._warmed = False
         self._scheduler: Optional[threading.Thread] = None
         self._completer: Optional[threading.Thread] = None
         self._pool: Optional[pool_mod.Pool] = None
         self._done: queue_mod.Queue = queue_mod.Queue()
         self._req_seq = itertools.count()
+        self.log = obs.StructuredLog(path=self.config.log_path)
+        self.admin = None                      # serve.admin.AdminServer
+        # automatic flight-dump state (SLO breach / worker failure /
+        # stop-timeout): rate-limited, in-memory ring + optional files
+        self._dump_lock = threading.Lock()
+        self._flight_dumps: deque = deque(maxlen=self.config.flight_dump_keep)
+        self._last_dump_t: Optional[float] = None
+        self._dump_seq = 0
+        self._dumps_suppressed = 0
+        self._last_dump_reason: Optional[str] = None
 
     # -- lifecycle ---------------------------------------------------------
 
     def register(self, name: str, program: Program,
                  options: Optional[Options] = None,
-                 buckets: Optional[Sequence[int]] = None) -> HostedProgram:
+                 buckets: Optional[Sequence[int]] = None,
+                 slo: Optional[SLO] = None) -> HostedProgram:
         """Host ``program`` under ``name``: compiles it now (plan-cache
-        priming happens at registration, jit warm-up at :meth:`start`)."""
+        priming happens at registration, jit warm-up at :meth:`start`).
+
+        ``slo`` declares rolling-window objectives for this program
+        (:class:`obs.SLO`); a breach increments ``slo.breach.<name>``,
+        logs a structured event and triggers a rate-limited flight dump.
+        """
         if self._started:
             raise RuntimeError("register() before start()")
         if name in self._programs:
@@ -305,7 +358,8 @@ class Server:
         if min(bks) < 1:
             raise ValueError(f"buckets must be >= 1, got {bks}")
         hosted = HostedProgram(name, program, exe, bks,
-                               metrics=ProgramMetrics(name=name))
+                               metrics=ProgramMetrics(name=name),
+                               slo=SLOMonitor(name, slo) if slo else None)
         self._programs[name] = hosted
         return hosted
 
@@ -348,6 +402,7 @@ class Server:
             for hosted in self._programs.values():
                 for exe in hosted.bound:
                     exe.warm(hosted.buckets)
+        self._warmed = warm
         self._pool = pool_mod.Pool(
             self._ndev, self._placement, self._done, clock=self._clock,
             execute_hook=self._hooks.execute,
@@ -362,6 +417,13 @@ class Server:
         self._pool.start()
         self._completer.start()
         self._scheduler.start()
+        if self.config.admin_port is not None:
+            from repro.serve.admin import AdminServer
+            self.admin = AdminServer(self, port=self.config.admin_port,
+                                     host=self.config.admin_host).start()
+        self.log.info("serve.start", devices=self._ndev,
+                      programs=sorted(self._programs),
+                      admin_port=self.admin.port if self.admin else None)
         return self
 
     def stop(self, drain: bool = True, timeout: Optional[float] = None) -> None:
@@ -405,6 +467,11 @@ class Server:
                                    exc=ServerClosed("server stopped")):
                             hosted.metrics.record_failed()
                 self._cond.notify_all()    # release backpressured submitters
+        # the ops endpoint outlives the serving threads so a probe during
+        # shutdown sees "unhealthy", then goes down last
+        if self.admin is not None:
+            self.admin.stop(timeout)
+        self.log.info("serve.stop", drain=drain)
 
     def _fail_stranded(self) -> None:
         """Fail every batch a timed-out pool shutdown left behind.
@@ -424,6 +491,10 @@ class Server:
                     f"{batch.hosted.name!r} outstanding)")))
             if failed:
                 batch.hosted.metrics.record_failed(failed)
+        if queued or inflight:
+            self.log.error("serve.stop.stranded",
+                           queued=len(queued), inflight=len(inflight))
+            self._flight_dump("stop_timeout")
         if queued:
             # queued batches produce no Done, so the completer will never
             # run its active-batch decrement for them
@@ -482,7 +553,7 @@ class Server:
                        t_submit + deadline_ms / 1e3
                        if deadline_ms is not None else None,
                        trace_id=f"{name}/req-{seq}", seq=seq)
-        if obs.enabled():
+        if obs.recording():
             obs.event("serve.submit", attrs={"program": name, "frames": n},
                       trace_id=req.trace_id)
         with self._cond:
@@ -586,6 +657,7 @@ class Server:
                             f"{(t - req.deadline) * 1e3:.1f}ms "
                             f"waiting for dispatch")):
                         hosted.metrics.record_shed()
+                        self._observe_slo(hosted, "shed", t)
                 else:
                     live.append(req)
             if not live:
@@ -613,6 +685,16 @@ class Server:
                                  if _settle(req.future, exc=item.error))
                     if failed:
                         hosted.metrics.record_failed(failed)
+                    t_fail = self._clock.now()
+                    for _ in range(failed):
+                        self._observe_slo(hosted, "failed", t_fail)
+                    self.log.error(
+                        "serve.worker.failure", program=hosted.name,
+                        device=item.device, requests=failed,
+                        error=str(item.error))
+                    # a worker failure is exactly the incident the black
+                    # box exists for: capture the moments before it
+                    self._flight_dump(f"worker_error:{hosted.name}")
                     continue
                 hosted.metrics.record_batch(
                     batcher.padded_slots(batch.n, batch.bucket),
@@ -627,7 +709,9 @@ class Server:
                     t_done = self._clock.now()
                     hosted.metrics.record_served(t_done - req.t_submit, req.n,
                                                  t_done)
-                    if obs.enabled():
+                    self._observe_slo(hosted, "served", t_done,
+                                      latency_ms=(t_done - req.t_submit) * 1e3)
+                    if obs.recording():
                         self._emit_request_timeline(
                             hosted, req, batch.bucket, item.device,
                             batch.t_closed, batch.t_dispatch, item.t_ready,
@@ -661,6 +745,134 @@ class Server:
                 ("serve.request.split", t_ready, t_done)):
             obs.span_at(name, t0, t1, attrs=attrs, trace_id=req.trace_id,
                         lane_tid=lane, lane=req.trace_id)
+
+    # -- SLOs + incident capture -------------------------------------------
+
+    def _observe_slo(self, hosted: HostedProgram, kind: str, t: float,
+                     latency_ms: Optional[float] = None) -> None:
+        """Feed one request outcome to the program's SLO monitor (if
+        any); every breach report the evaluation returns is handled."""
+        if hosted.slo is None:
+            return
+        for breach in hosted.slo.observe(kind, t, latency_ms=latency_ms):
+            self._handle_breach(hosted, breach)
+
+    def _handle_breach(self, hosted: HostedProgram, breach: Dict) -> None:
+        """One SLO breach: counter + structured log + flight dump."""
+        obs.counter(f"slo.breach.{hosted.name}").inc()
+        obs.event("serve.slo.breach",
+                  attrs={"program": hosted.name, **breach})
+        self.log.warning("serve.slo.breach", program=hosted.name, **breach)
+        self._flight_dump(
+            f"slo:{hosted.name}:{breach['objective']}", detail=breach)
+
+    def _flight_dump(self, reason: str,
+                     detail: Optional[Dict] = None) -> Optional[Dict]:
+        """Dump the flight recorder, rate-limited by
+        ``config.flight_dump_interval_s``. Returns the dump dict, or
+        None when no recorder is installed / the limiter suppressed it.
+
+        The ``flight.trigger`` instant event is recorded *before* the
+        dump so the dump itself proves where in the retained history the
+        incident sits (``check_trace.py --flight`` requires spans from
+        before the trigger).
+        """
+        fl = obs.get_flight()
+        if fl is None:
+            return None
+        t = self._clock.now()
+        with self._dump_lock:
+            if (self._last_dump_t is not None
+                    and t - self._last_dump_t
+                    < self.config.flight_dump_interval_s):
+                self._dumps_suppressed = self._dumps_suppressed + 1
+                return None
+            self._last_dump_t = t
+            self._last_dump_reason = reason
+            self._dump_seq = self._dump_seq + 1
+            seq = self._dump_seq
+        obs.event("flight.trigger", attrs={"reason": reason,
+                                           **(detail or {})})
+        dump = fl.dump(reason=reason)
+        path = None
+        if self.config.flight_dump_dir is not None:
+            import json as json_mod
+            import os
+            slug = "".join(c if c.isalnum() else "-" for c in reason)[:48]
+            path = os.path.join(self.config.flight_dump_dir,
+                                f"flight-{seq:03d}-{slug}.json")
+            os.makedirs(self.config.flight_dump_dir, exist_ok=True)
+            with open(path, "w") as f:
+                json_mod.dump(dump, f)
+        with self._dump_lock:
+            self._flight_dumps.append(
+                {"seq": seq, "reason": reason, "t": t, "path": path,
+                 "records": dump["otherData"]["records"], "dump": dump})
+        self.log.info("serve.flight.dump", reason=reason, path=path,
+                      records=dump["otherData"]["records"])
+        return dump
+
+    def flight_dumps(self) -> list:
+        """The retained automatic dumps, oldest first (metadata + dump)."""
+        with self._dump_lock:
+            return list(self._flight_dumps)
+
+    # -- health + ops surface ----------------------------------------------
+
+    def health(self) -> Dict[str, object]:
+        """The ``/healthz`` answer: is every serving thread running?
+
+        Healthy means started, not stopping, and the pool has *all* its
+        workers — a pool that lost one of four devices still serves, but
+        a fleet scheduler must know it is degraded.
+        """
+        pool = self._pool
+        with self._cond:
+            stopping = self._stopping
+        checks = {
+            "started": self._started,
+            "not_stopping": not stopping,
+            "scheduler_alive": (self._scheduler is not None
+                                and self._scheduler.is_alive()),
+            "completer_alive": (self._completer is not None
+                                and self._completer.is_alive()),
+            "pool_workers": (pool.workers_alive() if pool is not None else 0),
+            "pool_size": pool.size if pool is not None else 0,
+        }
+        healthy = bool(
+            checks["started"] and checks["not_stopping"]
+            and checks["scheduler_alive"] and checks["completer_alive"]
+            and pool is not None and pool.healthy())
+        return {"healthy": healthy, "checks": checks}
+
+    def readiness(self) -> Dict[str, object]:
+        """The ``/readyz`` answer: healthy *and* able to take traffic —
+        buckets warmed (no jit latency on the next request) and the
+        admission queue not already full."""
+        h = self.health()
+        with self._cond:
+            depth = self._queued_total
+        checks = {
+            "warmed": self._warmed,
+            "queue_depth": depth,
+            "max_queue": self.config.max_queue,
+            "queue_has_room": depth < self.config.max_queue,
+        }
+        ready = bool(h["healthy"] and checks["warmed"]
+                     and checks["queue_has_room"])
+        return {"ready": ready, "checks": {**h["checks"], **checks}}
+
+    def prometheus_metrics(self) -> str:
+        """Every registry this server touches, in one exposition blob:
+        the process-wide ``obs.REGISTRY`` (plan cache, conv dispatch,
+        SLO breach counters), each hosted program's private registry and
+        the pool's per-device registry."""
+        parts = [obs.prometheus_text()]
+        for hosted in self._programs.values():
+            parts.append(obs.prometheus_text(hosted.metrics.registry))
+        if self._pool is not None:
+            parts.append(obs.prometheus_text(self._pool.registry))
+        return "".join(parts)
 
     # -- observability -----------------------------------------------------
 
@@ -703,6 +915,8 @@ class Server:
             snap["kfps_per_w_drift"] = (measured_kfps_per_w / r.kfps_per_w
                                         if r.kfps_per_w else 0.0)
             snap["buckets"] = list(hosted.buckets)
+            if hosted.slo is not None:
+                snap["slo"] = hosted.slo.state(self._clock.now())
             if verbose:
                 snap["histograms"] = hosted.metrics.histograms()
             programs[name] = snap
@@ -730,6 +944,17 @@ class Server:
         }
         if self._pool is not None:
             out["pool"] = self._pool.stats()
+        with self._dump_lock:
+            out["flight"] = {
+                "dumps": self._dump_seq,
+                "suppressed": self._dumps_suppressed,
+                "last_reason": self._last_dump_reason,
+                "retained": [{k: v for k, v in d.items() if k != "dump"}
+                             for d in self._flight_dumps],
+            }
+        fl = obs.get_flight()
+        if fl is not None:
+            out["flight"]["recorder"] = fl.stats()
         if verbose:
             out["obs"] = obs.REGISTRY.snapshot()
         return out

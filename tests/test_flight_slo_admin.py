@@ -1,0 +1,531 @@
+"""The production observability plane: flight recorder, SLOs, ops endpoint.
+
+What is pinned here (the PR-10 acceptance criteria):
+
+* the flight recorder records **with tracing off**, never allocates a
+  slot on the hot path semantics it claims (overwrite-oldest, per-ring
+  contiguous seqs), and its dumps pass ``check_trace.py --flight``;
+* an induced SLO breach (deadline-shed spike under ``VirtualClock``)
+  and an injected ``WorkerError`` each auto-produce a flight dump that
+  contains spans from *before* the trigger;
+* ``/healthz`` flips unhealthy when the pool loses a worker; the whole
+  ops surface (``/metrics`` ``/readyz`` ``/statusz`` ``/tracez``)
+  round-trips; an empty latency window stays ``{"count": 0}`` all the
+  way through ``/statusz``;
+* automatic dumps are rate-limited and the suppression is counted.
+"""
+
+import importlib.util
+import json
+import threading
+import urllib.error
+import urllib.request
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import repro
+from repro import obs, serve
+
+ROOT = Path(__file__).resolve().parent.parent
+REFERENCE = repro.Options(backend="reference")
+
+
+def _load_script(name):
+    spec = importlib.util.spec_from_file_location(
+        name, ROOT / "scripts" / f"{name}.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.fixture()
+def flight():
+    """A fresh flight recorder for the test; the previous one restored."""
+    prev = obs.get_flight()
+    recorder = obs.install(obs.FlightRecorder(capacity=512, name="test"))
+    try:
+        yield recorder
+    finally:
+        if prev is not None:
+            obs.install(prev)
+        else:
+            obs.uninstall()
+
+
+@pytest.fixture(scope="module")
+def edge_program():
+    return repro.Program.from_pipeline("edge_detect", 16, 16, 3)
+
+
+@pytest.fixture()
+def frame():
+    return np.random.default_rng(0).random((16, 16, 3), np.float32)
+
+
+def _get(url, expect=200):
+    try:
+        r = urllib.request.urlopen(url, timeout=30)
+        code, body = r.status, r.read()
+    except urllib.error.HTTPError as e:
+        code, body = e.code, e.read()
+    assert code == expect, f"{url}: {code} != {expect}: {body[:200]}"
+    return body
+
+
+# ---------------------------------------------------------------------------
+# Flight recorder core
+# ---------------------------------------------------------------------------
+
+class TestFlightRecorder:
+    def test_records_with_tracing_off(self, flight):
+        assert obs.get_trace() is None           # no collector installed
+        with obs.use_mode("off"):                # and the mode pinned off
+            with obs.span("t.black_box", attrs={"k": 1}):
+                obs.event("t.instant")
+        assert obs.get_trace() is None           # nothing leaked a Trace
+        d = flight.dump(reason="unit")
+        names = {e["name"] for e in d["traceEvents"] if e["ph"] != "M"}
+        assert {"t.black_box", "t.instant"} <= names
+        span = next(e for e in d["traceEvents"]
+                    if e["name"] == "t.black_box")
+        assert span["ph"] == "X" and span["args"]["k"] == 1
+        assert d["otherData"]["reason"] == "unit"
+
+    def test_trace_and_flight_both_record_when_enabled(self, flight):
+        trace = obs.enable()
+        try:
+            with obs.span("t.both"):
+                pass
+        finally:
+            obs.disable()
+        assert len(trace.spans("t.both")) == 1
+        assert any(e["name"] == "t.both" for e in
+                   flight.dump()["traceEvents"])
+
+    def test_overwrite_oldest_keeps_contiguous_tail(self, flight):
+        small = obs.install(obs.FlightRecorder(capacity=8))
+        try:
+            for i in range(20):
+                obs.event("t.tick", attrs={"i": i})
+            d = small.dump()
+        finally:
+            obs.install(flight)
+        recs = [e for e in d["traceEvents"] if e["ph"] == "i"]
+        assert len(recs) == 8                    # capacity, not 20
+        assert [e["args"]["i"] for e in recs] == list(range(12, 20))
+        assert [e["args"]["seq"] for e in recs] == list(range(12, 20))
+        assert d["otherData"]["dropped_total"] == 12
+
+    def test_per_thread_rings_and_lane_meta(self, flight):
+        def worker():
+            obs.event("t.from_thread")
+
+        t = threading.Thread(target=worker, name="test-lane")
+        t.start()
+        t.join()
+        obs.event("t.from_main")
+        d = flight.dump()
+        lanes = {e["args"]["name"] for e in d["traceEvents"]
+                 if e["ph"] == "M"}
+        assert any("test-lane" in ln for ln in lanes)
+        rings = {e["args"]["ring"] for e in d["traceEvents"]
+                 if e["ph"] != "M"}
+        assert len(rings) == 2
+        assert d["otherData"]["rings"] == 2
+
+    def test_span_at_lands_on_synthetic_lane(self, flight):
+        obs.span_at("t.retro", 1.0, 2.0, trace_id="req-7",
+                    lane_tid=12345, lane="req-7-lane")
+        d = flight.dump()
+        retro = next(e for e in d["traceEvents"] if e["name"] == "t.retro")
+        assert retro["tid"] == 12345
+        assert retro["args"]["trace_id"] == "req-7"
+        assert any(e["ph"] == "M" and e["args"]["name"] == "req-7-lane"
+                   for e in d["traceEvents"])
+
+    def test_dump_passes_flight_validator(self, flight, tmp_path):
+        with obs.span("t.outer"):
+            with obs.span("t.inner"):
+                obs.event("t.mark")
+        path = tmp_path / "flight.json"
+        path.write_text(json.dumps(flight.dump(reason="unit")))
+        check_trace = _load_script("check_trace")
+        assert check_trace.flight_check(str(path)) == []
+        # and via the CLI entry point
+        assert check_trace.main([str(path), "--flight"]) == 0
+
+    def test_validator_rejects_gapped_history(self, flight, tmp_path):
+        obs.event("t.a")
+        obs.event("t.b")
+        obs.event("t.c")
+        d = flight.dump()
+        recs = [e for e in d["traceEvents"] if e["ph"] != "M"]
+        del d["traceEvents"][d["traceEvents"].index(recs[1])]  # punch a hole
+        path = tmp_path / "gapped.json"
+        path.write_text(json.dumps(d))
+        check_trace = _load_script("check_trace")
+        errors = check_trace.flight_check(str(path))
+        assert any("gap inside retained history" in e for e in errors)
+
+    def test_capacity_validation_and_env_gate(self, monkeypatch):
+        with pytest.raises(ValueError, match="capacity"):
+            obs.FlightRecorder(capacity=0)
+        from repro.obs import flight as flight_mod
+        prev = obs.get_flight()
+        try:
+            monkeypatch.setenv("REPRO_FLIGHT", "off")
+            assert flight_mod.install_default() is None
+            monkeypatch.setenv("REPRO_FLIGHT", "")
+            monkeypatch.setenv("REPRO_FLIGHT_SLOTS", "64")
+            rec = flight_mod.install_default()
+            assert rec is not None and rec.capacity == 64
+        finally:
+            if prev is not None:
+                obs.install(prev)
+            else:
+                obs.uninstall()
+
+
+# ---------------------------------------------------------------------------
+# SLO engine (pure, clock-injected)
+# ---------------------------------------------------------------------------
+
+class TestSLO:
+    def test_validation(self):
+        with pytest.raises(ValueError, match="at least one objective"):
+            obs.SLO()
+        with pytest.raises(ValueError, match="p99_ms"):
+            obs.SLO(p99_ms=-1.0)
+        with pytest.raises(ValueError, match="max_shed_rate"):
+            obs.SLO(max_shed_rate=1.5)
+        with pytest.raises(ValueError, match="window_s"):
+            obs.SLO(p99_ms=10.0, window_s=0.0)
+        assert obs.SLO(p99_ms=50.0).eval_spacing_s == 60.0 / 8
+
+    def test_p99_breach_reports_value_and_limit(self):
+        mon = obs.SLOMonitor("p", obs.SLO(p99_ms=10.0, window_s=60.0,
+                                          eval_every_s=0.0))
+        for i in range(99):
+            assert mon.observe("served", float(i) * 1e-3, latency_ms=1.0) == []
+        breaches = mon.observe("served", 0.1, latency_ms=1000.0)
+        assert len(breaches) == 1
+        b = breaches[0]
+        assert b["objective"] == "p99_ms" and b["limit"] == 10.0
+        assert b["value"] > 10.0 and b["n"] == 100
+
+    def test_shed_and_error_rates(self):
+        mon = obs.SLOMonitor("p", obs.SLO(max_shed_rate=0.5,
+                                          max_error_rate=0.5,
+                                          eval_every_s=0.0))
+        assert mon.observe("served", 0.0, latency_ms=1.0) == []
+        assert mon.observe("shed", 0.01) == []          # rate 0.5, not > 0.5
+        breaches = mon.observe("shed", 0.02)            # shed 2/3
+        assert [b["objective"] for b in breaches] == ["shed_rate"]
+        assert mon.observe("failed", 0.03) == []        # shed 2/4, errors 1/4
+        assert mon.observe("failed", 0.04) == []        # shed 2/5, errors 2/5
+        assert mon.observe("failed", 0.05) == []        # shed 2/6, errors 3/6
+        breaches = mon.observe("failed", 0.06)          # errors 4/7 > 0.5
+        assert [b["objective"] for b in breaches] == ["error_rate"]
+
+    def test_window_prunes_old_outcomes(self):
+        mon = obs.SLOMonitor("p", obs.SLO(max_shed_rate=0.1, window_s=1.0,
+                                          eval_every_s=0.0))
+        assert len(mon.observe("shed", 0.0)) == 1       # 1/1 shed
+        state = mon.state(t=10.0)                       # window slid past it
+        assert state["n"] == 0
+        assert state["objectives"]["shed_rate"]["value"] is None
+        assert mon.observe("served", 10.0, latency_ms=1.0) == []
+
+    def test_min_count_gates_evaluation(self):
+        mon = obs.SLOMonitor("p", obs.SLO(max_shed_rate=0.0, min_count=3,
+                                          eval_every_s=0.0))
+        assert mon.observe("shed", 0.0) == []
+        assert mon.observe("shed", 0.1) == []
+        assert len(mon.observe("shed", 0.2)) == 1
+
+    def test_eval_throttle(self):
+        mon = obs.SLOMonitor("p", obs.SLO(max_shed_rate=0.0, window_s=100.0,
+                                          eval_every_s=5.0))
+        assert len(mon.observe("shed", 0.0)) == 1       # first always evals
+        assert mon.observe("shed", 1.0) == []           # throttled
+        assert len(mon.observe("shed", 6.0)) == 1       # spacing elapsed
+        assert mon.state()["breaches"]["shed_rate"] == 2
+
+    def test_unknown_kind_rejected(self):
+        mon = obs.SLOMonitor("p", obs.SLO(p99_ms=1.0))
+        with pytest.raises(ValueError, match="unknown outcome"):
+            mon.observe("lost", 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Incident capture through the Server (the acceptance criteria)
+# ---------------------------------------------------------------------------
+
+class TestServerIncidents:
+    def test_slo_breach_on_shed_spike_dumps_flight(self, flight, edge_program,
+                                                   frame, tmp_path):
+        """VirtualClock shed spike -> breach -> counter + auto dump whose
+        timeline passes ``check_trace.py --flight`` with pre-trigger
+        spans present."""
+        breach_counter = obs.counter("slo.breach.edge")
+        n0 = breach_counter.get()
+        clk = serve.VirtualClock()
+        server = serve.Server(serve.ServeConfig(
+            max_batch=4, max_wait_ms=100.0, speculative_close=False,
+            flight_dump_dir=str(tmp_path)), clock=clk)
+        server.register("edge", edge_program, REFERENCE,
+                        slo=obs.SLO(max_shed_rate=0.3, window_s=1000.0,
+                                    eval_every_s=0.0))
+        server.start()
+        try:
+            # one healthy request first: its timeline spans are the
+            # pre-breach history the dump must retain
+            ok = server.submit("edge", frame)
+            assert ok.result(timeout=120).shape == (1, 16, 16, 1)
+            # the shed spike: the scheduler's 100ms hold-open wait jumps
+            # virtual time past the 50ms deadline deterministically
+            doomed = server.submit("edge", frame, deadline_ms=50.0)
+            with pytest.raises(serve.DeadlineExceeded):
+                doomed.result(timeout=120)
+        finally:
+            server.stop()
+        assert breach_counter.get() == n0 + 1
+        stats = server.stats()
+        assert stats["flight"]["dumps"] >= 1
+        assert stats["flight"]["last_reason"].startswith("slo:edge:shed_rate")
+        slo_state = stats["programs"]["edge"]["slo"]
+        assert slo_state["breaches"]["shed_rate"] == 1
+        # the dump file passes the flight validator, trigger required
+        dumps = server.flight_dumps()
+        assert dumps and dumps[0]["path"] is not None
+        check_trace = _load_script("check_trace")
+        assert check_trace.flight_check(dumps[0]["path"],
+                                        require_trigger=True) == []
+        # ...and really contains the pre-breach request timeline
+        events = json.loads(Path(dumps[0]["path"]).read_text())["traceEvents"]
+        assert any(e["name"] == "serve.request.device" for e in events)
+        # the breach was logged, correlated fields intact
+        logged = [r for r in server.log.recent()
+                  if r["event"] == "serve.slo.breach"]
+        assert logged and logged[0]["objective"] == "shed_rate"
+
+    def test_worker_error_dumps_flight_with_history(self, flight,
+                                                    edge_program, frame,
+                                                    tmp_path):
+        """An injected WorkerError auto-produces a triggered dump that
+        retains spans from before the failure."""
+        calls = []
+
+        def execute(program, device, frames, bucket, default):
+            calls.append(bucket)
+            if len(calls) >= 2:
+                raise ValueError("injected device fault")
+            return default()
+
+        server = serve.Server(serve.ServeConfig(
+            max_batch=2, max_wait_ms=0.0, flight_dump_dir=str(tmp_path)),
+            hooks=serve.Hooks(execute=execute))
+        server.register("edge", edge_program, REFERENCE)
+        server.start()
+        try:
+            ok = server.submit("edge", frame)
+            assert ok.result(timeout=120).shape == (1, 16, 16, 1)
+            failed = server.submit("edge", frame)
+            with pytest.raises(serve.WorkerError, match="injected"):
+                failed.result(timeout=120)
+        finally:
+            server.stop()
+        stats = server.stats()
+        assert stats["flight"]["last_reason"] == "worker_error:edge"
+        assert stats["programs"]["edge"]["requests"]["failed"] == 1
+        dumps = server.flight_dumps()
+        assert len(dumps) == 1
+        check_trace = _load_script("check_trace")
+        assert check_trace.flight_check(dumps[0]["path"],
+                                        require_trigger=True) == []
+        # pre-trigger history: the first (successful) request's spans
+        events = json.loads(Path(dumps[0]["path"]).read_text())["traceEvents"]
+        trigger_ts = min(e["ts"] for e in events
+                         if e.get("name") == "flight.trigger")
+        pre = [e for e in events if e["ph"] == "X"
+               and e["ts"] + e.get("dur", 0.0) <= trigger_ts
+               and e["name"].startswith("serve.request.")]
+        assert pre, "no serving spans from before the worker failure"
+        assert any(r["event"] == "serve.worker.failure"
+                   for r in server.log.recent())
+
+    def test_dump_rate_limit_suppresses_and_counts(self, flight,
+                                                   edge_program):
+        clk = serve.VirtualClock()
+        server = serve.Server(serve.ServeConfig(
+            flight_dump_interval_s=30.0), clock=clk)
+        server.register("edge", edge_program, REFERENCE)
+        assert server._flight_dump("first") is not None
+        assert server._flight_dump("too_soon") is None
+        clk.advance(31.0)
+        assert server._flight_dump("after_interval") is not None
+        st_flight = server.stats()["flight"]
+        assert st_flight["dumps"] == 2
+        assert st_flight["suppressed"] == 1
+        assert [d["reason"] for d in server.flight_dumps()] == \
+            ["first", "after_interval"]
+
+    def test_stop_timeout_stranding_triggers_dump(self, flight, edge_program,
+                                                  frame):
+        gate = threading.Event()
+        entered = threading.Event()
+
+        def execute(program, device, frames, bucket, default):
+            entered.set()
+            assert gate.wait(30)
+            return default()
+
+        server = serve.Server(serve.ServeConfig(max_batch=4, max_wait_ms=0.0),
+                              hooks=serve.Hooks(execute=execute))
+        server.register("edge", edge_program, REFERENCE)
+        server.start()
+        try:
+            fut = server.submit("edge", frame)
+            assert entered.wait(30)
+            server.stop(drain=False, timeout=0.2)
+            with pytest.raises(serve.ServerClosed):
+                fut.result(timeout=30)
+            assert server.stats()["flight"]["last_reason"] == "stop_timeout"
+            assert len(server.flight_dumps()) == 1
+        finally:
+            gate.set()
+
+    def test_healthz_flips_when_pool_loses_worker(self, flight, edge_program,
+                                                  frame):
+        """A worker killed outside the Exception fault model (BaseException
+        from the execute seam) must flip health() — and /healthz — to
+        unhealthy while the process keeps running."""
+
+        class KillWorker(BaseException):
+            pass
+
+        armed = threading.Event()
+
+        def execute(program, device, frames, bucket, default):
+            if armed.is_set():
+                raise KillWorker()
+            return default()
+
+        server = serve.Server(serve.ServeConfig(
+            max_batch=2, max_wait_ms=0.0, admin_port=0),
+            hooks=serve.Hooks(execute=execute))
+        server.register("edge", edge_program, REFERENCE)
+        prev_hook = threading.excepthook
+        threading.excepthook = lambda a: None     # silence the worker death
+        try:
+            server.start()
+            url = server.admin.url
+            assert server.health()["healthy"]
+            _get(url + "/healthz", expect=200)
+            armed.set()
+            server.submit("edge", frame)          # kills the only worker
+            deadline = 30.0
+            import time
+            t0 = time.monotonic()
+            while server._pool.healthy():
+                assert time.monotonic() - t0 < deadline
+                time.sleep(0.01)
+            h = server.health()
+            assert not h["healthy"]
+            assert h["checks"]["pool_workers"] == 0
+            body = json.loads(_get(url + "/healthz", expect=503))
+            assert body["healthy"] is False
+            _get(url + "/readyz", expect=503)
+        finally:
+            threading.excepthook = prev_hook
+            server.stop(drain=False, timeout=1.0)
+
+
+# ---------------------------------------------------------------------------
+# Ops endpoint
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def admin_server(flight, edge_program, tmp_path):
+    server = serve.Server(serve.ServeConfig(
+        max_batch=4, admin_port=0,
+        log_path=str(tmp_path / "serve.jsonl")))
+    server.register("edge", edge_program, REFERENCE,
+                    slo=obs.SLO(p99_ms=60_000.0))
+    # a second hosted program that never sees traffic: its latency
+    # summary must stay {"count": 0} end-to-end through /statusz
+    server.register("idle", repro.Program.from_pipeline("sharpen", 16, 16, 3),
+                    REFERENCE)
+    server.start()
+    try:
+        yield server
+    finally:
+        server.stop()
+
+
+class TestAdminEndpoint:
+    def test_all_routes(self, admin_server, frame):
+        url = admin_server.admin.url
+        out = admin_server.submit("edge", frame).result(timeout=120)
+        assert out.shape == (1, 16, 16, 1)
+
+        health = json.loads(_get(url + "/healthz"))
+        assert health["healthy"] and health["checks"]["pool_workers"] == 1
+        ready = json.loads(_get(url + "/readyz"))
+        assert ready["ready"] and ready["checks"]["warmed"]
+
+        metrics = _get(url + "/metrics").decode()
+        assert "# HELP serve_edge_served repro metric 'serve.edge.served'" \
+            in metrics
+        assert "# TYPE serve_edge_served counter" in metrics
+        assert "serve_edge_served 1" in metrics
+        assert "serve_pool_device0_batches" in metrics
+
+        status = json.loads(_get(url + "/statusz"))
+        assert status["programs"]["edge"]["requests"]["served"] == 1
+        assert status["programs"]["edge"]["slo"]["objectives"]["p99_ms"][
+            "limit"] == 60_000.0
+        assert "fused_segments" in status["programs"]["edge"]
+        assert "plan_cache" in status
+        # the never-trafficked program keeps the empty-window shape
+        assert status["programs"]["idle"]["latency_ms"] == {"count": 0}
+        assert status["programs"]["idle"]["requests"]["served"] == 0
+        assert any(r["event"] == "serve.start"
+                   for r in status["log_tail"])
+
+        text = _get(url + "/statusz?format=text").decode()
+        assert "edge" in text
+
+        dump = json.loads(_get(url + "/tracez"))
+        assert dump["otherData"]["reason"] == "tracez"
+        assert any(e.get("name") == "serve.request.device"
+                   for e in dump["traceEvents"])
+
+        _get(url + "/nonsense", expect=404)
+
+    def test_tracez_503_without_recorder(self, admin_server):
+        url = admin_server.admin.url
+        prev = obs.uninstall()
+        try:
+            body = json.loads(_get(url + "/tracez", expect=503))
+            assert "no flight recorder" in body["error"]
+        finally:
+            obs.install(prev)
+
+    def test_structured_log_file_written(self, admin_server, frame,
+                                         tmp_path):
+        admin_server.submit("edge", frame).result(timeout=120)
+        lines = (tmp_path / "serve.jsonl").read_text().splitlines()
+        recs = [json.loads(ln) for ln in lines]
+        assert any(r["event"] == "serve.start" for r in recs)
+        assert all({"ts", "mono_s", "level", "event"} <= set(r)
+                   for r in recs)
+
+    def test_admin_port_conflict_raises(self, admin_server, edge_program):
+        taken = admin_server.admin.port
+        clash = serve.Server(serve.ServeConfig(admin_port=taken))
+        clash.register("edge", edge_program, REFERENCE)
+        with pytest.raises(OSError):
+            clash.start()
